@@ -1,0 +1,76 @@
+"""Beyond-paper benchmarks: the TPU-native batched query path and the
+Pallas kernels (timed via their XLA reference semantics on CPU; interpret
+mode executes kernel bodies in Python and is not a timing proxy)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.device import batch_query, snapshot_from_host
+from repro.kernels import ops
+
+from .common import Csv, build_glin, dataset, scale_n, timeit, windows
+
+
+def device_batch_query(csv: Csv, n: int) -> None:
+    name = "cluster"
+    g = build_glin(name, n, pl=10000)
+    s = snapshot_from_host(g)
+    gs = g.gs
+    verts = jnp.asarray(gs.verts.astype(np.float32))
+    nv = jnp.asarray(gs.nverts)
+    kd = jnp.asarray(gs.kinds.astype(np.int32))
+    mb = jnp.asarray(gs.mbrs.astype(np.float32))
+    for q in (64, 512):
+        wins = np.concatenate([windows(name, n, 0.0001, k=20)] * (q // 20 + 1))[:q]
+        wj = jnp.asarray(wins.astype(np.float32))
+        fn = lambda: batch_query(s, wj, verts, nv, kd, mb,
+                                 relation="intersects", cap=2048)[1].block_until_ready()
+        fn()  # compile
+        t = timeit(fn, repeats=3)
+        # host loop comparison
+        t_host = timeit(lambda: [g.query(w, "intersects") for w in wins[:32]],
+                        repeats=2) / 32 * q
+        csv.emit(f"device/batch_query_us/Q={q}", t,
+                 f"per_query={t/q:.1f}us;host_loop={t_host:.0f}us;speedup=x{t_host/t:.1f}")
+
+
+def kernels(csv: Csv) -> None:
+    rng = np.random.default_rng(0)
+    # morton (XLA path)
+    qx = jnp.asarray(rng.integers(0, 2**30, 1 << 20), jnp.int32)
+    qy = jnp.asarray(rng.integers(0, 2**30, 1 << 20), jnp.int32)
+    f = lambda: ops.morton_encode(qx, qy, use_pallas=False)[0].block_until_ready()
+    f()
+    csv.emit("kernels/morton_1M_us", timeit(f), "XLA path; pallas=TPU target")
+    # refine count
+    wins = jnp.asarray(rng.uniform(0, 1, (64, 4)).astype(np.float32))
+    mbrs = jnp.asarray(rng.uniform(0, 1, (1 << 17, 4)).astype(np.float32))
+    bounds = jnp.zeros((64, 2), jnp.int32).at[:, 1].set(1 << 17)
+    f = lambda: ops.refine_count(wins, bounds, mbrs,
+                                 use_pallas=False).block_until_ready()
+    f()
+    csv.emit("kernels/refine_64x131k_us", timeit(f), "XLA path")
+    # flash attention vs reference (XLA timing)
+    q = jnp.asarray(rng.normal(0, 1, (1, 8, 1024, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 1024, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 1024, 64)), jnp.float32)
+    f = lambda: ops.flash_attention(q, k, v, use_pallas=False).block_until_ready()
+    f()
+    csv.emit("kernels/attention_1k_us", timeit(f), "XLA ref; pallas=TPU target")
+    # ssd chunked
+    x = jnp.asarray(rng.normal(0, 1, (1, 1024, 8, 64)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (1, 1024, 8)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.1, 1, 8), jnp.float32)
+    bm = jnp.asarray(rng.normal(0, 1, (1, 1024, 64)), jnp.float32)
+    cm = jnp.asarray(rng.normal(0, 1, (1, 1024, 64)), jnp.float32)
+    from repro.models.ssm import ssd_chunked
+    f = lambda: ssd_chunked(x, dt, a, bm, cm, 128)[0].block_until_ready()
+    f()
+    csv.emit("kernels/ssd_1k_us", timeit(f), "XLA chunked path")
+
+
+def run(csv: Csv, large: bool = False) -> None:
+    device_batch_query(csv, min(scale_n(large), 200_000))
+    kernels(csv)

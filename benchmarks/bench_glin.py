@@ -1,0 +1,273 @@
+"""GLIN benchmarks mapped 1:1 onto the paper's tables/figures.
+
+run(csv, large):
+  tab5_fig6_fig7   piece_limitation sweep: PW size / probing / query time
+  tab6_fig8        index sizes + node counts vs R-Tree / Quad-Tree
+  fig9             initialization time (GLIN vs GLIN-piecewise vs trees)
+  fig10            index probing time per selectivity
+  fig11_12_14      query response time, Contains + Intersects
+  tab3_fig13       refinement checks with vs without leaf MBRs
+  fig15_16         insertion / deletion throughput
+  fig17            hybrid read-/write-intensive workloads
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import QuadTree, RTree, SortedArray
+from repro.core.index import GLIN, GLINConfig, QueryStats
+
+from .common import (DATASETS, SELECTIVITIES, Csv, build_glin, dataset,
+                     scale_n, timeit, windows)
+
+
+def _probe_only(g: GLIN, w, relation):
+    from repro.core.model import probe
+    from repro.core.zorder import mbr_to_zinterval_np
+    zmin_q, zmax_q = (int(v[0]) for v in
+                      mbr_to_zinterval_np(np.asarray(w)[None], g.gs.grid))
+    if relation == "intersects":
+        zmin_q = g.pw.augment(zmin_q)
+    return probe(g.root, zmin_q)
+
+
+def tab5_fig6_fig7(csv: Csv, n: int) -> None:
+    name = "cluster"
+    for pl in (100, 1000, 10000, 100000):
+        g = build_glin(name, n, pl=pl)
+        # use the paper-faithful Alg-2 scan for probing time (Fig 6) and the
+        # suffix-min fast path as the beyond-paper comparison
+        wins = windows(name, n, 0.001)
+        w0 = wins[0]
+        t_scan = timeit(lambda: g.pw.augment_scan(10**15), repeats=3, number=200)
+        t_fast = timeit(lambda: g.pw.augment(10**15), repeats=3, number=200)
+        t_probe = timeit(lambda: _probe_only(g, w0, "intersects"),
+                         repeats=3, number=50)
+        t_query = timeit(lambda: g.query(w0, "intersects"), repeats=3, number=5)
+        csv.emit(f"tab5/pw_size_bytes/PL={pl}", g.pw.nbytes(),
+                 f"pieces={g.pw.num_pieces}")
+        csv.emit(f"fig6/probe_us/PL={pl}", t_probe,
+                 f"aug_scan_us={t_scan:.2f};aug_sufmin_us={t_fast:.2f}")
+        csv.emit(f"fig7/query_us/PL={pl}", t_query, "intersects sel=0.1%")
+
+
+def tab6_fig8(csv: Csv, n: int) -> None:
+    for name in DATASETS:
+        g = build_glin(name, n)
+        rt = RTree.build(dataset(name, n))
+        qt = QuadTree.build(dataset(name, n))
+        gs_ = g.stats()
+        csv.emit(f"fig8/glin_bytes/{name}", gs_["total_index_bytes"],
+                 f"nodes={gs_['nodes']}")
+        csv.emit(f"fig8/rtree_bytes/{name}", rt.stats()["index_bytes"],
+                 f"nodes={rt.stats()['nodes']};x{rt.stats()['index_bytes']/gs_['total_index_bytes']:.1f}")
+        csv.emit(f"fig8/quadtree_bytes/{name}", qt.stats()["index_bytes"],
+                 f"nodes={qt.stats()['nodes']};x{qt.stats()['index_bytes']/gs_['total_index_bytes']:.1f}")
+
+
+def fig9(csv: Csv, n: int) -> None:
+    name = "cluster"
+    gs = dataset(name, n)
+    t_glin = timeit(lambda: GLIN.build(gs, GLINConfig(enable_piecewise=False)),
+                    repeats=2)
+    t_glin_pw = timeit(lambda: GLIN.build(gs, GLINConfig()), repeats=2)
+    t_rt = timeit(lambda: RTree.build(gs), repeats=2)
+    t_qt = timeit(lambda: QuadTree.build(gs), repeats=1)
+    csv.emit("fig9/init_us/glin", t_glin, "")
+    csv.emit("fig9/init_us/glin_piecewise", t_glin_pw,
+             f"overhead={100*(t_glin_pw/t_glin-1):.0f}%")
+    csv.emit("fig9/init_us/rtree", t_rt, "")
+    csv.emit("fig9/init_us/quadtree", t_qt, "")
+
+
+def fig10(csv: Csv, n: int) -> None:
+    name = "cluster"
+    g = build_glin(name, n)
+    rt = RTree.build(dataset(name, n))
+    qt = QuadTree.build(dataset(name, n))
+    for sel in SELECTIVITIES:
+        wins = windows(name, n, sel, k=8)
+        t_g = timeit(lambda: [_probe_only(g, w, "contains") for w in wins]) / len(wins)
+        st = QueryStats()
+        t_rt = timeit(lambda: [rt.probe(w, st) for w in wins]) / len(wins)
+        t_qt = timeit(lambda: [qt.probe(w, st) for w in wins]) / len(wins)
+        csv.emit(f"fig10/probing_us/glin/sel={sel}", t_g, "")
+        csv.emit(f"fig10/probing_us/rtree/sel={sel}", t_rt,
+                 f"x{t_rt/max(t_g,1e-9):.1f} vs glin")
+        csv.emit(f"fig10/probing_us/quadtree/sel={sel}", t_qt,
+                 f"x{t_qt/max(t_g,1e-9):.1f} vs glin")
+
+
+def fig11_12_14(csv: Csv, n: int) -> None:
+    for name in ("cluster", "uniform"):
+        g = build_glin(name, n)
+        rt = RTree.build(dataset(name, n))
+        qt = QuadTree.build(dataset(name, n))
+        for relation, fig in (("contains", "fig11"), ("intersects", "fig12")):
+            for sel in SELECTIVITIES:
+                wins = windows(name, n, sel, k=8)
+                for label, idx in (("glin", g), ("rtree", rt), ("quadtree", qt)):
+                    t = timeit(lambda: [idx.query(w, relation) for w in wins],
+                               repeats=2) / len(wins)
+                    csv.emit(f"{fig}/query_us/{label}/{name}/sel={sel}", t,
+                             relation)
+
+
+def tab3_fig13(csv: Csv, n: int) -> None:
+    for name in ("cluster", "roads"):
+        g = build_glin(name, n)
+        for sel in SELECTIVITIES:
+            wins = windows(name, n, sel, k=8)
+            cand = checked = 0
+            for w in wins:
+                st = QueryStats()
+                g.query(w, "contains", st)
+                cand += st.candidates
+                checked += st.checked
+            csv.emit(f"tab3/refine_checked/{name}/sel={sel}", checked / len(wins),
+                     f"wo_leaf_mbr={cand/len(wins):.0f};reduction=x{cand/max(checked,1):.1f}")
+
+
+def fig15_16(csv: Csv, n: int) -> None:
+    name = "cluster"
+    gs = dataset(name, n)
+    half = n // 2
+    import copy
+
+    def insert_throughput(build_fn, insert_fn, label):
+        idx = build_fn(np.arange(half))
+        t0 = time.perf_counter()
+        count = min(20000, half)
+        for rec in range(half, half + count):
+            insert_fn(idx, rec)
+        dt = time.perf_counter() - t0
+        csv.emit(f"fig15/insert_per_s/{label}", 1e6 * dt / count,
+                 f"{count/dt:.0f}/s")
+        return idx
+
+    # GLIN and GLIN-piecewise
+    for label, pw in (("glin", False), ("glin_piecewise", True)):
+        sub = gs.take(np.arange(half))
+        sub = copy.deepcopy(sub)
+        g = GLIN.build(sub, GLINConfig(enable_piecewise=pw))
+        t0 = time.perf_counter()
+        count = min(20000, half)
+        for rec in range(half, half + count):
+            g.insert(gs.verts[rec], int(gs.nverts[rec]), int(gs.kinds[rec]))
+        dt = time.perf_counter() - t0
+        csv.emit(f"fig15/insert_per_s/{label}", 1e6 * dt / count, f"{count/dt:.0f}/s")
+
+    rt = RTree.build(gs.take(np.arange(half)))
+    t0 = time.perf_counter()
+    count = min(20000, half)
+    for rec in range(count):
+        rt.insert(rec)  # ids are local to the subset store
+    dt = time.perf_counter() - t0
+    csv.emit("fig15/insert_per_s/rtree", 1e6 * dt / count, f"{count/dt:.0f}/s")
+
+    qt = QuadTree.build(gs.take(np.arange(half)))
+    t0 = time.perf_counter()
+    for rec in range(count):
+        qt.insert(rec)
+    dt = time.perf_counter() - t0
+    csv.emit("fig15/insert_per_s/quadtree", 1e6 * dt / count, f"{count/dt:.0f}/s")
+
+    # deletion (Fig 16)
+    rng = np.random.default_rng(0)
+    dels = rng.choice(half, min(20000, half // 2), replace=False)
+    g = GLIN.build(copy.deepcopy(gs.take(np.arange(half))), GLINConfig())
+    t0 = time.perf_counter()
+    for d in dels:
+        g.delete(int(d))
+    dt = time.perf_counter() - t0
+    csv.emit("fig16/delete_per_s/glin_piecewise", 1e6 * dt / len(dels),
+             f"{len(dels)/dt:.0f}/s")
+    rt = RTree.build(gs.take(np.arange(half)))
+    t0 = time.perf_counter()
+    for d in dels:
+        rt.delete(int(d))
+    dt = time.perf_counter() - t0
+    csv.emit("fig16/delete_per_s/rtree", 1e6 * dt / len(dels),
+             f"{len(dels)/dt:.0f}/s")
+    qt = QuadTree.build(gs.take(np.arange(half)))
+    t0 = time.perf_counter()
+    for d in dels:
+        qt.delete(int(d))
+    dt = time.perf_counter() - t0
+    csv.emit("fig16/delete_per_s/quadtree", 1e6 * dt / len(dels),
+             f"{len(dels)/dt:.0f}/s")
+
+
+def fig17(csv: Csv, n: int) -> None:
+    import copy
+    name = "cluster"
+    gs = dataset(name, n)
+    half = n // 2
+    wins = windows(name, n, 0.01, k=8)
+    for label, write_frac in (("read_intensive", 0.1), ("write_intensive", 0.5)):
+        for idx_label in ("glin_piecewise", "rtree"):
+            sub = copy.deepcopy(gs.take(np.arange(half)))
+            if idx_label == "glin_piecewise":
+                idx = GLIN.build(sub, GLINConfig())
+                ins = lambda rec: idx.insert(gs.verts[rec], int(gs.nverts[rec]),
+                                             int(gs.kinds[rec]))
+            else:
+                idx = RTree.build(gs.take(np.arange(half)))
+                ins = lambda rec: idx.insert(rec % half)
+            rng = np.random.default_rng(1)
+            nxt = half
+            t0 = time.perf_counter()
+            tx = 0
+            while tx < 400 and nxt < n:
+                if rng.random() < write_frac:
+                    # one "insertion transaction" = 0.1% of n new records
+                    for _ in range(max(1, n // 1000)):
+                        if nxt >= n:
+                            break
+                        ins(nxt)
+                        nxt += 1
+                else:
+                    idx.query(wins[tx % len(wins)], "intersects")
+                tx += 1
+            dt = time.perf_counter() - t0
+            csv.emit(f"fig17/{label}/tx_per_s/{idx_label}", 1e6 * dt / tx,
+                     f"{tx/dt:.1f} tx/s")
+
+
+def run(csv: Csv, large: bool = False) -> None:
+    n = scale_n(large)
+    tab5_fig6_fig7(csv, n)
+    tab6_fig8(csv, n)
+    fig9(csv, n)
+    fig10(csv, n)
+    fig11_12_14(csv, n)
+    tab3_fig13(csv, n)
+    fig15_16(csv, min(n, 200_000))
+    fig17(csv, min(n, 120_000))
+    ablation_learned_vs_binary(csv, n)
+
+
+def ablation_learned_vs_binary(csv: Csv, n: int) -> None:
+    """Ablation (beyond paper): the learned model's probing benefit vs plain
+    binary search over the same Zmin-sorted array (SortedArray baseline)."""
+    name = "cluster"
+    g = build_glin(name, n)
+    sa = SortedArray.build(dataset(name, n))
+    wins = windows(name, n, 0.001, k=16)
+    t_model = timeit(lambda: [_probe_only(g, w, "contains") for w in wins]) / len(wins)
+    import numpy as _np
+    from repro.core.zorder import mbr_to_zinterval_np as _z
+
+    def _sa_probe():
+        for w in wins:
+            zmin_q, zmax_q = (int(v[0]) for v in _z(_np.asarray(w)[None],
+                                                    sa.gs.grid))
+            _np.searchsorted(sa.keys, zmin_q)
+            _np.searchsorted(sa.keys, zmax_q, side="right")
+
+    t_binary = timeit(_sa_probe) / len(wins)
+    csv.emit("ablation/probe_us/learned_model", t_model, "")
+    csv.emit("ablation/probe_us/binary_search", t_binary,
+             f"model_speedup=x{t_binary/max(t_model,1e-9):.2f}")

@@ -1,0 +1,84 @@
+"""Render the roofline table from dry-run artifacts (EXPERIMENTS.md source).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def fmt(v, digits=3):
+    return f"{v:.{digits}g}" if isinstance(v, (int, float)) else str(v)
+
+
+def rows(mesh="single"):
+    out = []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        name = f"{r['arch']}/{r['shape']}"
+        if r["status"] == "skip":
+            out.append((name, "SKIP", r.get("reason", "")))
+            continue
+        if r["status"] != "ok":
+            out.append((name, "FAIL", r.get("error", "")[:80]))
+            continue
+        ro = r["roofline"]
+        h = r["hlo_cost"]
+        mem = r["memory"].get("total_bytes_per_device", 0) / 2**30
+        out.append((
+            name, "ok",
+            f"compute={ro['compute_s']:.4g}s memory={ro['memory_s']:.4g}s "
+            f"coll={ro['collective_s']:.4g}s dom={ro['dominant']} "
+            f"frac={ro['compute_fraction']:.3f} "
+            f"useful={fmt(r.get('useful_flops_ratio'))} mem/dev={mem:.2f}GiB"))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    if args.markdown:
+        print(markdown(args.mesh))
+        return
+    for name, status, detail in rows(args.mesh):
+        print(f"{name:42s} {status:5s} {detail}")
+
+
+def markdown(mesh="single"):
+    """Markdown table for EXPERIMENTS.md §Roofline."""
+    lines = [
+        f"| arch/shape ({mesh}-pod) | compute_s | memory_s | coll_s | dominant "
+        "| MODEL/HLO flops | mem/dev GiB | note |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        name = f"{r['arch']}/{r['shape']}"
+        if r["status"] == "skip":
+            lines.append(f"| {name} | — | — | — | SKIP | — | — | "
+                         f"{r.get('reason','')[:60]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {name} | — | — | — | FAIL | — | — | "
+                         f"{r.get('error','')[:60]} |")
+            continue
+        ro = r["roofline"]
+        mem = r["memory"].get("total_bytes_per_device", 0) / 2**30
+        ur = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {name} | {ro['compute_s']:.3g} | {ro['memory_s']:.3g} | "
+            f"{ro['collective_s']:.3g} | {ro['dominant']} | "
+            f"{ur:.3f} | {mem:.2f} | |" if ur is not None else
+            f"| {name} | {ro['compute_s']:.3g} | {ro['memory_s']:.3g} | "
+            f"{ro['collective_s']:.3g} | {ro['dominant']} | — | {mem:.2f} | |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    main()

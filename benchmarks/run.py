@@ -1,0 +1,35 @@
+"""Benchmark orchestrator. One function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see common.Csv). GLIN benchmarks
+mirror the paper's experiment suite (§IX); device/kernel benchmarks cover the
+beyond-paper TPU-native path. Roofline artifacts are produced separately by
+launch/dryrun.py and rendered by benchmarks/roofline_report.py.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--large", action="store_true",
+                    help="paper-scale datasets (slow on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: glin,device")
+    args = ap.parse_args()
+
+    from .common import Csv
+    csv = Csv()
+    which = set((args.only or "glin,device").split(","))
+    print("name,us_per_call,derived")
+    if "glin" in which:
+        from . import bench_glin
+        bench_glin.run(csv, large=args.large)
+    if "device" in which:
+        from . import bench_device
+        bench_device.run(csv, large=args.large)
+    print(f"# {len(csv.rows)} measurements")
+
+
+if __name__ == "__main__":
+    main()

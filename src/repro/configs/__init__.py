@@ -1,0 +1,6 @@
+"""Config registry: one module per assigned architecture + GLIN itself."""
+from .base import (ARCH_IDS, SHAPES, ArchConfig, ShapeConfig, all_cells,
+                   get_arch, get_shape)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "ShapeConfig", "all_cells",
+           "get_arch", "get_shape"]

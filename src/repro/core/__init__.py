@@ -1,0 +1,14 @@
+"""GLIN core — the paper's contribution (learned index for complex geometries)."""
+from .datasets import GeometrySet, generate, make_query_windows
+from .index import GLIN, GLINConfig, QueryStats
+from .model import GLINModelConfig
+from .piecewise import PiecewiseFunction
+from .device import GLINSnapshot, snapshot_from_host, batch_query
+from .delta import SnapshotManager
+
+__all__ = [
+    "GeometrySet", "generate", "make_query_windows",
+    "GLIN", "GLINConfig", "QueryStats", "GLINModelConfig",
+    "PiecewiseFunction", "GLINSnapshot", "snapshot_from_host", "batch_query",
+    "SnapshotManager",
+]

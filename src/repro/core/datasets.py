@@ -1,0 +1,163 @@
+"""Synthetic geometry datasets standing in for the paper's Table IV corpora.
+
+Real TIGER / OSM extracts are not available offline; these generators emulate
+the distributions the paper evaluates:
+
+* ``uniform``   — SpiderWeb UNIF_S/UNIF_L: polygons uniform over the domain.
+* ``diagonal``  — SpiderWeb DIAG_S/DIAG_L: polygons hugging the main diagonal.
+* ``cluster``   — OSM-points / PARKS style: Gaussian metro clusters.
+* ``roads``     — TIGER ROADS / LINEARWATER style: long, thin, anisotropic
+                  polylines.
+* ``points``    — OSM_Points: degenerate single-vertex geometries.
+
+Every generator is deterministic in its seed and returns a
+:class:`GeometrySet` with padded vertex rings (see core.geometry).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from .geometry import GeomKind, mbrs_of_verts
+from .zorder import ZGrid, UNIT
+
+__all__ = ["GeometrySet", "generate", "make_query_windows", "DATASETS"]
+
+
+@dataclasses.dataclass
+class GeometrySet:
+    """A batch of geometries in struct-of-arrays layout."""
+
+    verts: np.ndarray   # (N, V, 2) float64, padded with last valid vertex
+    nverts: np.ndarray  # (N,) int32
+    kinds: np.ndarray   # (N,) int8 (GeomKind)
+    mbrs: np.ndarray    # (N, 4) float64 [xmin, ymin, xmax, ymax]
+    grid: ZGrid
+    name: str = "synthetic"
+
+    def __len__(self) -> int:
+        return self.verts.shape[0]
+
+    def take(self, idx: np.ndarray) -> "GeometrySet":
+        return GeometrySet(
+            verts=self.verts[idx],
+            nverts=self.nverts[idx],
+            kinds=self.kinds[idx],
+            mbrs=self.mbrs[idx],
+            grid=self.grid,
+            name=self.name,
+        )
+
+    def nbytes(self) -> int:
+        return self.verts.nbytes + self.nverts.nbytes + self.kinds.nbytes + self.mbrs.nbytes
+
+
+def _convex_polygons(rng: np.random.Generator, centers: np.ndarray, sizes: np.ndarray,
+                     max_verts: int) -> Dict[str, np.ndarray]:
+    """Random convex polygons: sorted random angles on a jittered radius."""
+    n = centers.shape[0]
+    nverts = rng.integers(3, max_verts + 1, size=n).astype(np.int32)
+    angles = np.sort(rng.uniform(0.0, 2 * np.pi, size=(n, max_verts)), axis=1)
+    radii = sizes[:, None] * rng.uniform(0.5, 1.0, size=(n, max_verts))
+    vx = centers[:, 0:1] + radii * np.cos(angles)
+    vy = centers[:, 1:2] + radii * np.sin(angles)
+    verts = np.stack([vx, vy], axis=-1)
+    # Pad: repeat the (nv-1)-th vertex beyond nv.
+    idx = np.minimum(np.arange(max_verts)[None, :], nverts[:, None] - 1)
+    verts = np.take_along_axis(verts, idx[:, :, None], axis=1)
+    return {"verts": verts, "nverts": nverts}
+
+
+def _polylines(rng: np.random.Generator, starts: np.ndarray, steps: np.ndarray,
+               max_verts: int, anisotropy: float) -> Dict[str, np.ndarray]:
+    """Random-walk polylines with a persistent heading (road-like)."""
+    n = starts.shape[0]
+    nverts = rng.integers(2, max_verts + 1, size=n).astype(np.int32)
+    heading = rng.uniform(0.0, 2 * np.pi, size=(n, 1))
+    wiggle = rng.normal(0.0, 0.25, size=(n, max_verts)).cumsum(axis=1)
+    theta = heading + wiggle
+    dx = np.cos(theta) * steps[:, None] * anisotropy
+    dy = np.sin(theta) * steps[:, None]
+    vx = starts[:, 0:1] + np.concatenate([np.zeros((n, 1)), dx[:, :-1].cumsum(axis=1)], axis=1)
+    vy = starts[:, 1:2] + np.concatenate([np.zeros((n, 1)), dy[:, :-1].cumsum(axis=1)], axis=1)
+    verts = np.stack([vx, vy], axis=-1)
+    idx = np.minimum(np.arange(max_verts)[None, :], nverts[:, None] - 1)
+    verts = np.take_along_axis(verts, idx[:, :, None], axis=1)
+    return {"verts": verts, "nverts": nverts}
+
+
+def generate(name: str, n: int, seed: int = 0, max_verts: int = 12,
+             grid: Optional[ZGrid] = None) -> GeometrySet:
+    """Build a synthetic dataset. Domain is the unit square."""
+    rng = np.random.default_rng(seed)
+    grid = grid or UNIT
+    kinds = np.full(n, int(GeomKind.POLYGON), np.int8)
+
+    if name == "uniform":
+        centers = rng.uniform(0.02, 0.98, size=(n, 2))
+        sizes = rng.uniform(1e-5, 4e-4, size=n)
+        parts = _convex_polygons(rng, centers, sizes, max_verts)
+    elif name == "diagonal":
+        t = rng.uniform(0.02, 0.98, size=n)
+        off = rng.normal(0.0, 0.01, size=(n, 2))
+        centers = np.clip(np.stack([t, t], axis=1) + off, 0.001, 0.999)
+        sizes = rng.uniform(1e-5, 4e-4, size=n)
+        parts = _convex_polygons(rng, centers, sizes, max_verts)
+    elif name == "cluster":
+        k = 32
+        mus = rng.uniform(0.05, 0.95, size=(k, 2))
+        sig = rng.uniform(0.004, 0.03, size=k)
+        comp = rng.integers(0, k, size=n)
+        centers = np.clip(mus[comp] + rng.normal(0, 1, (n, 2)) * sig[comp][:, None], 0.001, 0.999)
+        sizes = rng.uniform(1e-5, 3e-4, size=n)
+        parts = _convex_polygons(rng, centers, sizes, max_verts)
+    elif name == "roads":
+        starts = rng.uniform(0.02, 0.98, size=(n, 2))
+        steps = rng.uniform(2e-5, 2e-4, size=n)
+        parts = _polylines(rng, starts, steps, max_verts, anisotropy=3.0)
+        kinds = np.full(n, int(GeomKind.POLYLINE), np.int8)
+    elif name == "points":
+        centers = rng.uniform(0.0, 1.0, size=(n, 2))
+        verts = np.repeat(centers[:, None, :], max_verts, axis=1)
+        parts = {"verts": verts, "nverts": np.ones(n, np.int32)}
+    else:
+        raise ValueError(f"unknown dataset {name!r}")
+
+    verts = np.clip(parts["verts"], 0.0, 1.0 - 1e-12)
+    mbrs = mbrs_of_verts(verts, parts["nverts"])
+    return GeometrySet(verts=verts, nverts=parts["nverts"], kinds=kinds,
+                       mbrs=mbrs, grid=grid, name=name)
+
+
+# Named dataset registry mirroring Table IV (cardinalities scaled to CPU).
+DATASETS = {
+    "UNIF_S": ("uniform", 1),
+    "DIAG_S": ("diagonal", 1),
+    "CLUSTER": ("cluster", 2),
+    "ROADS": ("roads", 3),
+    "POINTS": ("points", 4),
+}
+
+
+def make_query_windows(gs: GeometrySet, selectivity: float, num_windows: int,
+                       seed: int = 0) -> np.ndarray:
+    """Selectivity-matched query windows, following the paper's §IX-A recipe:
+    pick a random geometry, take the K = selectivity * N nearest geometries
+    (by MBR-centre distance), and use the MBR of that result set.
+    Returns (num_windows, 4).
+    """
+    rng = np.random.default_rng(seed + 7)
+    n = len(gs)
+    k = max(1, int(round(selectivity * n)))
+    cx = (gs.mbrs[:, 0] + gs.mbrs[:, 2]) * 0.5
+    cy = (gs.mbrs[:, 1] + gs.mbrs[:, 3]) * 0.5
+    windows = np.empty((num_windows, 4), np.float64)
+    anchors = rng.integers(0, n, size=num_windows)
+    for i, a in enumerate(anchors):
+        d = np.maximum(np.abs(cx - cx[a]), np.abs(cy - cy[a]))  # Chebyshev
+        nearest = np.argpartition(d, k - 1)[:k]
+        m = gs.mbrs[nearest]
+        windows[i] = (m[:, 0].min(), m[:, 1].min(), m[:, 2].max(), m[:, 3].max())
+    return windows

@@ -1,0 +1,405 @@
+"""Device-resident GLIN: flattened snapshot + jitted batch query path.
+
+This is the TPU-native half of the adaptation (DESIGN.md §2): the host tree is
+flattened into struct-of-arrays form and thousands of query windows are probed
+*simultaneously* with pure array ops:
+
+* model traversal  — bounded ``fori_loop`` of gathers over the flattened node
+  table (equal-width routing in re-centred fp32; exactness restored by a ±2
+  leaf fix-up against integer leaf-domain boundaries);
+* leaf search      — fp32 linear model prediction + fixed-trip binary search
+  whose window is the *device-side* max model error (recomputed in fp32 at
+  snapshot time so the fp64→fp32 drop can never shrink the window);
+* refinement       — fixed-capacity candidate tiles: leaf-MBR skip, record-MBR
+  mask and exact-shape checks as masked vector ops.
+
+Z-addresses are (hi, lo) int32 limb pairs throughout — no 64-bit integers.
+Every public function is shape-polymorphic in the query batch and jittable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import geometry as geom
+from .model import InternalNode, LeafNode
+from .zorder import (LO_LIMB_SIZE, hilo_to_float32, mbr_to_zinterval_hilo,
+                     split_hilo_np, z_leq_hilo, z_less_hilo)
+
+__all__ = ["GLINSnapshot", "snapshot_from_host", "batch_probe",
+           "batch_query_bounds", "batch_query", "input_specs_like"]
+
+_I32 = jnp.int32
+_INF_HI = np.int32(2**30)  # > any valid 30-bit limb
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GLINSnapshot:
+    """Flattened GLIN index as device arrays."""
+
+    # sorted record table
+    keys_hi: jax.Array      # (N,) int32
+    keys_lo: jax.Array      # (N,) int32
+    recs: jax.Array         # (N,) int32 record ids
+    rec_leaf: jax.Array     # (N,) int32 leaf id of each slot
+    # leaf tables (L leaves; +1 sentinel on boundaries)
+    leaf_start: jax.Array   # (L+1,) int32 slot offsets
+    leaf_dlo_hi: jax.Array  # (L+1,) int32 leaf domain lower bounds
+    leaf_dlo_lo: jax.Array  # (L+1,) int32
+    leaf_mbr: jax.Array     # (L, 4) float32 aggregate MBRs
+    leaf_k0_hi: jax.Array   # (L,) int32 model re-centring key
+    leaf_k0_lo: jax.Array   # (L,) int32
+    leaf_slope: jax.Array   # (L,) float32
+    leaf_icpt: jax.Array    # (L,) float32
+    # flattened internal nodes
+    node_dlo_hi: jax.Array  # (M,) int32
+    node_dlo_lo: jax.Array  # (M,) int32
+    node_scale: jax.Array   # (M,) float32  fanout / domain-width
+    node_fanout: jax.Array  # (M,) int32
+    node_child_base: jax.Array  # (M,) int32 into child_codes
+    child_codes: jax.Array  # (C,) int32  >=0: internal node id; <0: -(leaf+1)
+    # piecewise augmentation (suffix-min form)
+    pw_zmax_hi: jax.Array   # (P,) int32
+    pw_zmax_lo: jax.Array   # (P,) int32
+    pw_sufmin_hi: jax.Array  # (P,) int32
+    pw_sufmin_lo: jax.Array  # (P,) int32
+    # static meta
+    search_steps: int = dataclasses.field(metadata=dict(static=True))
+    depth: int = dataclasses.field(metadata=dict(static=True))
+    grid_x0: float = dataclasses.field(metadata=dict(static=True))
+    grid_y0: float = dataclasses.field(metadata=dict(static=True))
+    grid_cell: float = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_slots(self) -> int:
+        return self.keys_hi.shape[0]
+
+    @property
+    def num_leaves(self) -> int:
+        return self.leaf_mbr.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Host tree -> snapshot
+# ---------------------------------------------------------------------------
+def snapshot_from_host(glin) -> GLINSnapshot:
+    keys, recs, starts, mbrs = glin.all_leaf_arrays()
+    leaves = glin.leaves
+    L = len(leaves)
+
+    k_hi, k_lo = split_hilo_np(keys)
+    rec_leaf = np.repeat(np.arange(L, dtype=np.int32),
+                         np.diff(starts).astype(np.int64))
+
+    dlos = np.array([l.dlo for l in leaves] + [leaves[-1].dhi if L else 1],
+                    dtype=object)
+    dlo_hi = np.array([int(d) >> 30 for d in dlos], np.int64).astype(np.int32)
+    dlo_lo = np.array([int(d) & (LO_LIMB_SIZE - 1) for d in dlos], np.int32)
+
+    k0_hi, k0_lo = split_hilo_np(np.array([l.key0 for l in leaves], np.int64))
+    slope = np.array([l.slope for l in leaves], np.float32)
+    icpt = np.array([l.intercept for l in leaves], np.float32)
+
+    # Device-side max error: re-evaluate the fp32 model on every key so the
+    # binary-search window provably brackets the answer on device.
+    max_err = 1
+    key_f = ((k_hi - k0_hi[rec_leaf]).astype(np.float32) * np.float32(LO_LIMB_SIZE)
+             + (k_lo - k0_lo[rec_leaf]).astype(np.float32))
+    pred = np.rint(slope[rec_leaf] * key_f + icpt[rec_leaf]).astype(np.int64)
+    local = np.arange(keys.shape[0], dtype=np.int64) - starts[rec_leaf]
+    if keys.shape[0]:
+        max_err = max(1, int(np.max(np.abs(pred - local))))
+    search_steps = max(1, math.ceil(math.log2(2 * max_err + 4)))
+
+    # Flatten internal nodes (BFS). A leaf root is wrapped in a fanout-1 node.
+    internals = []
+    leaf_ids = {id(l): i for i, l in enumerate(leaves)}
+    root = glin.root
+    if isinstance(root, LeafNode):
+        wrapper = InternalNode(root.dlo, root.dhi, 1)
+        wrapper.children[0] = root
+        root = wrapper
+    order = [root]
+    index_of = {id(root): 0}
+    qi = 0
+    while qi < len(order):
+        node = order[qi]
+        qi += 1
+        for c in node.children:
+            if isinstance(c, InternalNode):
+                index_of[id(c)] = len(order)
+                order.append(c)
+    M = len(order)
+    n_dlo_hi = np.empty(M, np.int32)
+    n_dlo_lo = np.empty(M, np.int32)
+    n_scale = np.empty(M, np.float32)
+    n_fan = np.empty(M, np.int32)
+    n_base = np.empty(M, np.int32)
+    codes = []
+    depth = 1
+    for i, node in enumerate(order):
+        n_dlo_hi[i] = node.dlo >> 30
+        n_dlo_lo[i] = node.dlo & (LO_LIMB_SIZE - 1)
+        n_scale[i] = np.float32(node.fanout / float(node.dhi - node.dlo))
+        n_fan[i] = node.fanout
+        n_base[i] = len(codes)
+        for c in node.children:
+            if isinstance(c, InternalNode):
+                codes.append(index_of[id(c)])
+            else:
+                codes.append(-(leaf_ids[id(c)] + 1))
+    # tree depth for the fixed traversal trip count
+    def _depth(node, d):
+        nonlocal depth
+        depth = max(depth, d)
+        if isinstance(node, InternalNode):
+            for c in node.children:
+                _depth(c, d + 1)
+    _depth(root, 1)
+
+    # Piecewise function in suffix-min form.
+    if glin.pw is not None and glin.pw.num_pieces:
+        pw = glin.pw
+        sfx = np.minimum.accumulate(pw.min_zmin[::-1])[::-1]
+        pz_hi, pz_lo = split_hilo_np(pw.zmax_end)
+        ps_hi, ps_lo = split_hilo_np(sfx.astype(np.int64))
+    else:
+        pz_hi = pz_lo = ps_hi = ps_lo = np.empty(0, np.int32)
+
+    grid = glin.gs.grid
+    return GLINSnapshot(
+        keys_hi=jnp.asarray(k_hi), keys_lo=jnp.asarray(k_lo),
+        recs=jnp.asarray(recs.astype(np.int32)),
+        rec_leaf=jnp.asarray(rec_leaf),
+        leaf_start=jnp.asarray(starts.astype(np.int32)),
+        leaf_dlo_hi=jnp.asarray(dlo_hi), leaf_dlo_lo=jnp.asarray(dlo_lo),
+        leaf_mbr=jnp.asarray(mbrs.astype(np.float32)),
+        leaf_k0_hi=jnp.asarray(k0_hi), leaf_k0_lo=jnp.asarray(k0_lo),
+        leaf_slope=jnp.asarray(slope), leaf_icpt=jnp.asarray(icpt),
+        node_dlo_hi=jnp.asarray(n_dlo_hi), node_dlo_lo=jnp.asarray(n_dlo_lo),
+        node_scale=jnp.asarray(n_scale), node_fanout=jnp.asarray(n_fan),
+        node_child_base=jnp.asarray(n_base),
+        child_codes=jnp.asarray(np.asarray(codes, np.int32)),
+        pw_zmax_hi=jnp.asarray(pz_hi), pw_zmax_lo=jnp.asarray(pz_lo),
+        pw_sufmin_hi=jnp.asarray(ps_hi), pw_sufmin_lo=jnp.asarray(ps_lo),
+        search_steps=search_steps, depth=depth,
+        grid_x0=float(grid.x0), grid_y0=float(grid.y0),
+        grid_cell=float(grid.cell_size),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched probing
+# ---------------------------------------------------------------------------
+def _find_leaf(s: GLINSnapshot, q_hi: jax.Array, q_lo: jax.Array) -> jax.Array:
+    """Model traversal (Alg 1 model_traversal), batched: (Q,) -> leaf ids."""
+
+    def body(_, state):
+        node, leaf, done = state
+        dh = (q_hi - s.node_dlo_hi[node]).astype(jnp.float32)
+        dl = (q_lo - s.node_dlo_lo[node]).astype(jnp.float32)
+        key_f = dh * jnp.float32(LO_LIMB_SIZE) + dl
+        cell_f = jnp.clip(jnp.floor(key_f * s.node_scale[node]), 0.0,
+                          (s.node_fanout[node] - 1).astype(jnp.float32))
+        cell = cell_f.astype(_I32)
+        code = s.child_codes[s.node_child_base[node] + cell]
+        is_leaf = code < 0
+        new_leaf = jnp.where(is_leaf & ~done, -code - 1, leaf)
+        new_node = jnp.where(is_leaf | done, node, code)
+        return new_node, new_leaf, done | is_leaf
+
+    q = q_hi.shape[0]
+    node0 = jnp.zeros((q,), _I32)
+    leaf0 = jnp.zeros((q,), _I32)
+    done0 = jnp.zeros((q,), bool)
+    _, leaf, _ = jax.lax.fori_loop(0, s.depth, body, (node0, leaf0, done0))
+
+    # fp32 routing fix-up against exact integer leaf-domain boundaries.
+    for _ in range(2):
+        too_low = z_less_hilo(q_hi, q_lo, s.leaf_dlo_hi[leaf], s.leaf_dlo_lo[leaf])
+        leaf = jnp.maximum(leaf - too_low.astype(_I32), 0)
+        too_high = ~z_less_hilo(q_hi, q_lo, s.leaf_dlo_hi[leaf + 1],
+                                s.leaf_dlo_lo[leaf + 1])
+        leaf = jnp.minimum(leaf + too_high.astype(_I32), s.num_leaves - 1)
+    return leaf
+
+
+def model_window(s: GLINSnapshot, q_hi: jax.Array, q_lo: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Model traversal + leaf prediction -> global slot window [lo, hi)
+    guaranteed to bracket lower_bound(q). Uses only the small replicated
+    model tables (no record-level arrays)."""
+    leaf = _find_leaf(s, q_hi, q_lo)
+    start = s.leaf_start[leaf]
+    end = s.leaf_start[leaf + 1]
+    size = end - start
+
+    key_f = ((q_hi - s.leaf_k0_hi[leaf]).astype(jnp.float32) * LO_LIMB_SIZE
+             + (q_lo - s.leaf_k0_lo[leaf]).astype(jnp.float32))
+    pred = jnp.rint(s.leaf_slope[leaf] * key_f + s.leaf_icpt[leaf]).astype(_I32)
+    pred = jnp.clip(pred, 0, jnp.maximum(size - 1, 0))
+    err = (1 << s.search_steps) // 2 + 2
+    lo = jnp.maximum(pred - err, 0) + start
+    hi = jnp.minimum(pred + err, size) + start
+    return lo, hi
+
+
+def lower_bound_in_window(keys_hi: jax.Array, keys_lo: jax.Array,
+                          q_hi: jax.Array, q_lo: jax.Array,
+                          lo: jax.Array, hi: jax.Array, steps: int) -> jax.Array:
+    """Bounded binary search for the first key >= q within [lo, hi)."""
+
+    def step(_, st):
+        lo_i, hi_i = st
+        live = lo_i < hi_i  # converged lanes must not move (clamped gathers)
+        mid = (lo_i + hi_i) >> 1
+        less = z_less_hilo(keys_hi[mid], keys_lo[mid], q_hi, q_lo) & live
+        return jnp.where(less, mid + 1, lo_i), jnp.where(less | ~live, hi_i, mid)
+
+    lo, hi = jax.lax.fori_loop(0, steps, step, (lo, hi))
+    return lo
+
+
+def batch_probe(s: GLINSnapshot, q_hi: jax.Array, q_lo: jax.Array) -> jax.Array:
+    """Batched lower_bound: global slot of the first key >= query key."""
+    lo, hi = model_window(s, q_hi, q_lo)
+    return lower_bound_in_window(s.keys_hi, s.keys_lo, q_hi, q_lo, lo, hi,
+                                 s.search_steps + 2)
+
+
+def _augment(s: GLINSnapshot, q_hi, q_lo):
+    """Suffix-min piecewise augmentation, batched (Alg 2 equivalent)."""
+    p = s.pw_zmax_hi.shape[0]
+    if p == 0:
+        return q_hi, q_lo
+    # binary search: first piece with zmax_end >= q
+    lo = jnp.zeros_like(q_hi)
+    hi = jnp.full_like(q_hi, p)
+    steps = max(1, math.ceil(math.log2(p + 1)))
+
+    def step(_, st):
+        lo_i, hi_i = st
+        mid = (lo_i + hi_i) >> 1
+        less = z_less_hilo(s.pw_zmax_hi[mid], s.pw_zmax_lo[mid], q_hi, q_lo)
+        return jnp.where(less, mid + 1, lo_i), jnp.where(less, hi_i, mid)
+
+    lo, _ = jax.lax.fori_loop(0, steps, step, (lo, hi))
+    in_range = lo < p
+    idx = jnp.minimum(lo, p - 1)
+    m_hi = jnp.where(in_range, s.pw_sufmin_hi[idx], _INF_HI)
+    m_lo = jnp.where(in_range, s.pw_sufmin_lo[idx], 0)
+    take = z_less_hilo(m_hi, m_lo, q_hi, q_lo)
+    return jnp.where(take, m_hi, q_hi), jnp.where(take, m_lo, q_lo)
+
+
+def query_keys(s: GLINSnapshot, windows: jax.Array, relation: str
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Windows (Q,4) -> ((zmin', ub) hi/lo limbs): the probe key (augmented
+    for Intersects) and the exclusive upper key zmax+1."""
+    from .zorder import ZGrid
+
+    grid = ZGrid(s.grid_x0, s.grid_y0, s.grid_cell)
+    # conservative fp32 window quantization (never lose a candidate)
+    (zmin_hi, zmin_lo), (zmax_hi, zmax_lo) = mbr_to_zinterval_hilo(
+        windows, grid, guard=ZGrid.FP32_GUARD_CELLS)
+    if relation == "intersects":
+        zmin_hi, zmin_lo = _augment(s, zmin_hi, zmin_lo)
+    carry = (zmax_lo + 1) >= LO_LIMB_SIZE
+    ub_hi = zmax_hi + carry.astype(_I32)
+    ub_lo = jnp.where(carry, 0, zmax_lo + 1)
+    return zmin_hi, zmin_lo, ub_hi, ub_lo
+
+
+def batch_query_bounds(s: GLINSnapshot, windows: jax.Array,
+                       relation: str = "contains"
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Windows (Q,4) float32 -> (start_slot, end_slot) per query."""
+    zmin_hi, zmin_lo, ub_hi, ub_lo = query_keys(s, windows, relation)
+    start = batch_probe(s, zmin_hi, zmin_lo)
+    end = batch_probe(s, ub_hi, ub_lo)
+    return start, end
+
+
+@partial(jax.jit, static_argnames=("relation", "cap", "exact_budget"))
+def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
+                nverts: jax.Array, kinds: jax.Array, mbrs: jax.Array,
+                relation: str = "contains", cap: int = 4096,
+                exact_budget: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Full two-step batched query.
+
+    Returns ``(hits, counts)`` where ``hits`` is (Q, K) int32 record ids
+    (-1 padded). ``cap`` bounds candidates per query; overflow is reported
+    via negative counts (callers re-issue with a bigger cap).
+
+    ``exact_budget`` > 0 enables TWO-STAGE refinement (beyond-paper, §Perf):
+    stage 1 evaluates only the cheap interval + leaf-MBR + record-MBR masks
+    over the full run; stage 2 compacts the survivors per query (stable sort
+    on the mask) and runs exact-shape checks + vertex gathers on at most
+    ``exact_budget`` candidates — the expensive (Q·cap·V) gather shrinks to
+    (Q·budget·V). Budget overflow is signalled like cap overflow.
+    """
+    start, end = batch_query_bounds(s, windows, relation)
+    q = windows.shape[0]
+    pos = start[:, None] + jnp.arange(cap, dtype=_I32)[None, :]  # (Q, cap)
+    valid = pos < jnp.minimum(end, start + cap)[:, None]
+    posc = jnp.minimum(pos, s.num_slots - 1)
+
+    leaf = s.rec_leaf[posc]                      # (Q, cap)
+    lmbr = s.leaf_mbr[leaf]                      # (Q, cap, 4)
+    wq = windows[:, None, :]                     # (Q, 1, 4)
+    leaf_ok = geom.mbr_intersects(lmbr, wq, xp=jnp)
+    rec = s.recs[posc]
+    rmbr = mbrs[rec]
+    rec_ok = geom.mbr_intersects(rmbr, wq, xp=jnp)
+    mask = valid & leaf_ok & rec_ok
+
+    def exact_for(w, vv, nn, kk):
+        if relation == "contains":
+            return geom.rect_contains_geoms(w, vv, nn, xp=jnp)
+        return geom.rect_intersects_geoms(w, vv, nn, kk, xp=jnp)
+
+    if exact_budget and exact_budget < cap:
+        kb = exact_budget
+        # stable-compact the MBR survivors to the front of each row
+        order = jnp.argsort(~mask, axis=1, stable=True)[:, :kb]  # (Q, kb)
+        sub_rec = jnp.take_along_axis(rec, order, axis=1)
+        sub_mask = jnp.take_along_axis(mask, order, axis=1)
+        v = verts[sub_rec.reshape(-1)]
+        nv = nverts[sub_rec.reshape(-1)]
+        kd = kinds[sub_rec.reshape(-1)]
+        exact = jax.vmap(exact_for)(windows,
+                                    v.reshape(q, kb, *v.shape[1:]),
+                                    nv.reshape(q, kb), kd.reshape(q, kb))
+        fmask = sub_mask & exact
+        hits = jnp.where(fmask, sub_rec, -1)
+        counts = fmask.sum(axis=1).astype(_I32)
+        overflow = ((end - start) > cap) | (mask.sum(axis=1) > kb)
+        counts = jnp.where(overflow, -counts - 1, counts)
+        return hits, counts
+
+    v = verts[rec.reshape(-1)]                   # (Q*cap, V, 2)
+    nv = nverts[rec.reshape(-1)]
+    kd = kinds[rec.reshape(-1)]
+    exact = jax.vmap(exact_for)(windows,
+                                v.reshape(q, cap, *v.shape[1:]),
+                                nv.reshape(q, cap), kd.reshape(q, cap))
+    mask = mask & exact
+    hits = jnp.where(mask, rec, -1)
+    counts = mask.sum(axis=1).astype(_I32)
+    overflow = (end - start) > cap
+    counts = jnp.where(overflow, -counts - 1, counts)  # signal truncation
+    return hits, counts
+
+
+def input_specs_like(num_queries: int):
+    """ShapeDtypeStruct stand-ins for a query batch (dry-run use)."""
+    return {
+        "windows": jax.ShapeDtypeStruct((num_queries, 4), jnp.float32),
+    }

@@ -1,0 +1,235 @@
+"""Distributed GLIN — the paper's index scaled over a TPU pod mesh.
+
+Layout (DESIGN.md §4):
+
+* the **learned model** (flattened node table, leaf models, leaf MBRs,
+  piecewise suffix-min) is tiny — KBs to a few MBs (paper Fig 8 / Tab V) — and
+  is **replicated** on every device;
+* the **record table** (sorted Zmin limbs, record MBRs, packed vertex rings)
+  is **range-partitioned by slot** over the ``data`` (and ``pod``) mesh axes;
+* **query batches are sharded over the ``model`` axis** — each model-column
+  owns Q/16 windows, each data-row owns N/16 records, so a (16,16) pod
+  evaluates 256 query×record tiles fully in parallel with zero collectives in
+  the probe/refine path (results stay sharded; a count ``psum`` is optional).
+
+``glin_query_step`` is built with ``shard_map`` so the per-device block logic
+is explicit, and is what the multi-pod dry-run lowers (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import geometry as geom
+from .device import (GLINSnapshot, lower_bound_in_window, model_window,
+                     query_keys)
+from .zorder import LO_LIMB_SIZE
+
+__all__ = ["shard_glin_arrays", "build_glin_query_step", "glin_input_specs",
+           "GLIN_MODEL_SPEC"]
+
+_I32 = jnp.int32
+
+# Replicated model pytree spec (everything in GLINSnapshot is replicated; the
+# big sorted arrays travel separately, sharded).
+GLIN_MODEL_SPEC = P()
+
+
+def shard_glin_arrays(glin, num_shards: int) -> Dict[str, np.ndarray]:
+    """Reorder record payloads into slot order and pad to ``num_shards``.
+
+    Returns host arrays ready to be device_put with a 'data'-sharded layout:
+    keys/recs/leaf-ids plus slot-ordered record MBRs and vertex rings.
+    """
+    keys, recs, starts, _ = glin.all_leaf_arrays()
+    n = keys.shape[0]
+    pad = (-n) % num_shards
+    gs = glin.gs
+    rec_leaf = np.repeat(np.arange(len(glin.leaves), dtype=np.int32),
+                         np.diff(starts).astype(np.int64))
+    out = {
+        "keys_hi": (keys >> 30).astype(np.int32),
+        "keys_lo": (keys & (LO_LIMB_SIZE - 1)).astype(np.int32),
+        "recs": recs.astype(np.int32),
+        "rec_leaf": rec_leaf,
+        "mbrs": gs.mbrs[recs].astype(np.float32),
+        "verts": gs.verts[recs].astype(np.float32),
+        "nverts": gs.nverts[recs].astype(np.int32),
+        "kinds": gs.kinds[recs].astype(np.int32),
+    }
+    if pad:
+        out["keys_hi"] = np.concatenate([out["keys_hi"], np.full(pad, 2**30 - 1, np.int32)])
+        out["keys_lo"] = np.concatenate([out["keys_lo"], np.full(pad, 0, np.int32)])
+        out["recs"] = np.concatenate([out["recs"], np.full(pad, -1, np.int32)])
+        out["rec_leaf"] = np.concatenate([out["rec_leaf"], np.zeros(pad, np.int32)])
+        out["mbrs"] = np.concatenate([out["mbrs"], np.zeros((pad, 4), np.float32)])
+        out["verts"] = np.concatenate([out["verts"], np.zeros((pad, *gs.verts.shape[1:]), np.float32)])
+        out["nverts"] = np.concatenate([out["nverts"], np.zeros(pad, np.int32)])
+        out["kinds"] = np.concatenate([out["kinds"], np.zeros(pad, np.int32)])
+    return out
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
+                          cap: int = 512):
+    """Returns (step_fn, in_shardings, out_shardings) for the mesh.
+
+    step(snapshot, windows, table) -> (hits, counts):
+      hits  (Q, n_data_shards, cap) int32  — -1 padded global record ids
+      counts(Q, n_data_shards)       int32 — per-shard hit counts
+    """
+    daxes = _data_axes(mesh)
+    n_shards = int(np.prod([mesh.shape[a] for a in daxes]))
+
+    table_spec = {k: P(daxes) for k in
+                  ("keys_hi", "keys_lo", "recs", "rec_leaf", "mbrs", "verts",
+                   "nverts", "kinds")}
+    in_specs = (
+        GLIN_MODEL_SPEC,           # snapshot: fully replicated (prefix spec)
+        P("model"),                # windows sharded over query axis
+        table_spec,
+    )
+    out_specs = (P("model", daxes), P("model", daxes))
+
+    def local_step(snapshot: GLINSnapshot, windows, table):
+        # Each device sees its local slice of the record table and a local
+        # slice of the query batch; only the SMALL model tables (nodes, leaf
+        # models, leaf MBRs, piecewise suffix-min) are replicated — the
+        # global sorted key array is never materialized per device.
+        shard_id = jax.lax.axis_index(daxes[0])
+        if len(daxes) == 2:
+            shard_id = shard_id * jax.lax.axis_size(daxes[1]) + jax.lax.axis_index(daxes[1])
+        local_n = table["keys_hi"].shape[0]
+        offset = shard_id.astype(_I32) * local_n
+
+        zmin_hi, zmin_lo, ub_hi, ub_lo = query_keys(snapshot, windows, relation)
+
+        def local_lb(q_hi, q_lo):
+            # model predicts a global window; the final search runs on the
+            # LOCAL key shard (clipping makes out-of-shard answers land on
+            # the shard edge, which is exactly the local lower bound).
+            lo_g, hi_g = model_window(snapshot, q_hi, q_lo)
+            lo_l = jnp.clip(lo_g - offset, 0, local_n)
+            hi_l = jnp.clip(hi_g - offset, 0, local_n)
+            return lower_bound_in_window(table["keys_hi"], table["keys_lo"],
+                                         q_hi, q_lo, lo_l, hi_l,
+                                         snapshot.search_steps + 2)
+
+        lstart = local_lb(zmin_hi, zmin_lo)
+        lend = local_lb(ub_hi, ub_lo)
+
+        pos = lstart[:, None] + jnp.arange(cap, dtype=_I32)[None, :]
+        valid = pos < jnp.minimum(lend, lstart + cap)[:, None]
+        posc = jnp.minimum(pos, local_n - 1)
+
+        leaf = table["rec_leaf"][posc]
+        lmbr = snapshot.leaf_mbr[leaf]
+        wq = windows[:, None, :]
+        leaf_ok = geom.mbr_intersects(lmbr, wq, xp=jnp)
+        rmbr = table["mbrs"][posc]
+        rec_ok = geom.mbr_intersects(rmbr, wq, xp=jnp)
+        mask = valid & leaf_ok & rec_ok
+
+        qn, _ = pos.shape
+        v = table["verts"][posc.reshape(-1)]
+        nv = table["nverts"][posc.reshape(-1)]
+        kd = table["kinds"][posc.reshape(-1)]
+
+        def exact_for(w, vv, nn, kk):
+            if relation == "contains":
+                return geom.rect_contains_geoms(w, vv, nn, xp=jnp)
+            return geom.rect_intersects_geoms(w, vv, nn, kk, xp=jnp)
+
+        exact = jax.vmap(exact_for)(windows,
+                                    v.reshape(qn, cap, *v.shape[1:]),
+                                    nv.reshape(qn, cap), kd.reshape(qn, cap))
+        mask = mask & exact & (table["recs"][posc] >= 0)
+        hits = jnp.where(mask, table["recs"][posc], -1)
+        counts = mask.sum(axis=1).astype(_I32)
+        overflow = (lend - lstart) > cap
+        counts = jnp.where(overflow, -counts - 1, counts)  # signal truncation
+        return hits[:, None, :], counts[:, None]
+
+    step = jax.shard_map(
+        local_step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)
+
+    in_shardings = (
+        NamedSharding(mesh, GLIN_MODEL_SPEC),  # prefix: whole snapshot
+        NamedSharding(mesh, P("model")),
+        {k: NamedSharding(mesh, s) for k, s in table_spec.items()},
+    )
+    out_shardings = tuple(NamedSharding(mesh, s) for s in out_specs)
+    return step, in_shardings, out_shardings
+
+
+def _snapshot_spec_tree():
+    """A GLINSnapshot-shaped pytree of placeholder leaves (for spec mapping)."""
+    fields = [f.name for f in dataclasses.fields(GLINSnapshot)
+              if not f.metadata.get("static")]
+    dummy = {name: 0 for name in fields}
+    return GLINSnapshot(**dummy, search_steps=1, depth=1, grid_x0=0.0,
+                        grid_y0=0.0, grid_cell=1.0)
+
+
+def glin_input_specs(num_records: int, num_queries: int, mesh: Mesh,
+                     num_leaves: int = 1 << 20, num_nodes: int = 1 << 14,
+                     num_pieces: int = 1 << 12, max_verts: int = 12,
+                     fanout: int = 64):
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation).
+
+    Sizes default to a 2^30-record production index: the model tables stay
+    tiny (replicated), the record table shards over pod×data.
+    """
+    f32 = jnp.float32
+    i32 = jnp.int32
+    # Record-level arrays are NOT used by the distributed step (they travel
+    # sharded in `table`); keep them 1-element so the replicated snapshot is
+    # only the model tables (a few MB, matching the paper's index sizes).
+    snap = GLINSnapshot(
+        keys_hi=jax.ShapeDtypeStruct((1,), i32),
+        keys_lo=jax.ShapeDtypeStruct((1,), i32),
+        recs=jax.ShapeDtypeStruct((1,), i32),
+        rec_leaf=jax.ShapeDtypeStruct((1,), i32),
+        leaf_start=jax.ShapeDtypeStruct((num_leaves + 1,), i32),
+        leaf_dlo_hi=jax.ShapeDtypeStruct((num_leaves + 1,), i32),
+        leaf_dlo_lo=jax.ShapeDtypeStruct((num_leaves + 1,), i32),
+        leaf_mbr=jax.ShapeDtypeStruct((num_leaves, 4), f32),
+        leaf_k0_hi=jax.ShapeDtypeStruct((num_leaves,), i32),
+        leaf_k0_lo=jax.ShapeDtypeStruct((num_leaves,), i32),
+        leaf_slope=jax.ShapeDtypeStruct((num_leaves,), f32),
+        leaf_icpt=jax.ShapeDtypeStruct((num_leaves,), f32),
+        node_dlo_hi=jax.ShapeDtypeStruct((num_nodes,), i32),
+        node_dlo_lo=jax.ShapeDtypeStruct((num_nodes,), i32),
+        node_scale=jax.ShapeDtypeStruct((num_nodes,), f32),
+        node_fanout=jax.ShapeDtypeStruct((num_nodes,), i32),
+        node_child_base=jax.ShapeDtypeStruct((num_nodes,), i32),
+        child_codes=jax.ShapeDtypeStruct((num_nodes * fanout,), i32),
+        pw_zmax_hi=jax.ShapeDtypeStruct((num_pieces,), i32),
+        pw_zmax_lo=jax.ShapeDtypeStruct((num_pieces,), i32),
+        pw_sufmin_hi=jax.ShapeDtypeStruct((num_pieces,), i32),
+        pw_sufmin_lo=jax.ShapeDtypeStruct((num_pieces,), i32),
+        search_steps=8, depth=4, grid_x0=-180.0, grid_y0=-90.0,
+        grid_cell=5e-7,
+    )
+    windows = jax.ShapeDtypeStruct((num_queries, 4), f32)
+    table = {
+        "keys_hi": jax.ShapeDtypeStruct((num_records,), i32),
+        "keys_lo": jax.ShapeDtypeStruct((num_records,), i32),
+        "recs": jax.ShapeDtypeStruct((num_records,), i32),
+        "rec_leaf": jax.ShapeDtypeStruct((num_records,), i32),
+        "mbrs": jax.ShapeDtypeStruct((num_records, 4), f32),
+        "verts": jax.ShapeDtypeStruct((num_records, max_verts, 2), f32),
+        "nverts": jax.ShapeDtypeStruct((num_records,), i32),
+        "kinds": jax.ShapeDtypeStruct((num_records,), i32),
+    }
+    return snap, windows, table

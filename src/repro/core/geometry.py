@@ -1,0 +1,195 @@
+"""Exact-geometry predicates for GLIN's refinement step (paper §VI-B).
+
+The paper refines candidates with GEOS ``Contains``/``Intersects`` on exact
+shapes. We support the shape families produced by our data generators
+(rectangles, convex polygons, polylines) with fully vectorized predicates.
+
+All functions are array-namespace generic: pass ``xp=numpy`` (host refinement,
+float64) or ``xp=jax.numpy`` (jitted batch refinement, float32). Geometries
+are stored as padded vertex rings::
+
+    verts:  (N, V, 2)  padded with the last valid vertex
+    nverts: (N,)       number of valid vertices
+    kind:   GeomKind   POLYGON (closed, convex) or POLYLINE (open chain)
+
+Query windows are axis-aligned rectangles (the paper's query windows are MBRs
+of KNN result sets), given as (4,) [xmin, ymin, xmax, ymax].
+"""
+from __future__ import annotations
+
+import enum
+
+import numpy as np
+
+__all__ = [
+    "GeomKind",
+    "mbr_intersects",
+    "mbr_contains",
+    "mbrs_of_verts",
+    "rect_contains_geoms",
+    "rect_intersects_polygons",
+    "rect_intersects_polylines",
+    "rect_intersects_geoms",
+]
+
+
+class GeomKind(enum.IntEnum):
+    POLYGON = 0   # closed convex ring
+    POLYLINE = 1  # open chain (roads / rivers)
+
+
+# ---------------------------------------------------------------------------
+# MBR algebra
+# ---------------------------------------------------------------------------
+def mbr_intersects(a, b, xp=np):
+    """(...,4) x (...,4) -> bool. Closed-boundary intersection test."""
+    return (
+        (a[..., 0] <= b[..., 2])
+        & (b[..., 0] <= a[..., 2])
+        & (a[..., 1] <= b[..., 3])
+        & (b[..., 1] <= a[..., 3])
+    )
+
+
+def mbr_contains(outer, inner, xp=np):
+    """outer fully contains inner (closed boundaries)."""
+    return (
+        (outer[..., 0] <= inner[..., 0])
+        & (outer[..., 1] <= inner[..., 1])
+        & (inner[..., 2] <= outer[..., 2])
+        & (inner[..., 3] <= outer[..., 3])
+    )
+
+
+def mbrs_of_verts(verts, nverts, xp=np):
+    """Padded vertex rings -> (N,4) MBRs (padding repeats a valid vertex)."""
+    xmin = xp.min(verts[..., 0], axis=-1)
+    ymin = xp.min(verts[..., 1], axis=-1)
+    xmax = xp.max(verts[..., 0], axis=-1)
+    ymax = xp.max(verts[..., 1], axis=-1)
+    return xp.stack([xmin, ymin, xmax, ymax], axis=-1)
+
+
+def _valid_mask(verts, nverts, xp):
+    v = verts.shape[-2]
+    idx = xp.arange(v)
+    return idx[None, :] < xp.asarray(nverts)[:, None]  # (N, V)
+
+
+# ---------------------------------------------------------------------------
+# Contains (Q is a rectangle): true iff every vertex lies inside Q.
+# Correct for any geometry because the rectangle is convex, so containing the
+# vertex set contains the convex hull (and hence the polygon/polyline).
+# ---------------------------------------------------------------------------
+def rect_contains_geoms(rect, verts, nverts, xp=np):
+    x, y = verts[..., 0], verts[..., 1]
+    inside = (x >= rect[0]) & (x <= rect[2]) & (y >= rect[1]) & (y <= rect[3])
+    valid = _valid_mask(verts, nverts, xp)
+    return xp.all(inside | ~valid, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Intersects — convex polygons, via Separating Axis Theorem.
+# Axes: rectangle normals (x-axis, y-axis) + every polygon edge normal.
+# ---------------------------------------------------------------------------
+def rect_intersects_polygons(rect, verts, nverts, xp=np):
+    """(4,), (N,V,2), (N,) -> (N,) bool. Exact convex-polygon vs rect."""
+    n = verts.shape[0]
+    valid = _valid_mask(verts, nverts, xp)  # (N, V)
+    x, y = verts[..., 0], verts[..., 1]
+
+    big = xp.asarray(1e30, verts.dtype)
+    px_min = xp.min(xp.where(valid, x, big), axis=-1)
+    py_min = xp.min(xp.where(valid, y, big), axis=-1)
+    px_max = xp.max(xp.where(valid, x, -big), axis=-1)
+    py_max = xp.max(xp.where(valid, y, -big), axis=-1)
+
+    # Rect axes (== MBR overlap test).
+    axis_sep = (
+        (px_max < rect[0]) | (rect[2] < px_min) | (py_max < rect[1]) | (rect[3] < py_min)
+    )
+
+    # Polygon edge normals. Edge i: v[i] -> v[(i+1) mod nv]; padded edges are
+    # degenerate (normal 0) and never separate.
+    nv = xp.asarray(nverts)[:, None]
+    vcount = verts.shape[-2]
+    idx = xp.arange(vcount)[None, :]
+    nxt = xp.where(idx + 1 >= nv, 0, idx + 1)
+    vx_next = xp.take_along_axis(x, nxt, axis=-1)
+    vy_next = xp.take_along_axis(y, nxt, axis=-1)
+    ex = xp.where(valid, vx_next - x, 0.0)
+    ey = xp.where(valid, vy_next - y, 0.0)
+    # Outward/inward doesn't matter for SAT: normal = (-ey, ex).
+    nx_, ny_ = -ey, ex  # (N, V) one normal per edge
+
+    # Project polygon vertices onto each of its edge normals: (N, V_axes, V_pts)
+    proj_poly = nx_[:, :, None] * x[:, None, :] + ny_[:, :, None] * y[:, None, :]
+    pvalid = valid[:, None, :]
+    pp_min = xp.min(xp.where(pvalid, proj_poly, big), axis=-1)
+    pp_max = xp.max(xp.where(pvalid, proj_poly, -big), axis=-1)
+
+    # Project the 4 rect corners onto each edge normal.
+    cx = xp.stack([rect[0], rect[2], rect[2], rect[0]])
+    cy = xp.stack([rect[1], rect[1], rect[3], rect[3]])
+    proj_rect = nx_[:, :, None] * cx[None, None, :] + ny_[:, :, None] * cy[None, None, :]
+    pr_min = xp.min(proj_rect, axis=-1)
+    pr_max = xp.max(proj_rect, axis=-1)
+
+    degenerate = (nx_ == 0.0) & (ny_ == 0.0)
+    edge_sep = ((pp_max < pr_min) | (pr_max < pp_min)) & ~degenerate & valid
+    axis_sep = axis_sep | xp.any(edge_sep, axis=-1)
+    return ~axis_sep
+
+
+# ---------------------------------------------------------------------------
+# Intersects — polylines: any segment clips the rectangle (Liang–Barsky) or
+# any endpoint lies inside.
+# ---------------------------------------------------------------------------
+def rect_intersects_polylines(rect, verts, nverts, xp=np):
+    x, y = verts[..., 0], verts[..., 1]
+    nv = xp.asarray(nverts)[:, None]
+    vcount = verts.shape[-2]
+    idx = xp.arange(vcount)[None, :]
+    seg_valid = (idx + 1) < nv  # (N, V): segment i..i+1 exists
+
+    nxt = xp.minimum(idx + 1, vcount - 1)
+    x1 = xp.take_along_axis(x, nxt, axis=-1)
+    y1 = xp.take_along_axis(y, nxt, axis=-1)
+    dx, dy = x1 - x, y1 - y
+
+    # Liang–Barsky: segment P + t*D, t in [0,1], clipped by 4 half-planes.
+    eps = xp.asarray(1e-30, verts.dtype)
+
+    def _clip(t0, t1, p, q):
+        # p*t <= q  half-plane; update (t0, t1); parallel handled via sign(q).
+        p_safe = xp.where(p == 0, eps, p)
+        r = q / p_safe
+        t0n = xp.where(p < 0, xp.maximum(t0, r), t0)
+        t1n = xp.where(p < 0, t1, xp.where(p > 0, xp.minimum(t1, r), t1))
+        t0n = xp.where(p > 0, t0n, t0n)
+        reject_parallel = (p == 0) & (q < 0)
+        return t0n, t1n, reject_parallel
+
+    t0 = xp.zeros_like(dx)
+    t1 = xp.ones_like(dx)
+    reject = xp.zeros_like(dx, dtype=bool)
+    for p, q in (
+        (-dx, x - rect[0]),
+        (dx, rect[2] - x),
+        (-dy, y - rect[1]),
+        (dy, rect[3] - y),
+    ):
+        t0, t1, rej = _clip(t0, t1, p, q)
+        reject = reject | rej
+    seg_hit = (t0 <= t1) & ~reject & seg_valid
+
+    valid = _valid_mask(verts, nverts, xp)
+    pt_in = (x >= rect[0]) & (x <= rect[2]) & (y >= rect[1]) & (y <= rect[3]) & valid
+    return xp.any(seg_hit, axis=-1) | xp.any(pt_in, axis=-1)
+
+
+def rect_intersects_geoms(rect, verts, nverts, kinds, xp=np):
+    """Dispatch on geometry kind. ``kinds``: (N,) int array of GeomKind."""
+    poly = rect_intersects_polygons(rect, verts, nverts, xp=xp)
+    line = rect_intersects_polylines(rect, verts, nverts, xp=xp)
+    return xp.where(xp.asarray(kinds) == int(GeomKind.POLYGON), poly, line)

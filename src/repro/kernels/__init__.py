@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (+ ops.py jit wrappers, ref.py pure-jnp oracles).
+
+morton            batched Z-address encode (int32 hi/lo limbs)
+refine            tiled GLIN refinement masks/counts (records x queries)
+flash_attention   blocked causal/SWA GQA attention (train/prefill)
+decode_attention  one-token ring-cache attention (decode)
+ssd_scan          Mamba-2 SSD chunked scan with carried VMEM state
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated against ref.py with interpret=True on CPU (tests/test_kernels.py).
+"""

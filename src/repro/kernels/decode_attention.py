@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: single-token decode attention over a ring KV cache.
+
+The serving inner loop (decode_32k / long_500k cells): one query token per
+sequence attends to a (possibly ring-buffered) cache of W slots with
+per-slot absolute positions (-1 = empty; sliding-window masking applied from
+positions, matching models/attention.attention_decode exactly).
+
+Layout: q (B, Hq, D); k/v (B, Hkv, W, D); abs_pos (B, W) int32; pos (B,).
+Grid = (B, Hq, W/BK): the KV axis is the minor sequential dimension so the
+(D,) accumulator + running max/denominator live in SMEM-sized VMEM scratch;
+GQA is expressed in the K/V index_map (head h reads kv-head h // group).
+Decode is memory-bound — the kernel's job is to stream K/V exactly once at
+full HBM bandwidth with masking fused.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, ap_ref, pos_ref, o_ref,
+                   acc, m_i, l_i, *, bk: int, window: int, scale: float):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (D,)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+    ap = ap_ref[0]                                       # (BK,) int32
+    pos = pos_ref[0]                                     # scalar int32
+
+    s = jnp.einsum("d,kd->k", q, k)                      # (BK,)
+    valid = (ap >= 0) & (ap <= pos)
+    if window > 0:
+        valid &= (pos - ap) < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_i[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_i[0] = l_i[0] * alpha + p.sum()
+    acc[...] = acc[...] * alpha + jnp.einsum("k,kd->d", p, v)[None]
+    m_i[0] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _final():
+        o_ref[0, 0] = (acc[0] / jnp.maximum(l_i[0], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            abs_pos: jax.Array, pos: jax.Array, *,
+                            window: int = 0, bk: int = DEFAULT_BK,
+                            interpret: bool = False) -> jax.Array:
+    """q (B,Hq,D); k/v (B,Hkv,W,D); abs_pos (B,W) i32; pos (B,) i32
+    -> (B,Hq,D)."""
+    b, hq, d = q.shape
+    _, hkv, w, _ = k.shape
+    assert w % bk == 0, (w, bk)
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    grid = (b, hq, w // bk)
+
+    kernel = functools.partial(_decode_kernel, bk=bk, window=window,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b_, h, ik: (b_, h, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, ik, g=group: (b_, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, ik, g=group: (b_, h // g, ik, 0)),
+            pl.BlockSpec((1, bk), lambda b_, h, ik: (b_, ik)),
+            pl.BlockSpec((1,), lambda b_, h, ik: (b_,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b_, h, ik: (b_, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, abs_pos, pos)

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: blocked causal attention (flash-style, GQA + SWA).
+
+The serving/training hot-spot for the assigned LM architectures. Classic
+online-softmax tiling adapted to the TPU memory hierarchy:
+
+* grid = (batch, q_heads, Sq/BQ, Skv/BK); the KV axis is the minor grid
+  dimension, so the (BQ, D) accumulator + running max/denominator live in
+  VMEM scratch across KV steps of one query block;
+* BlockSpecs keep a (BQ, D) Q tile and (BK, D) K/V tiles resident — MXU
+  matmuls are (BQ×D)·(D×BK) and (BQ×BK)·(BK×D) with D, BQ, BK multiples of
+  128 (8 for sublanes) by construction;
+* GQA is expressed in the K/V index_map (q-head h reads kv-head h // group) —
+  no HBM duplication of KV;
+* causal + sliding-window masking is applied per-tile; fully-masked tiles are
+  skipped with ``pl.when`` (block-level early-out).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_i, l_i, *,
+                  bq: int, bk: int, window: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    q_lo = iq * bq                  # first query index in this tile
+    k_lo = ik * bk
+    # Block-level skip: entirely in the future, or entirely beyond the window.
+    live = q_lo + bq - 1 >= k_lo
+    if window > 0:
+        live = live & (k_lo + bk - 1 >= q_lo + bq - 1 - (window - 1) - (bq - 1))
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)              # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (BQ,BK)
+        qi = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kj = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = qi >= kj
+        if window > 0:
+            mask &= (qi - kj) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_i[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_i[...] = l_i[...] * alpha + p.sum(axis=1)
+        acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_i[...] = m_new
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _final():
+        denom = jnp.maximum(l_i[...], 1e-30)
+        o_ref[0, 0] = (acc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           *, window: int = 0,
+                           bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                           interpret: bool = False) -> jax.Array:
+    """q (B,Hq,S,D); k,v (B,Hkv,S,D); window=0 -> pure causal, else SWA.
+
+    Returns (B,Hq,S,D) in q.dtype. S must divide by bq and bk.
+    """
+    b, hq, s, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert s % bq == 0 and sk % bk == 0, (s, sk, bq, bk)
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    grid = (b, hq, s // bq, sk // bk)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk,
+                               window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

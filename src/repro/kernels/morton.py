@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: batched Morton (Z-address) encoding.
+
+Encodes 30-bit quantized (x, y) coordinate pairs into (hi, lo) int32
+Z-address limbs (DESIGN.md §2 — the TPU-native 64-bit-free representation).
+Pure VPU bit arithmetic: each grid step loads a (BLOCK_M, 128) tile of
+coordinates into VMEM, spreads bits with the magic-mask ladder, and writes
+both limbs. Arithmetic intensity is low, so the kernel exists to (a) fuse the
+quantize+interleave chain into one HBM round-trip and (b) feed downstream
+Pallas stages without leaving VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BLOCK_M = 8
+
+
+def _part1by1(v):
+    v = v.astype(jnp.uint32)
+    v = (v | (v << 8)) & jnp.uint32(0x00FF00FF)
+    v = (v | (v << 4)) & jnp.uint32(0x0F0F0F0F)
+    v = (v | (v << 2)) & jnp.uint32(0x33333333)
+    v = (v | (v << 1)) & jnp.uint32(0x55555555)
+    return v
+
+
+def _morton_kernel(qx_ref, qy_ref, hi_ref, lo_ref):
+    qx = qx_ref[...]
+    qy = qy_ref[...]
+    mask15 = jnp.int32((1 << 15) - 1)
+    x_lo, x_hi = qx & mask15, qx >> 15
+    y_lo, y_hi = qy & mask15, qy >> 15
+    lo_ref[...] = (_part1by1(x_lo) | (_part1by1(y_lo) << 1)).astype(jnp.int32)
+    hi_ref[...] = (_part1by1(x_hi) | (_part1by1(y_hi) << 1)).astype(jnp.int32)
+
+
+def morton_encode_pallas(qx: jax.Array, qy: jax.Array,
+                         block_m: int = DEFAULT_BLOCK_M,
+                         interpret: bool = False):
+    """(M, 128) int32 coordinate tiles -> ((M,128) hi, (M,128) lo)."""
+    m, lanes = qx.shape
+    assert lanes == LANES and m % block_m == 0, (qx.shape, block_m)
+    grid = (m // block_m,)
+    spec = pl.BlockSpec((block_m, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _morton_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((m, LANES), jnp.int32)] * 2,
+        interpret=interpret,
+    )(qx, qy)

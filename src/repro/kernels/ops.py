@@ -1,0 +1,115 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each wrapper (a) pads/reshapes arbitrary inputs to the kernels' tile-aligned
+layouts, (b) selects interpret mode automatically off-TPU (the kernels TARGET
+TPU; interpret=True executes the same kernel body on CPU for validation), and
+(c) exposes a ``use_pallas=False`` escape hatch that routes to the pure-jnp
+reference (used by the XLA baselines in the perf comparisons).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .morton import LANES, morton_encode_pallas
+from .refine import refine_count_pallas, refine_mask_pallas
+from .ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------- morton ----
+@partial(jax.jit, static_argnames=("use_pallas",))
+def morton_encode(qx: jax.Array, qy: jax.Array, use_pallas: bool = True):
+    """(N,) int32 coords -> (hi, lo) int32 limbs."""
+    if not use_pallas:
+        return ref.morton_ref(qx, qy)
+    n = qx.shape[0]
+    block = 8 * LANES
+    pad = (-n) % block
+    qxp = jnp.pad(qx, (0, pad)).reshape(-1, LANES)
+    qyp = jnp.pad(qy, (0, pad)).reshape(-1, LANES)
+    hi, lo = morton_encode_pallas(qxp, qyp, interpret=not _on_tpu())
+    return hi.reshape(-1)[:n], lo.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------- refine ----
+@partial(jax.jit, static_argnames=("use_pallas",))
+def refine_mask(windows: jax.Array, bounds: jax.Array, mbrs: jax.Array,
+                use_pallas: bool = True):
+    """(Q,4) f32, (Q,2) i32, (N,4) f32 -> (Q,N) int8 candidate mask."""
+    if not use_pallas:
+        return ref.refine_mask_ref(windows, bounds, mbrs)
+    q, n = windows.shape[0], mbrs.shape[0]
+    bq, bn = 8, 512
+    qp, np_ = (-q) % bq, (-n) % bn
+    w = jnp.pad(windows, ((0, qp), (0, 0)))
+    b = jnp.pad(bounds, ((0, qp), (0, 0)))
+    m = jnp.pad(mbrs, ((0, np_), (0, 0)), constant_values=2e30)  # never hit
+    out = refine_mask_pallas(w, b, m, bq=bq, bn=bn, interpret=not _on_tpu())
+    return out[:q, :n]
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def refine_count(windows: jax.Array, bounds: jax.Array, mbrs: jax.Array,
+                 use_pallas: bool = True):
+    if not use_pallas:
+        return ref.refine_count_ref(windows, bounds, mbrs)
+    q, n = windows.shape[0], mbrs.shape[0]
+    bq, bn = 8, 512
+    qp, np_ = (-q) % bq, (-n) % bn
+    w = jnp.pad(windows, ((0, qp), (0, 0)))
+    b = jnp.pad(bounds, ((0, qp), (0, 0)))
+    m = jnp.pad(mbrs, ((0, np_), (0, 0)), constant_values=2e30)
+    out = refine_count_pallas(w, b, m, bq=bq, bn=bn, interpret=not _on_tpu())
+    return out[:q]
+
+
+# ------------------------------------------------------------- attention ----
+@partial(jax.jit, static_argnames=("window", "use_pallas", "bq", "bk"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int = 0, use_pallas: bool = True,
+                    bq: int = 128, bk: int = 128):
+    """Causal (optionally sliding-window) GQA attention.
+    q (B,Hq,S,D); k,v (B,Hkv,S,D)."""
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, window=window)
+    s = q.shape[2]
+    bq_ = min(bq, s) if s % min(bq, s) == 0 else s
+    bk_ = min(bk, s) if s % min(bk, s) == 0 else s
+    return flash_attention_pallas(q, k, v, window=window, bq=bq_, bk=bk_,
+                                  interpret=not _on_tpu())
+
+
+# ------------------------------------------------------------------- ssd ----
+@partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk: int = 128, use_pallas: bool = True):
+    """Mamba-2 SSD scan. x (B,S,H,P), dt (B,S,H), a (H,), b/c (B,S,N)."""
+    if not use_pallas:
+        return ref.ssd_ref(x, dt, a, b, c)
+    s = x.shape[1]
+    ch = min(chunk, s) if s % min(chunk, s) == 0 else s
+    return ssd_scan_pallas(x, dt, a, b, c, chunk=ch, interpret=not _on_tpu())
+
+
+# ------------------------------------------------------------ decode attn ---
+@partial(jax.jit, static_argnames=("window", "use_pallas", "bk"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     abs_pos: jax.Array, pos: jax.Array, *,
+                     window: int = 0, use_pallas: bool = True, bk: int = 256):
+    """One-token decode attention over a ring KV cache.
+    q (B,Hq,D); k/v (B,Hkv,W,D); abs_pos (B,W); pos (B,)."""
+    from .decode_attention import decode_attention_pallas
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k, v, abs_pos, pos, window=window)
+    w = k.shape[2]
+    bk_ = min(bk, w) if w % min(bk, w) == 0 else w
+    return decode_attention_pallas(q, k, v, abs_pos, pos, window=window,
+                                   bk=bk_, interpret=not _on_tpu())

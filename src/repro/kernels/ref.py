@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.zorder import morton_encode_hilo
+
+
+# ---------------------------------------------------------------- morton ----
+def morton_ref(qx: jax.Array, qy: jax.Array):
+    """(..., ) int32 coords -> (hi, lo) int32 limbs (shared device codec)."""
+    return morton_encode_hilo(qx, qy)
+
+
+# ---------------------------------------------------------------- refine ----
+def refine_mask_ref(windows: jax.Array, bounds: jax.Array, mbrs: jax.Array):
+    """(Q,4), (Q,2) i32, (N,4) -> (Q,N) int8."""
+    w = windows[:, None, :]
+    r = mbrs[None, :, :]
+    inter = (
+        (w[..., 0] <= r[..., 2]) & (r[..., 0] <= w[..., 2])
+        & (w[..., 1] <= r[..., 3]) & (r[..., 1] <= w[..., 3])
+    )
+    slot = jnp.arange(mbrs.shape[0], dtype=jnp.int32)[None, :]
+    in_run = (slot >= bounds[:, 0:1]) & (slot < bounds[:, 1:2])
+    return (inter & in_run).astype(jnp.int8)
+
+
+def refine_count_ref(windows: jax.Array, bounds: jax.Array, mbrs: jax.Array):
+    return refine_mask_ref(windows, bounds, mbrs).astype(jnp.int32).sum(axis=1)
+
+
+# ------------------------------------------------------------- attention ----
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window: int = 0) -> jax.Array:
+    """Dense causal (+ sliding window) GQA attention, fp32 softmax."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / math.sqrt(d)
+    s_mat = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(k.shape[2])[None, :]
+    mask = qi >= kj
+    if window > 0:
+        mask &= (qi - kj) < window
+    s_mat = jnp.where(mask[None, None], s_mat, -1e30)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------------- ssd ----
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array) -> jax.Array:
+    """Exact SSM recurrence: h_t = e^{dt_t A} h_{t-1} + dt_t B_t x_t^T;
+    y_t = C_t h_t. x (B,S,H,P), dt (B,S,H), a (H,), b/c (B,S,N)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp          # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dt_t * a[None, :])  # (B,H)
+        upd = jnp.einsum("bn,bhp,bh->bhnp", b_t, x_t.astype(jnp.float32),
+                         dt_t.astype(jnp.float32))
+        state = state * decay[:, :, None, None] + upd
+        y_t = jnp.einsum("bn,bhnp->bhp", c_t, state)
+        return state, y_t
+
+    state0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    xs = (jnp.swapaxes(x, 0, 1), jnp.swapaxes(dt, 0, 1),
+          jnp.swapaxes(b, 0, 1), jnp.swapaxes(c, 0, 1))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.swapaxes(ys, 0, 1).astype(x.dtype)
+
+
+def decode_attention_ref(q, k, v, abs_pos, pos, *, window: int = 0):
+    """Dense decode attention oracle. q (B,Hq,D); k/v (B,Hkv,W,D);
+    abs_pos (B,W); pos (B,) -> (B,Hq,D)."""
+    b, hq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+    if window > 0:
+        valid &= (pos[:, None] - abs_pos) < window
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: Mamba-2 SSD (state-space duality) chunked scan.
+
+TPU-native formulation of the SSD algorithm (arXiv:2405.21060): the sequence
+is split into chunks of length L; within a chunk the recurrence is expressed
+as dense (L×L)·(L×P) and (L×N)·(N×P) matmuls (MXU work), while the O(S)
+recurrence survives only across chunks — carried as an (N, P) f32 state in
+VMEM scratch along the minor (sequential) grid axis. All decay exponentials
+are of non-positive arguments (A < 0, dt > 0), so the kernel is
+overflow-free by construction.
+
+Layout: x (B,S,H,P), dt (B,S,H) [post-softplus], A (H,) [negative],
+B/C (B,S,N) [single SSM group]. Output y (B,S,H,P).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state, *, chunk: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)        # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)      # (L,)
+    a = a_ref[0].astype(jnp.float32)              # scalar A_h (negative)
+    bm = b_ref[0].astype(jnp.float32)             # (L, N)
+    cm = c_ref[0].astype(jnp.float32)             # (L, N)
+
+    g = jnp.cumsum(dt * a)                        # (L,) non-increasing
+    gtot = g[-1]
+
+    # intra-chunk: Y_diag = ((C B^T) ∘ Γ ∘ dt_j) X,  Γ_ij = e^{g_i - g_j}, i>=j
+    s = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, L)
+    li = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    gamma = jnp.where(li >= lj, jnp.exp(g[:, None] - g[None, :]), 0.0)
+    w = s * gamma * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, P)
+
+    # carry-in: Y_off = (C state) ∘ e^{g}
+    y += jax.lax.dot_general(cm, state[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) * jnp.exp(g)[:, None]
+
+    # state update: state' = e^{gtot} state + B^T (e^{gtot-g} ∘ dt ∘ X)
+    xw = x * (jnp.exp(gtot - g) * dt)[:, None]
+    state[...] = jnp.exp(gtot) * state[...] + jax.lax.dot_general(
+        bm, xw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, a: jax.Array,
+                    b: jax.Array, c: jax.Array, *,
+                    chunk: int = DEFAULT_CHUNK,
+                    interpret: bool = False) -> jax.Array:
+    """x (B,S,H,P), dt (B,S,H), a (H,), b/c (B,S,N) -> y (B,S,H,P)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    grid = (bsz, h, s // chunk)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, ci: (b_, ci, h_)),
+            pl.BlockSpec((1,), lambda b_, h_, ci: (h_,)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, ci: (b_, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, ci: (b_, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, ci: (b_, ci, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)

@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. builds the appropriate step (train_4k -> train_step with grad-accum;
+     prefill_32k -> prefill_step; decode_32k / long_500k -> decode_step;
+     the GLIN cell -> the shard_map glin_query_step),
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(*specs).compile()``,
+  4. records memory_analysis / cost_analysis / HLO collective bytes + the
+     derived roofline terms to benchmarks/artifacts/dryrun/<cell>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi4_mini_3p8b \
+      --shape train_4k --mesh multi                               # one cell
+  ... --resume     # skip cells whose artifact already exists
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import (ARCH_IDS, SHAPES, cell_supported, get_arch,
+                                get_shape)
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import MeshRules
+from repro.utils import roofline
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend may not support it
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["total_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0) + out.get("temp_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0) - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:
+        return {"error": str(e)}
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             microbatches: int = 16, seq_shard: bool = False,
+             ssd_chunk: int = 0) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    rules = MeshRules(mesh=mesh, seq_sharding=seq_shard)
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+           "chips": chips, "status": "ok"}
+    t0 = time.time()
+
+    if arch_id == "glin":
+        from repro.core.distributed import build_glin_query_step, glin_input_specs
+        # records shard over the data(×pod) axes only (query×record 2D
+        # decomposition): size the index to ~2.3 GiB/device of record table.
+        num_records = (1 << 29) if mesh_kind == "multi" else (1 << 28)
+        num_queries = 4096
+        step, in_sh, out_sh = build_glin_query_step(mesh, relation="intersects",
+                                                    cap=512)
+        specs = glin_input_specs(num_records, num_queries, mesh)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*specs)
+            hlo = lowered.as_text()
+            compiled = lowered.compile()
+        rec["tokens"] = num_queries
+        cfg = None
+        shape = None
+    else:
+        from repro.train.step import (build_decode_step, build_prefill_step,
+                                      build_train_step)
+        cfg = get_arch(arch_id)
+        if ssd_chunk:
+            import dataclasses as _dc
+            cfg = _dc.replace(cfg, ssd_chunk=ssd_chunk)
+        shape = get_shape(shape_name)
+        ok, why = cell_supported(cfg, shape)
+        if not ok:
+            rec.update(status="skip", reason=why)
+            return rec
+        if shape.kind == "train":
+            # each microbatch must still divide the DP extent or activations
+            # silently replicate (batch sharding dropped by the rule table)
+            dp = chips // mesh.shape["model"]
+            mbs = min(microbatches, max(1, shape.global_batch // dp))
+            step, in_sh, out_sh, specs = build_train_step(
+                cfg, shape, rules, microbatches=mbs)
+        elif shape.kind == "prefill":
+            step, in_sh, out_sh, specs = build_prefill_step(cfg, shape, rules)
+        else:
+            step, in_sh, out_sh, specs = build_decode_step(cfg, shape, rules)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*specs)
+            hlo = lowered.as_text()
+            compiled = lowered.compile()
+
+    rec["lower_compile_s"] = round(time.time() - t0, 1)
+    rec["memory"] = _mem_analysis(compiled)
+    rec["cost_analysis_raw"] = _cost_analysis(compiled)  # per-computation; see utils/hlo.py
+
+    # Per-chip costs from the partitioned module, with while-loop trip-count
+    # scaling (XLA's cost_analysis counts loop bodies once — utils/hlo.py).
+    from repro.utils.hlo import analyze_hlo
+    hc = analyze_hlo(compiled.as_text())
+    rec["hlo_cost"] = {
+        "flops_per_chip": hc.flops,
+        "bytes_per_chip": hc.bytes,
+        "collectives_per_chip": hc.collectives,
+        "collective_total_per_chip": hc.collective_total,
+        "unknown_trip_whiles": hc.unknown_trip_whiles,
+    }
+    rec["roofline"] = roofline.roofline_terms(
+        hc.flops, hc.bytes, hc.collective_total, chips=1)
+    if cfg is not None:
+        mf = roofline.model_flops(cfg, shape)
+        rec["model_flops"] = mf
+        rec["useful_flops_ratio"] = (mf / (hc.flops * chips)
+                                     if hc.flops else None)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=16)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--ssd-chunk", type=int, default=0)
+    args = ap.parse_args()
+
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else ARCH_IDS
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+    failures = 0
+    for arch_id in archs:
+        shapes = ([args.shape] if args.shape
+                  else (["query"] if arch_id == "glin" else list(SHAPES)))
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                name = f"{arch_id}__{shape_name}__{mesh_kind}"
+                path = ART_DIR / f"{name}.json"
+                if args.resume and path.exists():
+                    print(f"[skip existing] {name}")
+                    continue
+                print(f"[dryrun] {name} ...", flush=True)
+                try:
+                    rec = run_cell(arch_id, shape_name, mesh_kind,
+                                   microbatches=args.microbatches,
+                                   seq_shard=args.seq_shard,
+                                   ssd_chunk=args.ssd_chunk)
+                except Exception as e:
+                    rec = {"arch": arch_id, "shape": shape_name,
+                           "mesh": mesh_kind, "status": "fail",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                path.write_text(json.dumps(rec, indent=1))
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" compile={rec['lower_compile_s']}s"
+                             f" dominant={r['dominant']}"
+                             f" mem/dev={rec['memory'].get('total_bytes_per_device', 0)/2**30:.2f}GiB")
+                print(f"[{status}] {name}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

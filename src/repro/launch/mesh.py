@@ -1,0 +1,26 @@
+"""Production mesh construction (single-pod 16×16; multi-pod 2×16×16).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state. The dry-run (launch/dryrun.py) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before importing jax
+so these meshes can be built on the CPU container.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(4, 2), axes=("data", "model")):
+    """Small mesh for multi-device unit tests (8 fake devices)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,206 @@
+"""Attention: GQA / MQA / MHA with RoPE or M-RoPE, causal + sliding window.
+
+Three entry points:
+
+* ``attention_train``  — full-sequence, query-chunked online-softmax (exact,
+  flash-style memory profile so 32k prefill never materializes S×S scores;
+  scores for one (chunk × S) tile live at a time).
+* ``attention_decode`` — one token vs a (possibly ring-buffered) KV cache with
+  per-sequence positions; sliding-window archs keep only W slots.
+* ``init_attn_params`` / ``attn_logical`` — parameters + logical sharding axes.
+
+The Pallas flash kernel (kernels/flash_attention.py) is the TPU-target
+implementation of ``attention_train``'s inner loop; the XLA path here is what
+the CPU dry-run lowers (kernels don't lower on the CPU backend) and the
+numerical oracle for it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, he_init, mrope, rms_norm, rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def init_attn_params(cfg, key, dtype) -> Dict[str, jax.Array]:
+    l, d = cfg.n_layers, cfg.d_model
+    a, kv = cfg.attn_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": he_init(ks[0], (l, d, a), d, dtype),
+        "wk": he_init(ks[1], (l, d, kv), d, dtype),
+        "wv": he_init(ks[2], (l, d, kv), d, dtype),
+        "wo": he_init(ks[3], (l, a, d), a, dtype),
+    }
+    if cfg.qk_norm:
+        p["qn"] = jnp.ones((l, cfg.head_dim), dtype)
+        p["kn"] = jnp.ones((l, cfg.head_dim), dtype)
+    return p
+
+
+def attn_logical(cfg) -> Dict[str, tuple]:
+    p = {
+        "wq": (None, "w_embed", "heads"),
+        "wk": (None, "w_embed", "kv"),
+        "wv": (None, "w_embed", "kv"),
+        "wo": (None, "heads", "w_embed"),
+    }
+    if cfg.qk_norm:
+        p["qn"] = (None, None)
+        p["kn"] = (None, None)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Shared projection + rotary helpers
+# ---------------------------------------------------------------------------
+def _project_qkv(x, p, cfg, positions):
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(x, p["wq"]).reshape(b, s, hq, dh)
+    k = dense(x, p["wk"]).reshape(b, s, hkv, dh)
+    v = dense(x, p["wv"]).reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn"])
+        k = rms_norm(k, p["kn"])
+    if cfg.mrope:
+        if positions.ndim == 2:  # text-only stream: t = h = w = pos
+            positions = jnp.broadcast_to(positions[:, None, :],
+                                         (b, 3, positions.shape[-1]))
+        q = mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention (train / prefill): chunked online softmax
+# ---------------------------------------------------------------------------
+def attention_train(x, p, cfg, positions, constrain, q_chunk: int = 1024
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (output (B,S,d), cache {k, v}) — cache is the rope'd K/V."""
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hkv
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv", None))
+    v = constrain(v, ("batch", "seq", "kv", None))
+
+    scale = 1.0 / math.sqrt(dh)
+    cq = min(q_chunk, s)
+    assert s % cq == 0, (s, cq)
+    nchunks = s // cq
+    qg = q.reshape(b, nchunks, cq, hkv, g, dh)
+    kidx = jnp.arange(s, dtype=jnp.int32)
+
+    def chunk_fn(_, qc_i):
+        qc, ci = qc_i                       # (B,cq,Hkv,G,Dh), scalar chunk id
+        q0 = ci * cq
+        qi = q0 + jnp.arange(cq, dtype=jnp.int32)
+        sc = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                        k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32) * scale
+        mask = qi[:, None] >= kidx[None, :]
+        if cfg.window > 0:
+            mask &= (qi[:, None] - kidx[None, :]) < cfg.window
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        # probs in activation dtype: halves softmax->AV HBM traffic (fp32
+        # softmax math, bf16 storage — what the Pallas flash kernel does)
+        pr = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        oc = jnp.einsum("bhgqk,bkhd->bqhgd", pr, v,
+                        preferred_element_type=jnp.float32)
+        return None, oc.astype(x.dtype)
+
+    _, out = jax.lax.scan(
+        chunk_fn, None,
+        (jnp.moveaxis(qg, 1, 0), jnp.arange(nchunks, dtype=jnp.int32)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, hq * dh)
+    out = constrain(out, ("batch", "seq", "heads"))
+    y = dense(out, p["wo"])
+    # the cache COPY is stacked over layers by prefill: shard its seq axis
+    # over the model axis (kv heads may be indivisible) or the accumulated
+    # (L,B,S,Hkv,Dh) tensor replicates across 'model'
+    kc = constrain(k, ("batch", "kv_seq", "kv", None))
+    vc = constrain(v, ("batch", "kv_seq", "kv", None))
+    return y, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token against a (ring) KV cache
+# ---------------------------------------------------------------------------
+def cache_window(cfg, seq_len: int) -> int:
+    """Slots kept in the decode cache: W for SWA archs, full context else."""
+    return min(cfg.window, seq_len) if cfg.window > 0 else seq_len
+
+
+def attention_decode(x, p, cfg, cache, constrain
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x (B,1,d); cache {k,v (B,W,Hkv,Dh), pos (B,) abs position of the new
+    token, abs_pos (B,W) absolute position of each slot (-1 = empty)}."""
+    b = x.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hkv
+    pos = cache["pos"]                      # (B,)
+    q, k_new, v_new = _project_qkv(x, p, cfg, pos[:, None])
+
+    w = cache["k"].shape[1]
+    slot = pos % w                          # ring slot (== pos when w >= ctx)
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+    abs_pos = cache["abs_pos"].at[bidx, slot].set(pos)
+    k = constrain(k, ("batch", "kv_seq", "kv", None))
+    v = constrain(v, ("batch", "kv_seq", "kv", None))
+
+    scale = 1.0 / math.sqrt(dh)
+    qh = q.reshape(b, hkv, g, dh)
+    sc = jnp.einsum("bhgd,bkhd->bhgk", qh.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+    if cfg.window > 0:
+        valid &= (pos[:, None] - abs_pos) < cfg.window
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", pr, v.astype(jnp.float32))
+    out = out.reshape(b, 1, hq * dh).astype(x.dtype)
+    y = dense(out, p["wo"])
+    new_cache = {"k": k, "v": v, "abs_pos": abs_pos, "pos": pos + 1}
+    return y, new_cache
+
+
+def init_decode_cache(cfg, batch: int, seq_len: int, dtype,
+                      as_specs: bool = False):
+    """Per-layer KV cache pytree ((L, B, W, Hkv, Dh) stacked)."""
+    w = cache_window(cfg, seq_len)
+    l = cfg.n_layers
+    shapes = {
+        "k": ((l, batch, w, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": ((l, batch, w, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "abs_pos": ((l, batch, w), jnp.int32),
+        "pos": ((l, batch), jnp.int32),
+    }
+    if as_specs:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    out = {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+    out["abs_pos"] = out["abs_pos"] - 1  # -1 = empty slot
+    return out
+
+
+def decode_cache_logical():
+    return {
+        "k": (None, "batch", "kv_seq", "kv", None),
+        "v": (None, "batch", "kv_seq", "kv", None),
+        "abs_pos": (None, "batch", None),
+        "pos": (None, "batch"),
+    }

@@ -1,0 +1,81 @@
+"""Shared transformer layers (pure functional JAX)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope", "mrope", "swiglu", "dense", "he_init"]
+
+
+def he_init(key, shape, in_axis_size, dtype):
+    scale = (2.0 / max(1, in_axis_size)) ** 0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, head_dim/2), fp32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rot(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, D); cos/sin broadcastable to (B, S, 1, D/2)."""
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """Standard RoPE. x (B,S,H,D), positions (B,S) or (S,)."""
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)  # (B,S,D/2)
+    return _apply_rot(x, cos[:, :, None, :], sin[:, :, None, :])
+
+
+def mrope(x: jax.Array, positions: jax.Array, sections: Tuple[int, int, int],
+          theta: float = 1e4) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the head dim is split into (t, h, w)
+    sections, each rotated by its own position stream.
+    x (B,S,H,D); positions (B,3,S); sections sum to D/2."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    cos_parts, sin_parts = [], []
+    off = 0
+    for i, sec in enumerate(sections):
+        freq = theta ** (-(jnp.arange(off, off + sec, dtype=jnp.float32)) / half)
+        ang = positions[:, i, :].astype(jnp.float32)[..., None] * freq
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        off += sec
+    cos = jnp.concatenate(cos_parts, axis=-1)  # (B,S,half)
+    sin = jnp.concatenate(sin_parts, axis=-1)
+    return _apply_rot(x, cos[:, :, None, :], sin[:, :, None, :])
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(…, in) @ (in, out). In-MXU accumulation is fp32 regardless; emitting
+    the activation dtype keeps cross-shard partial-sum reductions (TP psum)
+    at bf16 width — half the collective bytes (EXPERIMENTS.md §Perf)."""
+    return jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=x.dtype)
+
+
+def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
+           constrain=None) -> jax.Array:
+    h = jax.nn.silu(dense(x, wg).astype(jnp.float32)).astype(x.dtype) * dense(x, wu)
+    if constrain is not None:
+        h = constrain(h, ("batch", "seq", "ff"))
+    return dense(h, wd)

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts FFN with sort-based (ragged) dispatch.
+
+Cost-faithful pure-JAX MoE: tokens' (token, expert) replicas are sorted by
+expert id, scattered into fixed-capacity per-expert buffers, processed with
+batched expert matmuls (E×C×d×f FLOPs ≈ T·k·cf·d·f — the *active* compute,
+not E× dense), and combined back with top-k gate weights. Overflowing a
+capacity bucket drops the replica (standard capacity-factor semantics).
+
+Sharding: expert buffers carry the ("experts", None, "ff") logical axes —
+with experts mapped to the data axis this is expert parallelism and GSPMD
+lowers the scatter/gather to all-to-all-style collectives; with experts
+replicated (e.g. Mixtral's 8 experts on a 16-wide axis) weights shard over
+(w_embed × ff) instead. See sharding/rules.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, he_init
+
+__all__ = ["init_moe_params", "moe_logical", "moe_ffn"]
+
+
+def init_moe_params(cfg, key, dtype) -> Dict[str, jax.Array]:
+    l, d, f, e = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": he_init(ks[0], (l, d, e), d, jnp.float32),
+        "wg": he_init(ks[1], (l, e, d, f), d, dtype),
+        "wu": he_init(ks[2], (l, e, d, f), d, dtype),
+        "wd": he_init(ks[3], (l, e, f, d), f, dtype),
+    }
+    if not cfg.mlp_gated:
+        del p["wg"]
+    return p
+
+
+def moe_logical(cfg) -> Dict[str, tuple]:
+    p = {
+        "router": (None, "w_embed", None),
+        "wg": (None, "experts", "w_embed", "ff"),
+        "wu": (None, "experts", "w_embed", "ff"),
+        "wd": (None, "experts", "ff", "w_embed"),
+    }
+    if not cfg.mlp_gated:
+        del p["wg"]
+    return p
+
+
+CHUNK_TOKENS = 65536  # dispatch chunk: bounds live routing buffers (~GBs)
+
+
+def _moe_chunk(xf: jax.Array, p: Dict[str, jax.Array], cfg, constrain,
+               capacity_factor: float) -> jax.Array:
+    """Dispatch + expert FFN + combine for one chunk of flat tokens (T, d)."""
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    # --- routing (fp32) ---
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)             # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- sort replicas by expert ---
+    flat_e = eidx.reshape(-1).astype(jnp.int32)       # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    tok = (order // k).astype(jnp.int32)
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    ranks = (jnp.arange(t * k, dtype=jnp.int32) - starts[se]).astype(jnp.int32)
+
+    cap = int(math.ceil(t * k * capacity_factor / e / 128.0)) * 128
+    cap = max(128, min(cap, t))
+    keep = ranks < cap
+
+    # --- gather into per-expert buffers ---
+    # Dispatch data movement keeps rows unsharded and the FEATURE dim sharded
+    # over 'model': GSPMD partitions gathers/scatters trivially when the
+    # indexed dim is unsharded, but falls back to replicated u32 index
+    # broadcasts of the full (slots, d) shape when it is (10 GiB/device on
+    # the 235B MoE — EXPERIMENTS.md §Perf iteration log). The buffer is then
+    # explicitly resharded to the expert-parallel layout for the matmuls.
+    xrep = jnp.broadcast_to(xf[:, None, :], (t, k, d)).reshape(t * k, d)
+    xrep = constrain(xrep, (None, "ff"))
+    gathered = constrain(xrep[order], (None, "ff"))   # permutation gather
+    # drops land in a padding column (cap..cap+127) sliced off below
+    rk_safe = jnp.where(keep, ranks, cap)
+    flat_slot = se * (cap + 128) + rk_safe
+    buf = jnp.zeros((e * (cap + 128), d), xf.dtype)
+    buf = buf.at[flat_slot].set(gathered, mode="drop")  # unique slots
+    buf = constrain(buf, (None, "ff"))
+    buf = buf.reshape(e, cap + 128, d)[:, :cap]
+    # experts shard over data when divisible (EP); otherwise the capacity
+    # axis takes the data shards (Mixtral: 8 experts on a 16-wide axis)
+    buf = constrain(buf, ("experts", "moe_cap", None))
+
+    # --- expert FFN (batched over E) ---
+    dt_ = xf.dtype  # bf16 partial-sum reductions (see layers.dense)
+    if cfg.mlp_gated:
+        hg = jnp.einsum("ecd,edf->ecf", buf, p["wg"], preferred_element_type=dt_)
+        hu = jnp.einsum("ecd,edf->ecf", buf, p["wu"], preferred_element_type=dt_)
+        h = (jax.nn.silu(hg.astype(jnp.float32)).astype(dt_) * hu)
+    else:
+        hu = jnp.einsum("ecd,edf->ecf", buf, p["wu"], preferred_element_type=dt_)
+        h = jax.nn.gelu(hu.astype(jnp.float32)).astype(dt_)
+    h = constrain(h, ("experts", "moe_cap", "ff"))
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["wd"], preferred_element_type=dt_)
+
+    # --- combine (inverse permutation + reduce over k) ---
+    w = (gates.reshape(-1)[order] * keep).astype(xf.dtype)  # (T*k,)
+    y_pad = jnp.concatenate([y_buf, jnp.zeros((e, 128, d), y_buf.dtype)], 1)
+    y_flat = constrain(y_pad.reshape(e * (cap + 128), d), (None, "ff"))
+    contrib = constrain(y_flat[flat_slot], (None, "ff")) * w[:, None]
+    inv = jnp.argsort(order)                                # inverse perm
+    gathered_back = constrain(contrib[inv], (None, "ff"))   # perm gather
+    y = gathered_back.reshape(t, k, d).sum(axis=1)
+    return constrain(y, ("batch", None))
+
+
+def moe_ffn(x: jax.Array, p: Dict[str, jax.Array], cfg, constrain,
+            capacity_factor: float = 1.25,
+            chunk_tokens: int = CHUNK_TOKENS) -> jax.Array:
+    """Chunked MoE: long prefills scan over ~64k-token dispatch chunks so the
+    routing buffers stay O(chunk) instead of O(sequence) — 32k-prefill of the
+    235B MoE would otherwise need hundreds of GB per device (EXPERIMENTS.md
+    §Method). Training microbatches and decode fit in a single chunk."""
+    b, s, d = x.shape
+    t = b * s
+    if t <= chunk_tokens:
+        return _moe_chunk(x.reshape(t, d), p, cfg, constrain,
+                          capacity_factor).reshape(b, s, d)
+
+    # Chunk along the SEQUENCE axis so the batch axis (data-sharded) stays
+    # the leading dim of every chunk — reshaping tokens across the batch
+    # boundary makes GSPMD re-materialize replicated copies (§Perf log).
+    chunk_s = max(1, chunk_tokens // b)
+    while s % chunk_s:
+        chunk_s //= 2
+    n_chunks = s // chunk_s
+    xc = jnp.moveaxis(x.reshape(b, n_chunks, chunk_s, d), 1, 0)
+    xc = constrain(xc, (None, "batch", None, None))
+
+    def body(_, xt):
+        yt = _moe_chunk(xt.reshape(b * chunk_s, d), p, cfg, constrain,
+                        capacity_factor)
+        return None, yt.reshape(b, chunk_s, d)
+
+    _, yc = jax.lax.scan(body, None, xc)
+    yc = constrain(yc, (None, "batch", None, None))
+    return jnp.moveaxis(yc, 0, 1).reshape(b, s, d)

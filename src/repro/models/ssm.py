@@ -1,0 +1,218 @@
+"""Mamba-2 (SSD) mixer — chunked XLA path + single-step decode.
+
+Train/prefill uses the chunked state-space-duality formulation (intra-chunk
+dense matmuls + inter-chunk linear recurrence), scanning over heads to bound
+live memory (DESIGN.md §2); the Pallas kernel (kernels/ssd_scan.py) is the
+TPU-target version of the same math and is cross-validated in tests.
+
+Decode keeps (conv_state, ssm_state) per layer and applies the exact
+recurrence one token at a time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, he_init, rms_norm
+
+__all__ = ["init_ssm_params", "ssm_logical", "ssd_chunked", "ssm_mixer_train",
+           "ssm_mixer_decode", "init_ssm_cache", "ssm_cache_logical"]
+
+
+def init_ssm_params(cfg, key, dtype) -> Dict[str, jax.Array]:
+    l, d = cfg.n_layers, cfg.d_model
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": he_init(ks[0], (l, d, di), d, dtype),
+        "wx": he_init(ks[1], (l, d, di), d, dtype),
+        "wb": he_init(ks[2], (l, d, n), d, dtype),
+        "wc": he_init(ks[3], (l, d, n), d, dtype),
+        "wdt": he_init(ks[4], (l, d, h), d, dtype),
+        "dt_bias": jnp.zeros((l, h), jnp.float32) + 0.5,
+        "a_log": jnp.zeros((l, h), jnp.float32),          # A = -exp(a_log)
+        "skip_d": jnp.ones((l, h), jnp.float32),
+        "conv_w": he_init(ks[5], (l, cfg.conv_width, di + 2 * n),
+                          cfg.conv_width, dtype),
+        "norm": jnp.ones((l, di), dtype),
+        "out": he_init(ks[6], (l, di, d), di, dtype),
+    }
+
+
+def ssm_logical(cfg) -> Dict[str, tuple]:
+    return {
+        "wz": (None, "w_embed", "ff"),
+        "wx": (None, "w_embed", "ff"),
+        "wb": (None, "w_embed", None),
+        "wc": (None, "w_embed", None),
+        "wdt": (None, "w_embed", None),
+        "dt_bias": (None, None),
+        "a_log": (None, None),
+        "skip_d": (None, None),
+        "conv_w": (None, None, "ff"),
+        "norm": (None, "ff"),
+        "out": (None, "ff", "w_embed"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via K-1 shifted adds. x (B,S,C); w (K,C)."""
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[k - 1 - i]
+    return out
+
+
+def ssd_chunked(x, dt, a, bm, cm, chunk: int = 128) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. x (B,S,H,P), dt (B,S,H) fp32, a (H,) fp32 (<0),
+    bm/cm (B,S,N). Returns (y (B,S,H,P), final_state (B,H,N,P)).
+
+    Scans over heads (decay profiles differ per head; per-head tiles keep the
+    (NC, L, L) Γ tensors O(S·L) instead of O(S·L·H))."""
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    ch = min(chunk, s)
+    assert s % ch == 0
+    nc = s // ch
+    xc = x.reshape(b, nc, ch, h, p)
+    dtc = dt.reshape(b, nc, ch, h).astype(jnp.float32)
+    bc = bm.reshape(b, nc, ch, n).astype(jnp.float32)
+    cc = cm.reshape(b, nc, ch, n).astype(jnp.float32)
+
+    # shared across heads: CB^T score tiles (B, NC, L, L)
+    scores = jnp.einsum("bcln,bcmn->bclm", cc, bc,
+                        preferred_element_type=jnp.float32)
+    li = jnp.arange(ch)
+
+    def per_head(carry, inp):
+        xh, dth, ah = inp              # (B,NC,L,P), (B,NC,L), scalar
+        g = jnp.cumsum(dth * ah, axis=-1)            # (B,NC,L)
+        gtot = g[..., -1]                            # (B,NC)
+        # mask BEFORE exp: where(mask, exp(x), 0) propagates NaN grads
+        # through the inf branch when x > 0 (upper triangle).
+        delta = jnp.where(li[:, None] >= li[None, :],
+                          g[..., :, None] - g[..., None, :], -jnp.inf)
+        gamma = jnp.exp(delta)
+        w = scores * gamma * dth[..., None, :]       # (B,NC,L,L)
+        y = jnp.einsum("bclm,bcmp->bclp", w, xh.astype(jnp.float32))
+
+        # chunk summaries: U_c = B^T (e^{gtot-g} dt x)   (B,NC,N,P)
+        xw = xh.astype(jnp.float32) * (jnp.exp(gtot[..., None] - g) * dth)[..., None]
+        u = jnp.einsum("bcln,bclp->bcnp", bc, xw)
+        decay = jnp.exp(gtot)                        # (B,NC)
+
+        def chunk_scan(state, du):
+            dcy, u_c = du
+            state = state * dcy[:, None, None] + u_c
+            return state, state
+
+        s0 = jnp.zeros((b, n, p), jnp.float32)
+        final, states = jax.lax.scan(
+            chunk_scan, s0, (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(u, 1, 0)))
+        states = jnp.moveaxis(states, 0, 1)          # (B,NC,N,P) post-chunk
+        prev = jnp.concatenate([jnp.zeros_like(states[:, :1]),
+                                states[:, :-1]], axis=1)
+        y = y + jnp.einsum("bcln,bcnp->bclp", cc, prev) * jnp.exp(g)[..., None]
+        return carry, (y, final)
+
+    _, (ys, finals) = jax.lax.scan(
+        per_head, None,
+        (jnp.moveaxis(xc, 3, 0), jnp.moveaxis(dtc, 3, 0), a.astype(jnp.float32)))
+    y = jnp.moveaxis(ys, 0, 3).reshape(b, s, h, p)   # (B,S,H,P)
+    return y.astype(x.dtype), jnp.moveaxis(finals, 0, 1)  # (B,H,N,P)
+
+
+# ---------------------------------------------------------------------------
+# Mixer (full block): in_proj -> conv -> SSD -> gate -> norm -> out_proj
+# ---------------------------------------------------------------------------
+def _in_proj(x, p, cfg, constrain=None):
+    z = dense(x, p["wz"])
+    xi = dense(x, p["wx"])
+    bm = dense(x, p["wb"])
+    cm = dense(x, p["wc"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wdt"])
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    if constrain is not None and x.ndim == 3:
+        # pin shardings so GSPMD never invents cross-axis layouts for the
+        # SSM streams (multi-pod "involuntary full remat" otherwise)
+        z = constrain(z, ("batch", "seq", "ff"))
+        xi = constrain(xi, ("batch", "seq", "ff"))
+        bm = constrain(bm, ("batch", "seq", None))
+        cm = constrain(cm, ("batch", "seq", None))
+        dt = constrain(dt, ("batch", "seq", None))
+    return z, xi, bm, cm, dt, a
+
+
+def ssm_mixer_train(x, p, cfg, constrain, chunk: int = 0
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, s, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    chunk = chunk or getattr(cfg, "ssd_chunk", 128)
+    z, xi, bm, cm, dt, a = _in_proj(x, p, cfg, constrain)
+    conv_in = jnp.concatenate([xi, bm, cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"]).astype(jnp.float32)
+                           ).astype(x.dtype)
+    xi, bm, cm = jnp.split(conv_out, [di, di + n], axis=-1)
+    xi = constrain(xi, ("batch", "seq", "ff"))
+
+    xh = xi.reshape(b, s, h, ph)
+    y, final_state = ssd_chunked(xh, dt, a, bm, cm, chunk)
+    y = y + xh.astype(jnp.float32) * p["skip_d"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["norm"])
+    out = dense(y, p["out"])
+    cache = {"conv": conv_in[:, -(cfg.conv_width - 1):, :],
+             "state": final_state}
+    return out, cache
+
+
+def ssm_mixer_decode(x, p, cfg, cache, constrain
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x (B,1,d); cache {conv (B,K-1,di+2n), state (B,H,N,P)}."""
+    b = x.shape[0]
+    di, n, h, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xi, bm, cm, dt, a = _in_proj(x, p, cfg)
+    conv_in = jnp.concatenate([xi, bm, cm], axis=-1)     # (B,1,C)
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,K,C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32)))
+    xi, bm, cm = jnp.split(conv_out.astype(x.dtype), [di, di + n], axis=-1)
+
+    xh = xi.reshape(b, h, ph).astype(jnp.float32)
+    dt1 = dt[:, 0]                                       # (B,H)
+    decay = jnp.exp(dt1 * a[None, :])                    # (B,H)
+    upd = jnp.einsum("bn,bhp,bh->bhnp", bm.astype(jnp.float32), xh, dt1)
+    state = cache["state"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cm.astype(jnp.float32), state)
+    y = y + xh * p["skip_d"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["norm"])
+    out = dense(y, p["out"])
+    return out, {"conv": window[:, 1:], "state": state}
+
+
+def init_ssm_cache(cfg, batch: int, dtype, as_specs: bool = False):
+    l = cfg.n_layers
+    shapes = {
+        "conv": ((l, batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                 dtype),
+        "state": ((l, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                  jnp.float32),
+    }
+    if as_specs:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def ssm_cache_logical():
+    return {
+        "conv": (None, "batch", None, "ff"),
+        "state": (None, "batch", None, None, None),
+    }

@@ -1,0 +1,340 @@
+"""Model assembly for every assigned architecture (DESIGN.md §5).
+
+One homogeneous pre-norm decoder stack covers the whole pool; the block body
+dispatches on config flags:
+
+    dense  : attention + (Sw)iGLU/GELU MLP
+    moe    : attention + sort-dispatch MoE FFN
+    ssm    : Mamba-2 mixer only (no MLP)
+    hybrid : parallel attention + SSM heads (Hymba), averaged, + MLP
+    vlm    : dense + M-RoPE, embeddings supplied by the (stubbed) frontend
+    audio  : dense over EnCodec frame embeddings (stubbed frontend)
+
+Weights are stacked along a leading layer axis and the stack is a single
+``lax.scan`` (bounded HLO size — one compiled block regardless of depth);
+``jax.checkpoint`` wraps the block for rematerialization in training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import dense, he_init, rms_norm
+
+__all__ = ["init_params", "logical_axes", "forward_train", "loss_fn",
+           "prefill", "decode_step", "init_cache", "cache_logical",
+           "pick_chunk"]
+
+
+def pick_chunk(s: int, target: int = 1024) -> int:
+    c = min(target, s)
+    while s % c:
+        c //= 2
+    return max(c, 1)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def _mlp_init(cfg, key, dtype):
+    l, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wu": he_init(ks[1], (l, d, f), d, dtype),
+         "wd": he_init(ks[2], (l, f, d), f, dtype)}
+    if cfg.mlp_gated:
+        p["wg"] = he_init(ks[0], (l, d, f), d, dtype)
+    return p
+
+
+def _mlp_logical(cfg):
+    p = {"wu": (None, "w_embed", "ff"), "wd": (None, "ff", "w_embed")}
+    if cfg.mlp_gated:
+        p["wg"] = (None, "w_embed", "ff")
+    return p
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    l, d, v = cfg.n_layers, cfg.d_model, cfg.vocab
+    params: Dict[str, Any] = {
+        "embed": he_init(keys[0], (v, d), d, dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    blocks: Dict[str, Any] = {"ln1": jnp.ones((l, d), dtype)}
+    if cfg.has_attention:
+        blocks["attn"] = attn.init_attn_params(cfg, keys[1], dtype)
+    if cfg.has_ssm:
+        blocks["ssm"] = ssm_mod.init_ssm_params(cfg, keys[2], dtype)
+    if cfg.d_ff > 0:
+        blocks["ln2"] = jnp.ones((l, d), dtype)
+        if cfg.is_moe:
+            blocks["moe"] = moe_mod.init_moe_params(cfg, keys[3], dtype)
+        else:
+            blocks["mlp"] = _mlp_init(cfg, keys[3], dtype)
+    params["blocks"] = blocks
+    if not cfg.tie_embeddings:
+        params["lm_head"] = he_init(keys[4], (d, v), d, dtype)
+    if cfg.meta_tokens:
+        params["meta"] = he_init(keys[5], (cfg.meta_tokens, d), d, dtype)
+    return params
+
+
+def logical_axes(cfg) -> Dict[str, Any]:
+    blocks: Dict[str, Any] = {"ln1": (None, None)}
+    if cfg.has_attention:
+        blocks["attn"] = attn.attn_logical(cfg)
+    if cfg.has_ssm:
+        blocks["ssm"] = ssm_mod.ssm_logical(cfg)
+    if cfg.d_ff > 0:
+        blocks["ln2"] = (None, None)
+        if cfg.is_moe:
+            blocks["moe"] = moe_mod.moe_logical(cfg)
+        else:
+            blocks["mlp"] = _mlp_logical(cfg)
+    out = {"embed": ("vocab", "w_embed"), "final_norm": (None,),
+           "blocks": blocks}
+    # tie/meta handled dynamically to mirror init_params' structure
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ("w_embed", "vocab")
+    if cfg.meta_tokens:
+        out["meta"] = (None, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def _mlp_apply(x, p, cfg, constrain):
+    if cfg.mlp_gated:
+        h = (jax.nn.silu(dense(x, p["wg"]).astype(jnp.float32)).astype(x.dtype)
+             * dense(x, p["wu"]))
+    else:
+        h = jax.nn.gelu(dense(x, p["wu"]).astype(jnp.float32)).astype(x.dtype)
+    h = constrain(h, ("batch", "seq", "ff"))
+    return dense(h, p["wd"])
+
+
+def _block_train(x, pl, cfg, positions, constrain, chunk):
+    h = rms_norm(x, pl["ln1"])
+    caches = {}
+    mix = 0.0
+    n_paths = 0
+    if cfg.has_attention:
+        a_out, kv = attn.attention_train(h, pl["attn"], cfg, positions,
+                                         constrain, q_chunk=chunk)
+        mix = mix + a_out
+        caches["attn"] = kv
+        n_paths += 1
+    if cfg.has_ssm:
+        s_out, sc = ssm_mod.ssm_mixer_train(h, pl["ssm"], cfg, constrain)
+        mix = mix + s_out
+        caches["ssm"] = sc
+        n_paths += 1
+    x = x + mix / n_paths
+    if cfg.d_ff > 0:
+        h2 = rms_norm(x, pl["ln2"])
+        if cfg.is_moe:
+            f = moe_mod.moe_ffn(h2, pl["moe"], cfg, constrain)
+        else:
+            f = _mlp_apply(h2, pl["mlp"], cfg, constrain)
+        x = x + f
+    x = constrain(x, ("batch", "seq", None))
+    return x, caches
+
+
+def _block_decode(x, pl, cfg, cache, constrain):
+    h = rms_norm(x, pl["ln1"])
+    new_cache = {}
+    mix = 0.0
+    n_paths = 0
+    if cfg.has_attention:
+        a_out, kv = attn.attention_decode(h, pl["attn"], cfg, cache["attn"],
+                                          constrain)
+        mix = mix + a_out
+        new_cache["attn"] = kv
+        n_paths += 1
+    if cfg.has_ssm:
+        s_out, sc = ssm_mod.ssm_mixer_decode(h, pl["ssm"], cfg, cache["ssm"],
+                                             constrain)
+        mix = mix + s_out
+        new_cache["ssm"] = sc
+        n_paths += 1
+    x = x + mix / n_paths
+    if cfg.d_ff > 0:
+        h2 = rms_norm(x, pl["ln2"])
+        if cfg.is_moe:
+            f = moe_mod.moe_ffn(h2, pl["moe"], cfg, constrain)
+        else:
+            f = _mlp_apply(h2, pl["mlp"], cfg, constrain)
+        x = x + f
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, cfg, batch, constrain):
+    if cfg.frontend == "embed_stub":
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = params["embed"][batch["tokens"]]
+    b, s = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(params["meta"][None], (b, cfg.meta_tokens,
+                                                       x.shape[-1]))
+        x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+        if positions.ndim == 2:
+            mpos = jnp.arange(cfg.meta_tokens, dtype=jnp.int32)[None, :].repeat(b, 0)
+            positions = jnp.concatenate([mpos, positions + cfg.meta_tokens], 1)
+        else:  # (B,3,S)
+            mpos = jnp.arange(cfg.meta_tokens, dtype=jnp.int32)[None, None, :]
+            mpos = jnp.broadcast_to(mpos, (b, 3, cfg.meta_tokens))
+            positions = jnp.concatenate([mpos, positions + cfg.meta_tokens], -1)
+    x = constrain(x, ("batch", "seq", None))
+    return x, positions
+
+
+def _lm_head(x, params, cfg, constrain):
+    if cfg.tie_embeddings:
+        logits = jax.lax.dot_general(
+            x, params["embed"], (((x.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        logits = jax.lax.dot_general(
+            x, params["lm_head"], (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    logical = ("batch",) + ("seq",) * (logits.ndim - 2) + ("vocab",)
+    return constrain(logits, logical)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def forward_train(params, cfg, batch, constrain, remat: bool = True,
+                  collect_cache: bool = False, logits_last_only: bool = False):
+    """Full-sequence forward. Returns (logits fp32 (B,S,V), caches|None).
+    ``logits_last_only`` skips the LM head for all but the final position
+    (prefill: a ~2·T·d·V FLOP and O(T·V) memory saving)."""
+    x, positions = _embed_inputs(params, cfg, batch, constrain)
+    chunk = pick_chunk(x.shape[1])
+
+    def body(x, pl):
+        y, caches = _block_train(x, pl, cfg, positions, constrain, chunk)
+        return y, (caches if collect_cache else None)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"])
+    if cfg.meta_tokens:
+        x = x[:, cfg.meta_tokens:]
+    if logits_last_only:
+        x = x[:, -1:]
+    logits = _lm_head(x, params, cfg, constrain)
+    return logits, caches
+
+
+def loss_fn(params, cfg, batch, constrain, remat: bool = True):
+    logits, _ = forward_train(params, cfg, batch, constrain, remat=remat)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def prefill(params, cfg, batch, constrain, seq_len_cache: Optional[int] = None):
+    """Prefill: forward + publish decode caches.
+
+    Returns (last-token logits (B,V), cache pytree with stacked L axis)."""
+    logits, caches = forward_train(params, cfg, batch, constrain, remat=False,
+                                   collect_cache=True, logits_last_only=True)
+    b = logits.shape[0]
+    s_in = logits.shape[1]
+    out = {}
+    if cfg.has_attention:
+        kv = caches["attn"]                       # k,v: (L,B,S',Hkv,Dh)
+        s_tot = kv["k"].shape[2]
+        w = attn.cache_window(cfg, max(seq_len_cache or s_tot, s_tot))
+        # Ring invariant shared with decode: abs position p lives in slot
+        # p % w. The ring layout of the last-w slice is a CYCLIC SHIFT, so
+        # use static slice + roll — a gather along the model-sharded seq
+        # axis would force GSPMD to replicate the stacked cache (§Perf log).
+        slots = jnp.arange(w, dtype=jnp.int32)
+        if w <= s_tot:
+            r = (s_tot - w) % w
+            k = kv["k"][:, :, s_tot - w:]
+            v = kv["v"][:, :, s_tot - w:]
+            if r:
+                k = jnp.roll(k, r, axis=2)
+                v = jnp.roll(v, r, axis=2)
+            abs_pos = s_tot - w + (slots - r) % w
+        else:  # decode headroom beyond the prompt: pad empty slots
+            pad = [(0, 0), (0, 0), (0, w - s_tot), (0, 0), (0, 0)]
+            k = jnp.pad(kv["k"], pad)
+            v = jnp.pad(kv["v"], pad)
+            abs_pos = jnp.where(slots < s_tot, slots, -1)
+        lyr, bb = k.shape[0], k.shape[1]
+        out["attn"] = {
+            "k": k, "v": v,
+            "abs_pos": jnp.broadcast_to(abs_pos, (lyr, bb, w)).astype(jnp.int32),
+            "pos": jnp.full((lyr, bb), s_tot, jnp.int32),
+        }
+    if cfg.has_ssm:
+        out["ssm"] = caches["ssm"]
+    return logits[:, -1], out
+
+
+def decode_step(params, cfg, batch, cache, constrain):
+    """One decode step. batch: {tokens (B,)} or {embeds (B, d)}.
+    Returns (logits (B,V), new cache)."""
+    if cfg.frontend == "embed_stub":
+        x = batch["embeds"][:, None, :].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = params["embed"][batch["tokens"]][:, None, :]
+    x = constrain(x, ("batch", None, None))
+
+    def body(x, pl_cache):
+        pl, lc = pl_cache
+        return _block_decode(x, pl, cfg, lc, constrain)
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = rms_norm(x, params["final_norm"])
+    logits = _lm_head(x[:, 0], params, cfg, constrain)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, seq_len: int, as_specs: bool = False):
+    dtype = jnp.dtype(cfg.dtype)
+    out = {}
+    if cfg.has_attention:
+        out["attn"] = attn.init_decode_cache(cfg, batch, seq_len, dtype,
+                                             as_specs=as_specs)
+    if cfg.has_ssm:
+        out["ssm"] = ssm_mod.init_ssm_cache(cfg, batch, dtype, as_specs=as_specs)
+    return out
+
+
+def cache_logical(cfg):
+    out = {}
+    if cfg.has_attention:
+        out["attn"] = attn.decode_cache_logical()
+    if cfg.has_ssm:
+        out["ssm"] = ssm_mod.ssm_cache_logical()
+    return out

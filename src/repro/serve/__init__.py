@@ -1,0 +1,4 @@
+"""Serving substrate: continuous-batching slot server (see server.py)."""
+from .server import SlotServer
+
+__all__ = ["SlotServer"]

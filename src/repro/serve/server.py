@@ -1,0 +1,4 @@
+"""Continuous-batching slot server (moved from launch/serve.py for reuse)."""
+from repro.launch.serve import SlotServer  # single source of truth
+
+__all__ = ["SlotServer"]

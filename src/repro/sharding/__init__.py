@@ -1,0 +1,44 @@
+"""Sharding: logical-axis rules + activation-constraint context.
+
+Model code calls ``constrain(x, logical_axes)`` everywhere; outside a mesh
+context that is the identity, inside ``use_rules(rules)`` it becomes a GSPMD
+``with_sharding_constraint`` resolved through the rule table. This keeps model
+code mesh-agnostic (smoke tests see no sharding at all).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from .rules import MeshRules, logical_to_spec, spec_tree
+
+__all__ = ["MeshRules", "logical_to_spec", "spec_tree", "use_rules",
+           "constrain", "current_rules"]
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[MeshRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[MeshRules]):
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def constrain(x, logical: Tuple[Optional[str], ...]):
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = logical_to_spec(rules, logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

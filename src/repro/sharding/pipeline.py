@@ -1,0 +1,70 @@
+"""GPipe-style pipeline parallelism over the ``pod`` mesh axis.
+
+The multi-pod mesh folds ``pod`` into data parallelism by default
+(DESIGN.md §4); this module provides the alternative mapping — pipeline
+stages across pods — as a composable shard_map program:
+
+* stage parameters are stacked on a leading axis sharded over ``pod``;
+* microbatches stream through the classic GPipe schedule
+  (M + S − 1 ticks for M microbatches over S stages);
+* activations hop stages via ``ppermute`` (the cross-pod DCI link — exactly
+  the transfer pipeline parallelism exists to amortize);
+* the last stage's outputs are returned to all pods with one ``psum``
+  (zeros elsewhere), which a caller can elide by keeping outputs sharded.
+
+Bubble fraction = (S−1)/(M+S−1) — reported by :func:`bubble_fraction` so
+launchers can size microbatch counts.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["gpipe", "bubble_fraction"]
+
+
+def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+    return (num_stages - 1) / (num_microbatches + num_stages - 1)
+
+
+def gpipe(stage_fn: Callable, mesh: Mesh, stage_axis: str = "pod"):
+    """Build a pipelined apply: ``f(stage_params, xs) -> ys``.
+
+    ``stage_params``: pytree with a leading stage axis (sharded over
+    ``stage_axis``); ``stage_fn(params_slice, x) -> y`` maps one microbatch
+    through ONE stage; ``xs``: (M, ...) microbatches (replicated in; the
+    schedule injects them at stage 0). Returns (M, ...) outputs.
+    """
+    s = mesh.shape[stage_axis]
+
+    def inner(params, xs):
+        # params leaves arrive as (1, ...) local stage slices
+        local = jax.tree_util.tree_map(lambda a: a[0], params)
+        idx = jax.lax.axis_index(stage_axis)
+        m = xs.shape[0]
+        state = jnp.zeros_like(xs[0])
+        outs = []
+        fwd = [(i, i + 1) for i in range(s - 1)]
+        for t in range(m + s - 1):
+            mb = jnp.minimum(t, m - 1)
+            inject = (idx == 0) & (t < m)
+            x_in = jnp.where(inject, xs[mb], state)
+            y = stage_fn(local, x_in)
+            # emit from the last stage during its active window
+            emit = (idx == s - 1) & (t >= s - 1)
+            outs.append(jnp.where(emit, y, jnp.zeros_like(y)))
+            if s > 1:
+                state = jax.lax.ppermute(y, stage_axis, fwd)
+        ys = jnp.stack(outs[s - 1:])                 # (M, ...)
+        return jax.lax.psum(ys, stage_axis)          # nonzero only at last
+
+    other = tuple(a for a in mesh.axis_names if a != stage_axis)
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(stage_axis), P(*([None]))),
+        out_specs=P(),
+        check_vma=False,
+    )

@@ -1,0 +1,100 @@
+"""Logical-axis sharding rules (GSPMD partitioning for the production mesh).
+
+Weights and activations carry *logical* axis names; a rule table maps them to
+mesh axes per mesh flavour:
+
+    batch   -> ('pod', 'data')   data parallel (pod folds into DP by default)
+    fsdp    -> ('pod', 'data')   parameter/optimizer sharding (ZeRO-3 style)
+    heads   -> 'model'           tensor parallel attention
+    kv      -> 'model'           TP for KV projections (replicated if indivisible)
+    ff      -> 'model'           TP for MLP hidden
+    vocab   -> 'model'           TP for embedding/LM head
+    experts -> 'data'            expert parallel (falls back per-arch)
+    seq     -> None | 'model'    sequence parallel (optional, §Perf lever)
+
+``logical_to_spec`` resolves a tuple of logical names into a PartitionSpec,
+dropping any axis whose dimension is not divisible by its mesh extent
+(GSPMD would pad; we prefer replication for correct roofline accounting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["MeshRules", "logical_to_spec", "spec_tree"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Rule table bound to a concrete mesh."""
+
+    mesh: Mesh
+    seq_sharding: bool = False     # sequence parallelism for the residual stream
+    expert_axis: str = "data"
+
+    def axis_for(self, logical: Optional[str]):
+        m = self.mesh
+        has_pod = "pod" in m.axis_names
+        table = {
+            None: None,
+            "batch": ("pod", "data") if has_pod else ("data",),
+            "fsdp": ("pod", "data") if has_pod else ("data",),
+            "w_embed": ("pod", "data") if has_pod else ("data",),
+            "heads": ("model",),
+            "kv": ("model",),
+            "kv_seq": ("model",),
+            "ff": ("model",),
+            "vocab": ("model",),
+            "experts": (self.expert_axis,) if self.expert_axis else None,
+            "moe_cap": ("pod", "data") if has_pod else ("data",),
+            "seq": ("model",) if self.seq_sharding else None,
+            "stage": ("pod",) if has_pod else None,
+        }
+        return table.get(logical, None)
+
+    def extent(self, axes) -> int:
+        if axes is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+
+def logical_to_spec(rules: MeshRules, logical: Tuple[Optional[str], ...],
+                    shape: Tuple[int, ...]) -> P:
+    """Logical axes + concrete shape -> PartitionSpec with divisibility checks."""
+    assert len(logical) == len(shape), (logical, shape)
+    used = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        axes = rules.axis_for(name)
+        if axes is None:
+            out.append(None)
+            continue
+        axes = tuple(a for a in axes if a not in used)
+        ext = rules.extent(axes)
+        if ext <= 1 or dim % ext != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else axes[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_tree(rules: MeshRules, logical_tree, shape_tree):
+    """Map parallel trees of logical-axis tuples and shapes to PartitionSpecs."""
+    import jax
+
+    return jax.tree_util.tree_map(
+        lambda lg, shp: logical_to_spec(rules, lg, tuple(shp)),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def named(rules: MeshRules, spec: P) -> NamedSharding:
+    return NamedSharding(rules.mesh, spec)

@@ -1,0 +1,180 @@
+"""Step builders: train (grad-accum microbatching), prefill, decode.
+
+Each builder returns ``(fn, in_shardings, out_shardings, specs)`` ready for
+``jax.jit(fn, in_shardings=…, out_shardings=…).lower(*specs).compile()`` —
+the exact path the multi-pod dry-run exercises. Input ShapeDtypeStructs are
+produced by :func:`input_specs` (nothing is allocated).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.sharding import MeshRules, constrain, logical_to_spec, use_rules
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["input_specs", "param_shardings", "build_train_step",
+           "build_prefill_step", "build_decode_step"]
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; the dry-run's only "data")
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        if cfg.frontend == "embed_stub":
+            batch = {"embeds": jax.ShapeDtypeStruct((b, cfg.d_model), dt)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+        return batch
+    if cfg.frontend == "embed_stub":
+        batch = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
+        if cfg.mrope:
+            batch["positions"] = jax.ShapeDtypeStruct((b, 3, s), i32)
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    return batch
+
+
+def _batch_spec(rules: MeshRules, batch) -> Dict[str, NamedSharding]:
+    out = {}
+    for k, v in batch.items():
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(rules.mesh, logical_to_spec(rules, logical, v.shape))
+    return out
+
+
+def param_shardings(cfg: ArchConfig, rules: MeshRules):
+    """(param ShapeDtypeStructs, param NamedShardings) without allocation."""
+    shapes = jax.eval_shape(functools.partial(tf.init_params, cfg),
+                            jax.random.PRNGKey(0))
+    logical = tf.logical_axes(cfg)
+
+    def to_sharding(lg, shp):
+        return NamedSharding(rules.mesh, logical_to_spec(rules, lg, tuple(shp.shape)))
+
+    is_lg = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    shardings = jax.tree_util.tree_map(to_sharding, logical, shapes, is_leaf=is_lg)
+    return shapes, shardings
+
+
+def _opt_shardings(rules: MeshRules, p_shapes, p_shardings):
+    opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+    rep = NamedSharding(rules.mesh, P())
+    return opt_shapes, {"mu": p_shardings, "nu": p_shardings, "step": rep}
+
+
+# ---------------------------------------------------------------------------
+# Train step (grad accumulation over microbatches)
+# ---------------------------------------------------------------------------
+def build_train_step(cfg: ArchConfig, shape: ShapeConfig, rules: MeshRules,
+                     opt_cfg: AdamWConfig = AdamWConfig(),
+                     microbatches: int = 8, remat: bool = True,
+                     accum_dtype: Optional[str] = None):
+    assert shape.global_batch % microbatches == 0
+    mb = shape.global_batch // microbatches
+    acc_dt = jnp.dtype(accum_dtype or cfg.dtype)
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules):
+            def split(v):
+                return v.reshape(microbatches, mb, *v.shape[1:])
+
+            mbatches = jax.tree_util.tree_map(split, batch)
+
+            def mb_grad(carry, mb_batch):
+                loss, grads = jax.value_and_grad(tf.loss_fn)(
+                    params, cfg, mb_batch, constrain, remat=remat)
+                acc_loss, acc_g = carry
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(acc_dt) / microbatches, acc_g, grads)
+                return (acc_loss + loss / microbatches, acc_g), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (loss, grads), _ = jax.lax.scan(mb_grad, (jnp.zeros((), jnp.float32),
+                                                      zero_g), mbatches)
+            new_params, new_opt, metrics = adamw_update(grads, opt_state,
+                                                        params, opt_cfg)
+            metrics["loss"] = loss
+            return new_params, new_opt, metrics
+
+    p_shapes, p_sh = param_shardings(cfg, rules)
+    o_shapes, o_sh = _opt_shardings(rules, p_shapes, p_sh)
+    batch = input_specs(cfg, shape)
+    b_sh = _batch_spec(rules, batch)
+    rep = NamedSharding(rules.mesh, P())
+    in_sh = (p_sh, o_sh, b_sh)
+    out_sh = (p_sh, o_sh, {"loss": rep, "grad_norm": rep, "lr": rep})
+    specs = (p_shapes, o_shapes, batch)
+    return train_step, in_sh, out_sh, specs
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode steps
+# ---------------------------------------------------------------------------
+def build_prefill_step(cfg: ArchConfig, shape: ShapeConfig, rules: MeshRules):
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            return tf.prefill(params, cfg, batch, constrain,
+                              seq_len_cache=shape.seq_len)
+
+    p_shapes, p_sh = param_shardings(cfg, rules)
+    batch = input_specs(cfg, shape)
+    b_sh = _batch_spec(rules, batch)
+    cache_sh = _cache_shardings(cfg, shape, rules)
+    rep = NamedSharding(rules.mesh, P())
+    logits_sh = NamedSharding(
+        rules.mesh, logical_to_spec(rules, ("batch", "vocab"),
+                                    (shape.global_batch, cfg.vocab)))
+    in_sh = (p_sh, b_sh)
+    out_sh = (logits_sh, cache_sh)
+    specs = (p_shapes, batch)
+    return prefill_step, in_sh, out_sh, specs
+
+
+def _cache_shardings(cfg, shape, rules: MeshRules):
+    cache_specs = tf.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                as_specs=True)
+    logical = tf.cache_logical(cfg)
+
+    def to_sh(lg, shp):
+        return NamedSharding(rules.mesh, logical_to_spec(rules, lg, tuple(shp.shape)))
+
+    is_lg = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree_util.tree_map(to_sh, logical, cache_specs, is_leaf=is_lg)
+
+
+def build_decode_step(cfg: ArchConfig, shape: ShapeConfig, rules: MeshRules):
+    """One-token decode against a seq_len-deep cache (the decode_* cells)."""
+
+    def decode_fn(params, cache, batch):
+        with use_rules(rules):
+            return tf.decode_step(params, cfg, batch, cache, constrain)
+
+    p_shapes, p_sh = param_shardings(cfg, rules)
+    cache_specs = tf.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                as_specs=True)
+    cache_sh = _cache_shardings(cfg, shape, rules)
+    batch = input_specs(cfg, shape)
+    b_sh = _batch_spec(rules, batch)
+    logits_sh = NamedSharding(
+        rules.mesh, logical_to_spec(rules, ("batch", "vocab"),
+                                    (shape.global_batch, cfg.vocab)))
+    in_sh = (p_sh, cache_sh, b_sh)
+    out_sh = (logits_sh, cache_sh)
+    specs = (p_shapes, cache_specs, batch)
+    return decode_fn, in_sh, out_sh, specs

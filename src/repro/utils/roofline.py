@@ -1,0 +1,90 @@
+"""Roofline analysis from compiled dry-run artifacts (DESIGN.md §7).
+
+Terms (seconds) per (arch × shape × mesh), TPU v5e constants:
+
+    compute_s    = HLO_FLOPs  / (chips · 197e12 bf16 FLOP/s)
+    memory_s     = HLO_bytes  / (chips · 819e9 B/s HBM)
+    collective_s = coll_bytes / (chips · 50e9 B/s per ICI link)
+
+``cost_analysis`` provides FLOPs/bytes; collective bytes are parsed from the
+optimized HLO text by summing the result-shape sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12     # bf16 per chip, TPU v5e
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `  %x = (bf16[8,128]{1,0}, f32[4]{0}) all-reduce(...)` or plain shape
+_INSTR_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s*"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")[\.\s(]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(expr: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(expr):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective op kind over the HLO module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for m in _INSTR_RE.finditer(hlo_text):
+        out[m.group("op")] += _shape_bytes(m.group("shape"))
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
+                   chips: int) -> Dict[str, float]:
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = bytes_accessed / (chips * HBM_BW)
+    collective_s = coll_bytes / (chips * ICI_BW)
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    total = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": total,
+        "compute_fraction": compute_s / total if total > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, shape, per_step_tokens: Optional[int] = None) -> float:
+    """MODEL_FLOPS = 6·N(_active)·D for train; 2·N·D forward-only."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

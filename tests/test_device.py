@@ -1,0 +1,128 @@
+"""Device-resident GLIN: snapshot probing and batched query vs host oracle,
+plus the LSM delta-buffer manager under a live update stream."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import geometry as geom
+from repro.core.datasets import generate, make_query_windows
+from repro.core.delta import SnapshotManager
+from repro.core.device import batch_probe, batch_query, snapshot_from_host
+from repro.core.index import GLIN, GLINConfig
+from repro.core.zorder import mbr_to_zinterval_np, split_hilo_np
+
+
+def _fp32_oracle(gs, w, relation):
+    verts32 = gs.verts.astype(np.float32)
+    if relation == "contains":
+        m = geom.rect_contains_geoms(w, verts32, gs.nverts)
+    else:
+        m = geom.rect_intersects_geoms(w, verts32, gs.nverts, gs.kinds)
+    return np.nonzero(m)[0]
+
+
+@pytest.mark.parametrize("name", ["uniform", "cluster"])
+def test_probe_matches_host_lower_bound(name):
+    gs = generate(name, 5000, seed=3)
+    g = GLIN.build(gs, GLINConfig(piece_limitation=300))
+    s = snapshot_from_host(g)
+    keys, _, _, _ = g.all_leaf_arrays()
+    rng = np.random.default_rng(0)
+    # present keys, absent keys, boundary keys
+    probes = np.concatenate([
+        keys[rng.integers(0, len(keys), 200)],
+        rng.integers(0, int(keys[-1]) + 2, 200),
+        keys[:3] - 1, keys[-3:] + 1,
+    ]).astype(np.int64)
+    hi, lo = split_hilo_np(probes)
+    got = np.asarray(batch_probe(s, jnp.asarray(hi), jnp.asarray(lo)))
+    ref = np.searchsorted(keys, probes, side="left")
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("relation", ["contains", "intersects"])
+def test_batch_query_matches_fp32_oracle(relation):
+    gs = generate("cluster", 8000, seed=1)
+    g = GLIN.build(gs, GLINConfig(piece_limitation=400))
+    s = snapshot_from_host(g)
+    wins = make_query_windows(gs, 0.005, 6, seed=4).astype(np.float32)
+    hits, counts = batch_query(
+        s, jnp.asarray(wins), jnp.asarray(gs.verts.astype(np.float32)),
+        jnp.asarray(gs.nverts), jnp.asarray(gs.kinds.astype(np.int32)),
+        jnp.asarray(gs.mbrs.astype(np.float32)), relation=relation, cap=8192)
+    hits, counts = np.asarray(hits), np.asarray(counts)
+    assert (counts >= 0).all(), "unexpected cap overflow"
+    for qi, w in enumerate(wins):
+        got = np.sort(hits[qi][hits[qi] >= 0])
+        np.testing.assert_array_equal(got, _fp32_oracle(gs, w, relation))
+
+
+def test_cap_overflow_is_signalled():
+    gs = generate("uniform", 4000, seed=2)
+    g = GLIN.build(gs, GLINConfig(piece_limitation=200))
+    s = snapshot_from_host(g)
+    w = np.array([[0.0, 0.0, 1.0, 1.0]], np.float32)  # whole domain
+    _, counts = batch_query(
+        s, jnp.asarray(w), jnp.asarray(gs.verts.astype(np.float32)),
+        jnp.asarray(gs.nverts), jnp.asarray(gs.kinds.astype(np.int32)),
+        jnp.asarray(gs.mbrs.astype(np.float32)), relation="contains", cap=256)
+    assert int(counts[0]) < 0
+
+
+def test_snapshot_manager_stream():
+    gs = generate("cluster", 3000, seed=4)
+    g = GLIN.build(gs, GLINConfig(piece_limitation=150))
+    mgr = SnapshotManager(g, refresh_threshold=120)
+    rng = np.random.default_rng(7)
+    wins = make_query_windows(gs, 0.01, 2, seed=8)
+    for step in range(300):
+        if rng.random() < 0.6:
+            c = rng.uniform(0.1, 0.9, 2)
+            ang = np.sort(rng.uniform(0, 2 * np.pi, 12))
+            verts = np.stack([c[0] + 3e-4 * np.cos(ang),
+                              c[1] + 3e-4 * np.sin(ang)], -1)
+            mgr.insert(verts, 12, 0)
+        else:
+            live = np.nonzero(g._live_mask())[0]
+            mgr.delete(int(rng.choice(live)))
+        if step % 60 == 17:
+            for rel in ("contains", "intersects"):
+                res = mgr.query_device(wins, rel, cap=8192)
+                live = g._live_mask()
+                for qi, r in enumerate(res):
+                    ref = _fp32_oracle(g.gs, wins[qi].astype(np.float32), rel)
+                    ref = ref[live[ref]]
+                    np.testing.assert_array_equal(r, np.sort(ref))
+    assert mgr.refresh_count >= 1
+
+
+def test_two_stage_equals_one_stage():
+    """exact_budget path must return identical results when nothing drops."""
+    gs = generate("cluster", 6000, seed=6)
+    g = GLIN.build(gs, GLINConfig(piece_limitation=300))
+    s = snapshot_from_host(g)
+    wins = make_query_windows(gs, 0.002, 6, seed=7).astype(np.float32)
+    args = (s, jnp.asarray(wins), jnp.asarray(gs.verts.astype(np.float32)),
+            jnp.asarray(gs.nverts), jnp.asarray(gs.kinds.astype(np.int32)),
+            jnp.asarray(gs.mbrs.astype(np.float32)))
+    for rel in ("contains", "intersects"):
+        h1, c1 = batch_query(*args, relation=rel, cap=8192)
+        h2, c2 = batch_query(*args, relation=rel, cap=8192, exact_budget=1024)
+        assert (np.asarray(c1) >= 0).all() and (np.asarray(c2) >= 0).all()
+        for qi in range(wins.shape[0]):
+            a = np.sort(np.asarray(h1[qi])[np.asarray(h1[qi]) >= 0])
+            b = np.sort(np.asarray(h2[qi])[np.asarray(h2[qi]) >= 0])
+            np.testing.assert_array_equal(a, b)
+
+
+def test_two_stage_budget_overflow_signalled():
+    gs = generate("uniform", 4000, seed=2)
+    g = GLIN.build(gs, GLINConfig(piece_limitation=200))
+    s = snapshot_from_host(g)
+    w = np.array([[0.0, 0.0, 1.0, 1.0]], np.float32)  # everything passes MBR
+    _, counts = batch_query(
+        s, jnp.asarray(w), jnp.asarray(gs.verts.astype(np.float32)),
+        jnp.asarray(gs.nverts), jnp.asarray(gs.kinds.astype(np.int32)),
+        jnp.asarray(gs.mbrs.astype(np.float32)), relation="contains",
+        cap=8192, exact_budget=128)
+    assert int(counts[0]) < 0

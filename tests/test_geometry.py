@@ -1,0 +1,81 @@
+"""Exact-predicate correctness via Monte-Carlo oracles (SAT vs sampling)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry as geom
+from repro.core.datasets import generate
+
+
+def _sample_poly_points(verts, nv, rng, n=64):
+    """Points inside a convex polygon via rejection-free barycentric mix."""
+    v = verts[:nv]
+    w = rng.dirichlet(np.ones(nv), size=n)
+    return w @ v
+
+
+def test_contains_matches_vertex_rule():
+    rng = np.random.default_rng(0)
+    gs = generate("uniform", 500, seed=1)
+    rect = np.array([0.2, 0.2, 0.8, 0.8])
+    got = geom.rect_contains_geoms(rect, gs.verts, gs.nverts)
+    for i in range(0, 500, 17):
+        nv = gs.nverts[i]
+        v = gs.verts[i, :nv]
+        expect = bool(((v[:, 0] >= rect[0]) & (v[:, 0] <= rect[2])
+                       & (v[:, 1] >= rect[1]) & (v[:, 1] <= rect[3])).all())
+        assert bool(got[i]) == expect
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_polygon_intersects_vs_sampling(seed):
+    rng = np.random.default_rng(seed)
+    gs = generate("uniform", 64, seed=seed % 97)
+    c = rng.uniform(0.2, 0.8, 2)
+    half = rng.uniform(0.001, 0.2, 2)
+    rect = np.array([c[0] - half[0], c[1] - half[1],
+                     c[0] + half[0], c[1] + half[1]])
+    got = geom.rect_intersects_polygons(rect, gs.verts, gs.nverts)
+    for i in range(64):
+        nv = gs.nverts[i]
+        pts = _sample_poly_points(gs.verts[i], nv, rng, 128)
+        pts = np.concatenate([pts, gs.verts[i, :nv]], axis=0)
+        any_in = bool(((pts[:, 0] >= rect[0]) & (pts[:, 0] <= rect[2])
+                       & (pts[:, 1] >= rect[1]) & (pts[:, 1] <= rect[3])).any())
+        if any_in:
+            # sampling found an intersection point -> SAT must agree
+            assert bool(got[i]), (i, rect)
+        if not bool(got[i]):
+            # SAT says disjoint -> no sampled point may fall inside
+            assert not any_in
+
+
+def test_polyline_intersects_segment_cases():
+    # segment crossing straight through the rectangle, endpoints outside
+    verts = np.zeros((1, 4, 2))
+    verts[0, 0] = (0.0, 0.5)
+    verts[0, 1] = (1.0, 0.5)
+    verts[0, 2:] = verts[0, 1]
+    nv = np.array([2], np.int32)
+    rect = np.array([0.4, 0.4, 0.6, 0.6])
+    assert bool(geom.rect_intersects_polylines(rect, verts, nv)[0])
+    # parallel segment far away
+    verts2 = verts.copy()
+    verts2[0, :, 1] = 0.9
+    assert not bool(geom.rect_intersects_polylines(rect, verts2, nv)[0])
+    # degenerate: both endpoints inside
+    verts3 = np.zeros((1, 4, 2))
+    verts3[0, :, :] = (0.5, 0.5)
+    assert bool(geom.rect_intersects_polylines(rect, verts3, nv)[0])
+
+
+def test_mbr_algebra():
+    a = np.array([0.0, 0.0, 1.0, 1.0])
+    b = np.array([0.5, 0.5, 1.5, 1.5])
+    c = np.array([1.1, 1.1, 1.2, 1.2])
+    assert bool(geom.mbr_intersects(a, b))
+    assert not bool(geom.mbr_intersects(a, c))
+    assert bool(geom.mbr_contains(a, np.array([0.2, 0.2, 0.8, 0.8])))
+    assert not bool(geom.mbr_contains(a, b))
+    # boundary touch counts as intersection (closed boundaries)
+    assert bool(geom.mbr_intersects(a, np.array([1.0, 1.0, 2.0, 2.0])))

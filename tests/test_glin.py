@@ -1,0 +1,162 @@
+"""GLIN correctness: query == brute force across datasets, relations,
+selectivities; leaf-MBR pruning effectiveness (Table III); maintenance."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.datasets import generate, make_query_windows
+from repro.core.index import GLIN, GLINConfig, QueryStats
+from repro.core.model import GLINModelConfig
+
+
+def _build(name, n=6000, pl=300, seed=0, **kw):
+    gs = generate(name, n, seed=seed)
+    return GLIN.build(gs, GLINConfig(piece_limitation=pl, **kw))
+
+
+@pytest.mark.parametrize("name", ["uniform", "diagonal", "cluster", "roads"])
+@pytest.mark.parametrize("relation", ["contains", "intersects"])
+def test_query_matches_bruteforce(name, relation):
+    g = _build(name)
+    for sel in (0.02, 0.002):
+        wins = make_query_windows(g.gs, sel, 4, seed=11)
+        for w in wins:
+            got = np.sort(g.query(w, relation))
+            ref = np.sort(g.query_bruteforce(w, relation))
+            np.testing.assert_array_equal(got, ref)
+
+
+def test_points_contains_only():
+    g = _build("points")
+    wins = make_query_windows(g.gs, 0.01, 4, seed=3)
+    for w in wins:
+        np.testing.assert_array_equal(np.sort(g.query(w, "contains")),
+                                      np.sort(g.query_bruteforce(w, "contains")))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_random_windows_never_miss(seed):
+    g = _build("cluster", n=2000, pl=100, seed=seed % 7)
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(0, 1, 2)
+    half = rng.uniform(1e-4, 0.4, 2)
+    w = np.array([c[0] - half[0], c[1] - half[1], c[0] + half[0], c[1] + half[1]])
+    for rel in ("contains", "intersects"):
+        np.testing.assert_array_equal(np.sort(g.query(w, rel)),
+                                      np.sort(g.query_bruteforce(w, rel)))
+
+
+def test_leaf_mbr_pruning_reduces_checks():
+    """§V-C / Table III: leaf MBRs must cut refinement work on clustered data."""
+    g = _build("cluster", n=20000, pl=500)
+    wins = make_query_windows(g.gs, 0.001, 10, seed=5)
+    tot_cand = tot_checked = 0
+    for w in wins:
+        stx = QueryStats()
+        g.query(w, "contains", stx)
+        tot_cand += stx.candidates
+        tot_checked += stx.checked
+    assert tot_checked < tot_cand, "leaf-MBR skip had no effect"
+
+
+def test_insert_delete_roundtrip():
+    g = _build("uniform", n=3000, pl=200)
+    rng = np.random.default_rng(4)
+    new_ids = []
+    for _ in range(300):
+        c = rng.uniform(0.05, 0.95, 2)
+        ang = np.sort(rng.uniform(0, 2 * np.pi, 12))
+        s = rng.uniform(1e-4, 1e-3)
+        verts = np.stack([c[0] + s * np.cos(ang), c[1] + s * np.sin(ang)], -1)
+        new_ids.append(g.insert(verts, 12, 0))
+    dels = rng.choice(3000, 400, replace=False)
+    for d in dels:
+        assert g.delete(int(d))
+    assert not g.delete(int(dels[0]))  # double delete fails
+    for w in make_query_windows(g.gs, 0.01, 4, seed=6):
+        for rel in ("contains", "intersects"):
+            np.testing.assert_array_equal(np.sort(g.query(w, rel)),
+                                          np.sort(g.query_bruteforce(w, rel)))
+
+
+def test_node_split_and_merge_paths():
+    cfg = GLINConfig(model=GLINModelConfig(max_leaf=32, fanout=8),
+                     piece_limitation=100)
+    gs = generate("uniform", 500, seed=9)
+    g = GLIN.build(gs, cfg)
+    n_leaves0 = len(g.leaves)
+    rng = np.random.default_rng(1)
+    # hammer one region to force splits
+    for _ in range(400):
+        c = np.array([0.5, 0.5]) + rng.normal(0, 1e-4, 2)
+        ang = np.sort(rng.uniform(0, 2 * np.pi, 6))
+        verts = np.stack([c[0] + 1e-5 * np.cos(ang), c[1] + 1e-5 * np.sin(ang)], -1)
+        g.insert(verts, 6, 0)
+    assert len(g.leaves) > n_leaves0, "no leaf split happened"
+    w = np.array([0.0, 0.0, 1.0, 1.0])
+    np.testing.assert_array_equal(np.sort(g.query(w, "contains")),
+                                  np.sort(g.query_bruteforce(w, "contains")))
+    # deletion storm to force merges
+    live = np.nonzero(g._live_mask())[0]
+    for d in live[: len(live) * 3 // 4]:
+        g.delete(int(d))
+    np.testing.assert_array_equal(np.sort(g.query(w, "contains")),
+                                  np.sort(g.query_bruteforce(w, "contains")))
+
+
+def test_stats_and_sizes():
+    g = _build("cluster", n=10000)
+    st_ = g.stats()
+    assert st_["records"] == 10000
+    assert st_["leaf_nodes"] >= 1 and st_["index_bytes"] > 0
+    assert st_["piecewise_bytes"] > 0
+    # the learned index must be far smaller than the raw data
+    assert st_["total_index_bytes"] < g.gs.nbytes() / 5
+
+
+def test_contains_subset_of_intersects():
+    g = _build("uniform", n=4000)
+    for w in make_query_windows(g.gs, 0.01, 4, seed=2):
+        c = set(g.query(w, "contains").tolist())
+        i = set(g.query(w, "intersects").tolist())
+        assert c.issubset(i)
+
+
+def test_knn_matches_bruteforce():
+    """Beyond-paper: KNN via expanding-window search (paper §XI future work)."""
+    from repro.core.index import knn
+    g = _build("cluster", n=4000, pl=200, seed=2)
+    gs = g.gs
+    rng = np.random.default_rng(3)
+    for _ in range(6):
+        p = rng.uniform(0.1, 0.9, 2)
+        for k in (1, 5, 20):
+            ids, d = knn(g, p, k)
+            # brute force point-to-MBR distances
+            m = gs.mbrs
+            dx = np.maximum(np.maximum(m[:, 0] - p[0], p[0] - m[:, 2]), 0.0)
+            dy = np.maximum(np.maximum(m[:, 1] - p[1], p[1] - m[:, 3]), 0.0)
+            dd = np.hypot(dx, dy)
+            ref = np.lexsort((np.arange(len(gs)), dd))[:k]
+            np.testing.assert_array_equal(np.sort(ids), np.sort(ref))
+            assert np.all(np.diff(d) >= -1e-12)
+
+
+def test_record_mbr_prefilter_is_transparent():
+    """Beyond-paper record-level MBR prefilter must not change results and
+    must reduce exact checks."""
+    gs = generate("roads", 6000, seed=5)
+    g0 = GLIN.build(gs, GLINConfig(piece_limitation=300))
+    import copy
+    g1 = GLIN.build(copy.deepcopy(gs), GLINConfig(piece_limitation=300,
+                                                  record_mbr_prefilter=True))
+    checked0 = checked1 = 0
+    for w in make_query_windows(gs, 0.005, 6, seed=8):
+        s0, s1 = QueryStats(), QueryStats()
+        r0 = np.sort(g0.query(w, "intersects", s0))
+        r1 = np.sort(g1.query(w, "intersects", s1))
+        np.testing.assert_array_equal(r0, r1)
+        checked0 += s0.checked
+        checked1 += s1.checked
+    assert checked1 <= checked0

@@ -1,0 +1,99 @@
+"""Piecewise augmentation function (paper §VIII): Algorithm-2 equivalence,
+the no-false-negative invariant, and maintenance semantics."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.piecewise import PiecewiseFunction
+
+interval = st.tuples(st.integers(0, 10**9), st.integers(0, 10**6))
+
+
+def _mk(data, pl):
+    zmin = np.array([a for a, _ in data], np.int64)
+    zmax = zmin + np.array([b for _, b in data], np.int64)
+    return zmin, zmax, PiecewiseFunction.build(zmin, zmax, pl)
+
+
+@given(st.lists(interval, min_size=1, max_size=200),
+       st.integers(1, 50), st.integers(0, 2 * 10**9))
+@settings(max_examples=60, deadline=None)
+def test_augment_equals_algorithm2(data, pl, zq):
+    _, _, pw = _mk(data, pl)
+    assert pw.augment(zq) == pw.augment_scan(zq)
+    assert pw.augment_batch(np.array([zq]))[0] == pw.augment_scan(zq)
+
+
+@given(st.lists(interval, min_size=1, max_size=200),
+       st.integers(1, 50), st.integers(0, 2 * 10**9))
+@settings(max_examples=60, deadline=None)
+def test_no_false_negatives(data, pl, zq):
+    """Lemma-2 support: every geometry with Zmax >= Zmin_Q must have its
+    Zmin covered by the augmented interval."""
+    zmin, zmax, pw = _mk(data, pl)
+    aug = pw.augment(zq)
+    qualifying = zmin[zmax >= zq]
+    if qualifying.size:
+        assert aug <= qualifying.min()
+    assert aug <= zq  # augmentation never shrinks the window
+
+
+def test_build_aggregates_match_paper_fig4():
+    # the paper's Figure 4 example, piece_limitation = 3
+    itv = [(1, 2), (2, 3), (4, 5), (3, 6), (5, 7), (3, 9), (8, 10), (0, 12),
+           (9, 12), (12, 14)]
+    zmin = np.array([a for a, _ in itv], np.int64)
+    zmax = np.array([b for _, b in itv], np.int64)
+    pw = PiecewiseFunction.build(zmin, zmax, 3)
+    np.testing.assert_array_equal(pw.zmax_end, [5, 9, 12, 14])
+    np.testing.assert_array_equal(pw.min_zmin, [1, 3, 0, 12])
+    np.testing.assert_array_equal(pw.sum_zmin, [7.0, 11.0, 17.0, 12.0])
+    np.testing.assert_array_equal(pw.count, [3, 3, 3, 1])
+
+
+def test_maintenance_preserves_invariant():
+    rng = np.random.default_rng(0)
+    zmin = rng.integers(0, 10**6, 500).astype(np.int64)
+    zmax = zmin + rng.integers(0, 10**4, 500).astype(np.int64)
+    pw = PiecewiseFunction.build(zmin, zmax, 20)
+    live = list(zip(zmin.tolist(), zmax.tolist()))
+    for step in range(400):
+        if rng.random() < 0.6 or not live:
+            a = int(rng.integers(0, 2 * 10**6))
+            b = a + int(rng.integers(0, 10**4))
+            pw.insert(a, b)
+            live.append((a, b))
+        else:
+            i = int(rng.integers(0, len(live)))
+            a, b = live.pop(i)
+            pw.delete(a, b)
+        if step % 37 == 0:
+            zq = int(rng.integers(0, 2 * 10**6))
+            aug = pw.augment(zq)
+            qual = [a for a, b in live if b >= zq]
+            if qual:
+                assert aug <= min(qual)
+
+
+def test_out_of_bound_insertions_create_pieces():
+    zmin = np.arange(100, 200, dtype=np.int64)
+    zmax = zmin + 5
+    pw = PiecewiseFunction.build(zmin, zmax, 10)
+    n0 = pw.num_pieces
+    # out-of-bound upper, pieces full -> new piece
+    pw.insert(10**6, 10**6 + 1)
+    assert pw.num_pieces == n0 + 1
+    # out-of-bound lower, pieces full -> prepended piece
+    pw.insert(0, 1)
+    assert pw.num_pieces == n0 + 2
+    assert int(pw.zmax_end[0]) == 1
+
+
+def test_deletion_removes_empty_piece_and_avg_diff():
+    zmin = np.arange(0, 30, dtype=np.int64)
+    zmax = zmin + 1
+    pw = PiecewiseFunction.build(zmin, zmax, 10)
+    assert pw.avg_diff() >= 0.0
+    n0 = pw.num_pieces
+    for i in range(10):  # empty the first piece
+        pw.delete(int(zmin[i]), int(zmax[i]))
+    assert pw.num_pieces == n0 - 1

@@ -1,0 +1,89 @@
+"""Z-order codec: roundtrip, limb consistency, the monotonic-ordering theorem
+(paper Thm 1) and interval covering (the property Lemmas 1/2 rest on)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import zorder as z
+
+coord = st.integers(min_value=0, max_value=(1 << 30) - 1)
+
+
+@given(st.lists(st.tuples(coord, coord), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_roundtrip_np(pts):
+    qx = np.array([p[0] for p in pts], np.int64)
+    qy = np.array([p[1] for p in pts], np.int64)
+    zz = z.morton_encode_np(qx, qy)
+    rx, ry = z.morton_decode_np(zz)
+    np.testing.assert_array_equal(rx, qx)
+    np.testing.assert_array_equal(ry, qy)
+
+
+@given(st.lists(st.tuples(coord, coord), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_hilo_matches_int64(pts):
+    qx = np.array([p[0] for p in pts], np.int64)
+    qy = np.array([p[1] for p in pts], np.int64)
+    packed = z.morton_encode_np(qx, qy)
+    hi_ref, lo_ref = z.split_hilo_np(packed)
+    hi, lo = z.morton_encode_hilo(jnp.asarray(qx, jnp.int32),
+                                  jnp.asarray(qy, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(hi), hi_ref)
+    np.testing.assert_array_equal(np.asarray(lo), lo_ref)
+    assert (hi_ref >= 0).all() and (lo_ref >= 0).all()  # int32-safe limbs
+    np.testing.assert_array_equal(z.pack_hilo_np(hi_ref, lo_ref), packed)
+
+
+@given(st.tuples(coord, coord), st.tuples(coord, coord))
+@settings(max_examples=100, deadline=None)
+def test_monotonic_ordering_theorem(p, q):
+    """Thm 1: if p dominates q (p <= q componentwise) then z(p) <= z(q)."""
+    if p[0] <= q[0] and p[1] <= q[1]:
+        zp = z.morton_encode_np(np.int64(p[0]), np.int64(p[1]))
+        zq = z.morton_encode_np(np.int64(q[0]), np.int64(q[1]))
+        assert zp <= zq
+
+
+@given(st.tuples(coord, coord), st.tuples(coord, coord),
+       st.tuples(coord, coord))
+@settings(max_examples=100, deadline=None)
+def test_interval_covers_interior(a, b, r):
+    """Any grid point inside an MBR has its Z-address inside [Zmin, Zmax]."""
+    x0, x1 = sorted((a[0], b[0]))
+    y0, y1 = sorted((a[1], b[1]))
+    px = x0 + r[0] % (x1 - x0 + 1)
+    py = y0 + r[1] % (y1 - y0 + 1)
+    zmin = z.morton_encode_np(np.int64(x0), np.int64(y0))
+    zmax = z.morton_encode_np(np.int64(x1), np.int64(y1))
+    zp = z.morton_encode_np(np.int64(px), np.int64(py))
+    assert zmin <= zp <= zmax
+
+
+def test_quantize_consistency():
+    rng = np.random.default_rng(0)
+    lon = rng.uniform(-179, 179, 256)
+    lat = rng.uniform(-89, 89, 256)
+    qx_np, qy_np = z.WGS84.quantize_np(lon, lat)
+    qx_j, qy_j = z.WGS84.quantize_jnp(jnp.asarray(lon, jnp.float64),
+                                      jnp.asarray(lat, jnp.float64))
+    # fp32 inputs carry ~2^-24 relative coordinate error: a few tens of
+    # cells at cm resolution. The guard margin must dominate it.
+    assert np.max(np.abs(np.asarray(qx_j) - qx_np)) <= z.ZGrid.FP32_GUARD_CELLS
+    assert np.max(np.abs(np.asarray(qy_j) - qy_np)) <= z.ZGrid.FP32_GUARD_CELLS
+    # guarded quantization is conservative in the guard's direction
+    gx_lo, _ = z.WGS84.quantize_jnp(jnp.asarray(lon, jnp.float64),
+                                    jnp.asarray(lat, jnp.float64),
+                                    guard=-z.ZGrid.FP32_GUARD_CELLS)
+    gx_hi, _ = z.WGS84.quantize_jnp(jnp.asarray(lon, jnp.float64),
+                                    jnp.asarray(lat, jnp.float64),
+                                    guard=z.ZGrid.FP32_GUARD_CELLS)
+    assert (np.asarray(gx_lo) <= qx_np).all()
+    assert (np.asarray(gx_hi) >= qx_np).all()
+
+
+def test_mbr_interval():
+    mbrs = np.array([[0.1, 0.2, 0.3, 0.4], [0.0, 0.0, 1.0, 1.0]])
+    zmin, zmax = z.mbr_to_zinterval_np(mbrs, z.UNIT)
+    assert (zmin <= zmax).all()
