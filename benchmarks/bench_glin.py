@@ -19,8 +19,8 @@ import numpy as np
 from repro.core.baselines import QuadTree, RTree, SortedArray
 from repro.core.index import GLIN, GLINConfig, QueryStats
 
-from .common import (DATASETS, SELECTIVITIES, Csv, build_glin, dataset,
-                     scale_n, timeit, windows)
+from .common import (DATASETS, SELECTIVITIES, Csv, build_glin, build_index,
+                     dataset, scale_n, timeit, windows)
 
 
 def _probe_only(g: GLIN, w, relation):
@@ -36,7 +36,8 @@ def _probe_only(g: GLIN, w, relation):
 def tab5_fig6_fig7(csv: Csv, n: int) -> None:
     name = "cluster"
     for pl in (100, 1000, 10000, 100000):
-        g = build_glin(name, n, pl=pl)
+        idx = build_index(name, n, pl=pl)
+        g = idx.glin   # model internals (probe / piecewise timings)
         # use the paper-faithful Alg-2 scan for probing time (Fig 6) and the
         # suffix-min fast path as the beyond-paper comparison
         wins = windows(name, n, 0.001)
@@ -45,7 +46,7 @@ def tab5_fig6_fig7(csv: Csv, n: int) -> None:
         t_fast = timeit(lambda: g.pw.augment(10**15), repeats=3, number=200)
         t_probe = timeit(lambda: _probe_only(g, w0, "intersects"),
                          repeats=3, number=50)
-        t_query = timeit(lambda: g.query(w0, "intersects"), repeats=3, number=5)
+        t_query = timeit(lambda: idx.query(w0, "intersects"), repeats=3, number=5)
         csv.emit(f"tab5/pw_size_bytes/PL={pl}", g.pw.nbytes(),
                  f"pieces={g.pw.num_pieces}")
         csv.emit(f"fig6/probe_us/PL={pl}", t_probe,
@@ -55,10 +56,10 @@ def tab5_fig6_fig7(csv: Csv, n: int) -> None:
 
 def tab6_fig8(csv: Csv, n: int) -> None:
     for name in DATASETS:
-        g = build_glin(name, n)
+        idx = build_index(name, n)
         rt = RTree.build(dataset(name, n))
         qt = QuadTree.build(dataset(name, n))
-        gs_ = g.stats()
+        gs_ = idx.stats()
         csv.emit(f"fig8/glin_bytes/{name}", gs_["total_index_bytes"],
                  f"nodes={gs_['nodes']}")
         csv.emit(f"fig8/rtree_bytes/{name}", rt.stats()["index_bytes"],
@@ -70,9 +71,10 @@ def tab6_fig8(csv: Csv, n: int) -> None:
 def fig9(csv: Csv, n: int) -> None:
     name = "cluster"
     gs = dataset(name, n)
-    t_glin = timeit(lambda: GLIN.build(gs, GLINConfig(enable_piecewise=False)),
+    from repro.core.engine import SpatialIndex
+    t_glin = timeit(lambda: SpatialIndex.build(gs, GLINConfig(enable_piecewise=False)),
                     repeats=2)
-    t_glin_pw = timeit(lambda: GLIN.build(gs, GLINConfig()), repeats=2)
+    t_glin_pw = timeit(lambda: SpatialIndex.build(gs, GLINConfig()), repeats=2)
     t_rt = timeit(lambda: RTree.build(gs), repeats=2)
     t_qt = timeit(lambda: QuadTree.build(gs), repeats=1)
     csv.emit("fig9/init_us/glin", t_glin, "")
@@ -102,13 +104,13 @@ def fig10(csv: Csv, n: int) -> None:
 
 def fig11_12_14(csv: Csv, n: int) -> None:
     for name in ("cluster", "uniform"):
-        g = build_glin(name, n)
+        fac = build_index(name, n)
         rt = RTree.build(dataset(name, n))
         qt = QuadTree.build(dataset(name, n))
         for relation, fig in (("contains", "fig11"), ("intersects", "fig12")):
             for sel in SELECTIVITIES:
                 wins = windows(name, n, sel, k=8)
-                for label, idx in (("glin", g), ("rtree", rt), ("quadtree", qt)):
+                for label, idx in (("glin", fac), ("rtree", rt), ("quadtree", qt)):
                     t = timeit(lambda: [idx.query(w, relation) for w in wins],
                                repeats=2) / len(wins)
                     csv.emit(f"{fig}/query_us/{label}/{name}/sel={sel}", t,
@@ -117,15 +119,12 @@ def fig11_12_14(csv: Csv, n: int) -> None:
 
 def tab3_fig13(csv: Csv, n: int) -> None:
     for name in ("cluster", "roads"):
-        g = build_glin(name, n)
+        idx = build_index(name, n)
         for sel in SELECTIVITIES:
             wins = windows(name, n, sel, k=8)
-            cand = checked = 0
-            for w in wins:
-                st = QueryStats()
-                g.query(w, "contains", st)
-                cand += st.candidates
-                checked += st.checked
+            res = idx.query(wins, "contains", collect_stats=True)
+            cand = sum(st.candidates for st in res.stats)
+            checked = sum(st.checked for st in res.stats)
             csv.emit(f"tab3/refine_checked/{name}/sel={sel}", checked / len(wins),
                      f"wo_leaf_mbr={cand/len(wins):.0f};reduction=x{cand/max(checked,1):.1f}")
 
@@ -136,26 +135,16 @@ def fig15_16(csv: Csv, n: int) -> None:
     half = n // 2
     import copy
 
-    def insert_throughput(build_fn, insert_fn, label):
-        idx = build_fn(np.arange(half))
-        t0 = time.perf_counter()
-        count = min(20000, half)
-        for rec in range(half, half + count):
-            insert_fn(idx, rec)
-        dt = time.perf_counter() - t0
-        csv.emit(f"fig15/insert_per_s/{label}", 1e6 * dt / count,
-                 f"{count/dt:.0f}/s")
-        return idx
+    from repro.core.engine import SpatialIndex
 
-    # GLIN and GLIN-piecewise
+    # GLIN and GLIN-piecewise (through the facade: epoch bump, no rebuild)
     for label, pw in (("glin", False), ("glin_piecewise", True)):
-        sub = gs.take(np.arange(half))
-        sub = copy.deepcopy(sub)
-        g = GLIN.build(sub, GLINConfig(enable_piecewise=pw))
+        sub = copy.deepcopy(gs.take(np.arange(half)))
+        idx = SpatialIndex.build(sub, GLINConfig(enable_piecewise=pw))
         t0 = time.perf_counter()
         count = min(20000, half)
         for rec in range(half, half + count):
-            g.insert(gs.verts[rec], int(gs.nverts[rec]), int(gs.kinds[rec]))
+            idx.insert(gs.verts[rec], int(gs.nverts[rec]), int(gs.kinds[rec]))
         dt = time.perf_counter() - t0
         csv.emit(f"fig15/insert_per_s/{label}", 1e6 * dt / count, f"{count/dt:.0f}/s")
 
@@ -177,10 +166,10 @@ def fig15_16(csv: Csv, n: int) -> None:
     # deletion (Fig 16)
     rng = np.random.default_rng(0)
     dels = rng.choice(half, min(20000, half // 2), replace=False)
-    g = GLIN.build(copy.deepcopy(gs.take(np.arange(half))), GLINConfig())
+    idx = SpatialIndex.build(copy.deepcopy(gs.take(np.arange(half))), GLINConfig())
     t0 = time.perf_counter()
     for d in dels:
-        g.delete(int(d))
+        idx.delete(int(d))
     dt = time.perf_counter() - t0
     csv.emit("fig16/delete_per_s/glin_piecewise", 1e6 * dt / len(dels),
              f"{len(dels)/dt:.0f}/s")
@@ -210,7 +199,8 @@ def fig17(csv: Csv, n: int) -> None:
         for idx_label in ("glin_piecewise", "rtree"):
             sub = copy.deepcopy(gs.take(np.arange(half)))
             if idx_label == "glin_piecewise":
-                idx = GLIN.build(sub, GLINConfig())
+                from repro.core.engine import SpatialIndex
+                idx = SpatialIndex.build(sub, GLINConfig())
                 ins = lambda rec: idx.insert(gs.verts[rec], int(gs.nverts[rec]),
                                              int(gs.kinds[rec]))
             else:

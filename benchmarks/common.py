@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core.baselines import QuadTree, RTree, SortedArray
 from repro.core.datasets import GeometrySet, generate, make_query_windows
+from repro.core.engine import EngineConfig, SpatialIndex
 from repro.core.index import GLIN, GLINConfig, QueryStats
 
 SELECTIVITIES = [0.01, 0.001, 0.0001, 0.00001]  # 1% .. 0.001% of N
@@ -31,8 +32,18 @@ def windows(name: str, n: int, sel: float, k: int = 20, seed: int = 0):
     return make_query_windows(dataset(name, n), sel, k, seed=seed)
 
 
+def build_index(name: str, n: int, pl: int = 10000,
+                engine: "EngineConfig | None" = None, **kw) -> SpatialIndex:
+    """The one public way to build an index (facade over the host GLIN)."""
+    return SpatialIndex.build(dataset(name, n),
+                              GLINConfig(piece_limitation=pl, **kw),
+                              config=engine)
+
+
 def build_glin(name: str, n: int, pl: int = 10000, **kw) -> GLIN:
-    return GLIN.build(dataset(name, n), GLINConfig(piece_limitation=pl, **kw))
+    """Host-structure handle for model-internal measurements (probe timing,
+    piecewise internals); querying goes through ``build_index``."""
+    return build_index(name, n, pl, **kw).glin
 
 
 def timeit(fn: Callable, repeats: int = 3, number: int = 1) -> float:

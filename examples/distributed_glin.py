@@ -16,20 +16,19 @@ import time
 import numpy as np
 import jax
 
-from repro.core import GLIN, GLINConfig, generate, make_query_windows
-from repro.core.device import snapshot_from_host
+from repro.core import GLINConfig, SpatialIndex, generate, make_query_windows
 from repro.core.distributed import build_glin_query_step, shard_glin_arrays
 
 
 def main() -> None:
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.utils.compat import make_auto_mesh
+    mesh = make_auto_mesh((4, 2), ("data", "model"))
     print(f"[dist] mesh {dict(mesh.shape)} over {mesh.devices.size} devices")
 
     gs = generate("cluster", 100_000, seed=0)
-    glin = GLIN.build(gs, GLINConfig(piece_limitation=5_000))
-    snap = snapshot_from_host(glin)
-    table_np = shard_glin_arrays(glin, 4)
+    index = SpatialIndex.build(gs, GLINConfig(piece_limitation=5_000))
+    snap = index.snapshot()                  # current-epoch flattened index
+    table_np = shard_glin_arrays(index.glin, 4)
 
     step, in_sh, out_sh = build_glin_query_step(mesh, "intersects", cap=32768)
     windows = make_query_windows(gs, 1e-4, 64, seed=1).astype(np.float32)
@@ -53,10 +52,11 @@ def main() -> None:
           f"({windows.shape[0]/dt:.0f} q/s)")
     print(f"[dist] hits per record-shard: {per_shard.tolist()} "
           f"(total {counts.sum()})")
-    # cross-check one query against the host index
+    # cross-check one query against the host path of the facade
     q0 = np.sort(np.asarray(hits[0])[np.asarray(hits[0]) >= 0])
-    print(f"[dist] query 0: {len(q0)} hits; host agrees: "
-          f"{len(glin.query(windows[0].astype(np.float64), 'intersects'))} "
+    host = index.query(windows[0].astype(np.float64), "intersects",
+                       backend="host")
+    print(f"[dist] query 0: {len(q0)} hits; host agrees: {len(host[0])} "
           f"(fp64 host may differ at window boundaries by design)")
 
 

@@ -1,9 +1,11 @@
 """End-to-end driver: GLIN spatial-query serving with batched requests.
 
-Builds a 200k-geometry index, publishes the device snapshot, and serves
-batches of Intersects queries through the jitted TPU-native path while a
-writer thread streams inserts/deletes through the LSM delta buffer —
-the full production loop of DESIGN.md §2/§4 on one machine.
+Builds a 200k-geometry index behind the ``SpatialIndex`` facade and serves
+batches of Intersects queries through the ``SpatialQueryServer`` front-end
+while interleaved inserts/deletes stream through the same facade — every
+mutation bumps the snapshot epoch, and the planner republishes the device
+snapshot lazily before the next large batch (a stale snapshot is never
+served).
 
     PYTHONPATH=src python examples/serve_queries.py [--n 200000] [--batches 20]
 """
@@ -12,8 +14,9 @@ import time
 
 import numpy as np
 
-from repro.core import GLIN, GLINConfig, generate, make_query_windows
-from repro.core.delta import SnapshotManager
+from repro.core import EngineConfig, GLINConfig, SpatialIndex, generate, \
+    make_query_windows
+from repro.serve import SpatialQueryServer
 
 
 def main() -> None:
@@ -27,29 +30,32 @@ def main() -> None:
     print(f"[serve] building index over {args.n} geometries ...")
     gs = generate("cluster", args.n, seed=0)
     t0 = time.time()
-    glin = GLIN.build(gs, GLINConfig(piece_limitation=10_000))
-    mgr = SnapshotManager(glin, refresh_threshold=2_000)
+    # augmented Intersects runs are long (EXPERIMENTS.md §Perf): two-stage
+    # refinement — full-run MBR masks, exact checks on <=1024 survivors; the
+    # facade's adaptive cap climbs from initial_cap to the run length once
+    index = SpatialIndex.build(
+        gs, GLINConfig(piece_limitation=10_000),
+        config=EngineConfig(initial_cap=8192, exact_budget=1024))
+    server = SpatialQueryServer(index)
     print(f"[serve] built in {time.time()-t0:.1f}s; "
-          f"index {glin.stats()['total_index_bytes']/1024:.0f} KiB")
+          f"index {index.stats()['total_index_bytes']/1024:.0f} KiB")
 
     base = make_query_windows(gs, args.selectivity, 64, seed=2)
     rng = np.random.default_rng(3)
     lat = []
     total_hits = 0
-    writer_ops = 0
+    refreshes = 0
     for b in range(args.batches):
         # a fresh batch of query windows (jittered around the base set)
         idx = rng.integers(0, len(base), args.batch_size)
         jitter = rng.normal(0, 1e-4, (args.batch_size, 1))
         windows = base[idx] + jitter * [[1, 1, 1, 1]]
         t0 = time.time()
-        # augmented Intersects runs are long (EXPERIMENTS.md §Perf): use the
-        # two-stage path — full-run MBR masks, exact checks on <=1024 survivors
-        res = mgr.query_device(windows, "intersects", cap=65536,
-                               exact_budget=1024)
+        res = server.query(windows, "intersects")
         dt = time.time() - t0
         lat.append(dt)
-        total_hits += sum(len(r) for r in res)
+        refreshes += int(res.plan.rebuild_snapshot)
+        total_hits += res.total_hits
         # interleaved writes (hybrid workload, paper Fig 17)
         for _ in range(32):
             if rng.random() < 0.7:
@@ -57,18 +63,18 @@ def main() -> None:
                 ang = np.sort(rng.uniform(0, 2 * np.pi, 8))
                 verts = np.stack([c[0] + 2e-4 * np.cos(ang),
                                   c[1] + 2e-4 * np.sin(ang)], -1)
-                mgr.insert(verts, 8, 0)
+                server.insert(verts, 8, 0)
             else:
-                live = np.nonzero(glin._live_mask())[0]
-                mgr.delete(int(rng.choice(live)))
-            writer_ops += 1
+                live = np.nonzero(index.glin._live_mask())[0]
+                server.delete(int(rng.choice(live)))
         if b % 5 == 0:
             print(f"[serve] batch {b}: {dt*1e3:.1f} ms "
-                  f"({args.batch_size/dt:.0f} q/s), delta={mgr.delta_size()}")
+                  f"({args.batch_size/dt:.0f} q/s) "
+                  f"[{res.plan.backend}, epoch {res.epoch}]")
     lat = np.array(lat[1:])  # drop compile batch
     qps = args.batch_size / lat.mean()
     print(f"[serve] {args.batches} batches, {total_hits} total hits, "
-          f"{writer_ops} writes, {mgr.refresh_count} snapshot refreshes")
+          f"{server.write_ops} writes, {refreshes} snapshot refreshes")
     print(f"[serve] p50={np.percentile(lat,50)*1e3:.1f}ms "
           f"p95={np.percentile(lat,95)*1e3:.1f}ms throughput={qps:.0f} queries/s")
 

@@ -64,9 +64,14 @@ def save(directory: str, step: int, tree: Any) -> str:
         shutil.rmtree(final)
     os.replace(tmp, final)                    # atomic commit
     with _LOCK:
-        ptr = d / ".LATEST_tmp"
-        ptr.write_text(final.name)
-        os.replace(ptr, d / "LATEST")         # atomic pointer swap
+        # Monotonic pointer: a slow async save finishing after a newer save
+        # (e.g. the trainer's final sync save racing an in-flight background
+        # one) must never swing LATEST back to an older step.
+        cur = latest_step(str(d))
+        if cur is None or step >= cur:
+            ptr = d / ".LATEST_tmp"
+            ptr.write_text(final.name)
+            os.replace(ptr, d / "LATEST")     # atomic pointer swap
     return str(final)
 
 

@@ -23,6 +23,7 @@ from . import geometry as geom
 from .datasets import GeometrySet
 from .index import QueryStats
 from .piecewise import PiecewiseFunction
+from .relations import get_relation
 from .zorder import mbr_to_zinterval_np
 
 __all__ = ["RTree", "QuadTree", "SortedArray"]
@@ -30,14 +31,18 @@ __all__ = ["RTree", "QuadTree", "SortedArray"]
 
 def _refine(gs: GeometrySet, cand: np.ndarray, window: np.ndarray,
             relation: str, st: QueryStats) -> np.ndarray:
+    rel = get_relation(relation)
+    if rel.complement_of is not None:
+        # the tree probes only surface MBR-intersecting candidates, so a
+        # complement's true hits (records far from the window) are never
+        # visited — refuse rather than silently return near-boundary records
+        raise NotImplementedError(
+            f"baseline indexes do not implement complement relation "
+            f"{relation!r}; use SpatialIndex")
     st.checked += int(cand.shape[0])
     if cand.shape[0] == 0:
         return np.empty(0, np.int64)
-    if relation == "contains":
-        ok = geom.rect_contains_geoms(window, gs.verts[cand], gs.nverts[cand])
-    else:
-        ok = geom.rect_intersects_geoms(window, gs.verts[cand], gs.nverts[cand],
-                                        gs.kinds[cand])
+    ok = rel.predicate(window, gs.verts[cand], gs.nverts[cand], gs.kinds[cand])
     return cand[ok]
 
 

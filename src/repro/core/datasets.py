@@ -53,6 +53,20 @@ class GeometrySet:
     def nbytes(self) -> int:
         return self.verts.nbytes + self.nverts.nbytes + self.kinds.nbytes + self.mbrs.nbytes
 
+    def grow_vertex_capacity(self, new_vmax: int) -> None:
+        """Widen the padded vertex rings to ``new_vmax`` in place, preserving
+        the pad-with-last-valid-vertex convention for every record."""
+        old = self.verts
+        n, old_vmax = old.shape[0], old.shape[1]
+        if new_vmax <= old_vmax:
+            return
+        grown = np.empty((n, new_vmax, 2), old.dtype)
+        grown[:, :old_vmax] = old
+        if n:
+            last = old[np.arange(n), np.minimum(self.nverts - 1, old_vmax - 1)]
+            grown[:, old_vmax:] = last[:, None, :]
+        self.verts = grown
+
 
 def _convex_polygons(rng: np.random.Generator, centers: np.ndarray, sizes: np.ndarray,
                      max_verts: int) -> Dict[str, np.ndarray]:

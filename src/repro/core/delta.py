@@ -25,9 +25,9 @@ from typing import List, Optional, Set
 import numpy as np
 import jax.numpy as jnp
 
-from . import geometry as geom
 from .device import GLINSnapshot, batch_query, snapshot_from_host
 from .index import GLIN
+from .relations import get_relation
 
 __all__ = ["SnapshotManager"]
 
@@ -103,11 +103,8 @@ class SnapshotManager:
             if added.shape[0]:
                 w32 = np.asarray(windows[qi], np.float32)
                 av = gs.verts[added].astype(np.float32)
-                if relation == "contains":
-                    ok = geom.rect_contains_geoms(w32, av, gs.nverts[added])
-                else:
-                    ok = geom.rect_intersects_geoms(w32, av, gs.nverts[added],
-                                                    gs.kinds[added])
+                ok = get_relation(relation).predicate(w32, av, gs.nverts[added],
+                                                      gs.kinds[added])
                 h = np.concatenate([h, added[ok]])
             out.append(np.sort(h))
         return out

@@ -29,6 +29,7 @@ import numpy as np
 
 from . import geometry as geom
 from .model import InternalNode, LeafNode
+from .relations import get_relation
 from .zorder import (LO_LIMB_SIZE, hilo_to_float32, mbr_to_zinterval_hilo,
                      split_hilo_np, z_leq_hilo, z_less_hilo)
 
@@ -167,9 +168,8 @@ def snapshot_from_host(glin) -> GLINSnapshot:
     # Piecewise function in suffix-min form.
     if glin.pw is not None and glin.pw.num_pieces:
         pw = glin.pw
-        sfx = np.minimum.accumulate(pw.min_zmin[::-1])[::-1]
         pz_hi, pz_lo = split_hilo_np(pw.zmax_end)
-        ps_hi, ps_lo = split_hilo_np(sfx.astype(np.int64))
+        ps_hi, ps_lo = split_hilo_np(pw.suffix_min().astype(np.int64))
     else:
         pz_hi = pz_lo = ps_hi = ps_lo = np.empty(0, np.int32)
 
@@ -302,19 +302,31 @@ def _augment(s: GLINSnapshot, q_hi, q_lo):
 def query_keys(s: GLINSnapshot, windows: jax.Array, relation: str
                ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Windows (Q,4) -> ((zmin', ub) hi/lo limbs): the probe key (augmented
-    for Intersects) and the exclusive upper key zmax+1."""
+    per the relation's rule) and the exclusive upper key zmax+1."""
     from .zorder import ZGrid
 
+    rel = _device_relation(relation)
     grid = ZGrid(s.grid_x0, s.grid_y0, s.grid_cell)
     # conservative fp32 window quantization (never lose a candidate)
     (zmin_hi, zmin_lo), (zmax_hi, zmax_lo) = mbr_to_zinterval_hilo(
         windows, grid, guard=ZGrid.FP32_GUARD_CELLS)
-    if relation == "intersects":
+    if rel.augment:
         zmin_hi, zmin_lo = _augment(s, zmin_hi, zmin_lo)
     carry = (zmax_lo + 1) >= LO_LIMB_SIZE
     ub_hi = zmax_hi + carry.astype(_I32)
     ub_lo = jnp.where(carry, 0, zmax_lo + 1)
     return zmin_hi, zmin_lo, ub_hi, ub_lo
+
+
+def _device_relation(relation: str):
+    """Registry lookup restricted to relations the batched path can serve."""
+    rel = get_relation(relation)
+    if not rel.device_native:
+        raise ValueError(
+            f"relation {relation!r} is not device-native (evaluate its base "
+            f"relation {rel.base_name()!r} and finish on host — the "
+            f"SpatialIndex facade does this automatically)")
+    return rel
 
 
 def batch_query_bounds(s: GLINSnapshot, windows: jax.Array,
@@ -345,6 +357,7 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
     ``exact_budget`` candidates — the expensive (Q·cap·V) gather shrinks to
     (Q·budget·V). Budget overflow is signalled like cap overflow.
     """
+    rel = _device_relation(relation)
     start, end = batch_query_bounds(s, windows, relation)
     q = windows.shape[0]
     pos = start[:, None] + jnp.arange(cap, dtype=_I32)[None, :]  # (Q, cap)
@@ -357,13 +370,11 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
     leaf_ok = geom.mbr_intersects(lmbr, wq, xp=jnp)
     rec = s.recs[posc]
     rmbr = mbrs[rec]
-    rec_ok = geom.mbr_intersects(rmbr, wq, xp=jnp)
+    rec_ok = rel.mbr_prefilter(rmbr, wq, xp=jnp)
     mask = valid & leaf_ok & rec_ok
 
     def exact_for(w, vv, nn, kk):
-        if relation == "contains":
-            return geom.rect_contains_geoms(w, vv, nn, xp=jnp)
-        return geom.rect_intersects_geoms(w, vv, nn, kk, xp=jnp)
+        return rel.predicate(w, vv, nn, kk, xp=jnp)
 
     if exact_budget and exact_budget < cap:
         kb = exact_budget

@@ -29,7 +29,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from . import geometry as geom
 from .device import (GLINSnapshot, lower_bound_in_window, model_window,
                      query_keys)
+from .relations import get_relation
 from .zorder import LO_LIMB_SIZE
+from repro.utils.compat import shard_map as compat_shard_map
 
 __all__ = ["shard_glin_arrays", "build_glin_query_step", "glin_input_specs",
            "GLIN_MODEL_SPEC"]
@@ -87,6 +89,10 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
       hits  (Q, n_data_shards, cap) int32  — -1 padded global record ids
       counts(Q, n_data_shards)       int32 — per-shard hit counts
     """
+    rel = get_relation(relation)
+    if not rel.device_native:
+        raise ValueError(f"relation {relation!r} is not device-native; shard "
+                         f"its base relation {rel.base_name()!r} instead")
     daxes = _data_axes(mesh)
     n_shards = int(np.prod([mesh.shape[a] for a in daxes]))
 
@@ -136,7 +142,7 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
         wq = windows[:, None, :]
         leaf_ok = geom.mbr_intersects(lmbr, wq, xp=jnp)
         rmbr = table["mbrs"][posc]
-        rec_ok = geom.mbr_intersects(rmbr, wq, xp=jnp)
+        rec_ok = rel.mbr_prefilter(rmbr, wq, xp=jnp)
         mask = valid & leaf_ok & rec_ok
 
         qn, _ = pos.shape
@@ -145,9 +151,7 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
         kd = table["kinds"][posc.reshape(-1)]
 
         def exact_for(w, vv, nn, kk):
-            if relation == "contains":
-                return geom.rect_contains_geoms(w, vv, nn, xp=jnp)
-            return geom.rect_intersects_geoms(w, vv, nn, kk, xp=jnp)
+            return rel.predicate(w, vv, nn, kk, xp=jnp)
 
         exact = jax.vmap(exact_for)(windows,
                                     v.reshape(qn, cap, *v.shape[1:]),
@@ -159,9 +163,7 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
         counts = jnp.where(overflow, -counts - 1, counts)  # signal truncation
         return hits[:, None, :], counts[:, None]
 
-    step = jax.shard_map(
-        local_step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False)
+    step = compat_shard_map(local_step, mesh, in_specs, out_specs)
 
     in_shardings = (
         NamedSharding(mesh, GLIN_MODEL_SPEC),  # prefix: whole snapshot

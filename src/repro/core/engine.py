@@ -1,0 +1,427 @@
+"""`SpatialIndex` — the one public way to build, mutate, snapshot and query.
+
+The paper's mechanism (probe an interval, refine with a predicate) is the same
+whether one window runs on the host or ten thousand run on a TPU; what differed
+in this repo was plumbing: the mutable host ``GLIN`` answered one window at a
+time while callers hand-stitched ``snapshot_from_host`` + ``batch_query`` for
+the device path. This facade owns all of it:
+
+* **relations** are first-class (``core.relations``): ``contains``,
+  ``intersects``, ``within``, ``covers``, ``disjoint`` — plus ``knn`` as a
+  query *kind* — all through one entry point, ``SpatialIndex.query``;
+* **snapshots are epoch-invalidated**: every insert/delete bumps a mutation
+  epoch; the flattened device snapshot is materialized lazily and rebuilt
+  automatically when stale, so a stale snapshot is never served;
+* **execution is planned**: ``plan(batch)`` picks the host loop (small or
+  stats-collecting batches, complement finishing, knn), or the jitted device
+  ``batch_query`` (large batches; candidate ``cap`` doubles on overflow), and
+  ``count_candidates`` routes through the Pallas refine kernel on TPU;
+* **precision**: host execution refines in fp64; device execution refines in
+  fp32 (results can differ at exact window boundaries, by design — the probe
+  interval is quantized conservatively so hits are never missed, see
+  ``core.device``).
+
+Typical use::
+
+    from repro.core import SpatialIndex, QueryBatch, generate, make_query_windows
+
+    index = SpatialIndex.build(generate("cluster", 100_000))
+    res = index.query(make_query_windows(index.gs, 1e-3, 256), "intersects")
+    ids0 = res[0]                       # hits of window 0, ascending record id
+    nn = index.query(QueryBatch.knn([[0.5, 0.5]], k=10))
+    rec = index.insert(verts, nverts=8, kind=0)   # bumps the epoch
+    res = index.query(windows, "contains")        # snapshot auto-rebuilt
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .datasets import GeometrySet
+from .device import (GLINSnapshot, batch_query, batch_query_bounds,
+                     snapshot_from_host)
+from .index import GLIN, GLINConfig, QueryStats
+from .index import knn as _host_knn
+from .relations import get_relation
+
+__all__ = ["EngineConfig", "QueryBatch", "QueryPlan", "QueryResult",
+           "SpatialIndex"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Planner / execution knobs for :class:`SpatialIndex`."""
+
+    device_min_batch: int = 16        # smaller window batches run on host
+    stale_rebuild_min_batch: int = 64  # stale snapshot: rebuild only for
+                                       # batches at least this big, else host
+    initial_cap: int = 4096           # device candidate capacity per query
+    max_cap: int = 1 << 20            # give up (OverflowError) past this
+    exact_budget: int = 0             # two-stage refinement budget (0 = off)
+    pad_quantum: int = 4096           # bucket-pad record/slot array lengths so
+                                      # insert-driven growth does not change
+                                      # jitted shapes (0 disables padding)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryBatch:
+    """One or many queries of one kind against one relation.
+
+    Build with :meth:`window` / :meth:`knn`; ``backend`` forces a specific
+    execution path (benchmarks, tests), otherwise the planner decides.
+    """
+
+    kind: str = "window"                    # "window" | "knn"
+    windows: Optional[np.ndarray] = None    # (Q, 4) fp64
+    relation: str = "intersects"
+    points: Optional[np.ndarray] = None     # (Q, 2) fp64, knn only
+    k: int = 1
+    backend: Optional[str] = None           # force "host" / "device"
+    collect_stats: bool = False             # per-window QueryStats (host path)
+
+    @classmethod
+    def window(cls, windows, relation: str = "intersects",
+               backend: Optional[str] = None,
+               collect_stats: bool = False) -> "QueryBatch":
+        w = np.atleast_2d(np.asarray(windows, np.float64))
+        if w.ndim != 2 or w.shape[1] != 4:
+            raise ValueError(f"windows must be (Q, 4); got {w.shape}")
+        get_relation(relation)  # fail fast on unknown relations
+        return cls(kind="window", windows=w, relation=relation,
+                   backend=backend, collect_stats=collect_stats)
+
+    @classmethod
+    def knn(cls, points, k: int) -> "QueryBatch":
+        p = np.atleast_2d(np.asarray(points, np.float64))
+        if p.ndim != 2 or p.shape[1] != 2:
+            raise ValueError(f"points must be (Q, 2); got {p.shape}")
+        return cls(kind="knn", points=p, k=int(k))
+
+    def __len__(self) -> int:
+        arr = self.windows if self.kind == "window" else self.points
+        return 0 if arr is None else int(arr.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """How a batch will execute (returned by ``plan``, recorded on results)."""
+
+    backend: str                  # "host" | "device"
+    kind: str                     # "window" | "knn"
+    relation: Optional[str]       # None for knn
+    base_relation: Optional[str]  # probed relation (complements differ)
+    rebuild_snapshot: bool        # device path will republish the snapshot
+    reason: str
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Per-query hit ids (ascending record id) plus execution metadata."""
+
+    ids: List[np.ndarray]
+    plan: QueryPlan
+    epoch: int                                  # index epoch that was served
+    stats: Optional[List[QueryStats]] = None    # host path, when requested
+    distances: Optional[List[np.ndarray]] = None  # knn only
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+    def __getitem__(self, i: int) -> np.ndarray:
+        return self.ids[i]
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        return iter(self.ids)
+
+    @property
+    def total_hits(self) -> int:
+        return int(sum(r.shape[0] for r in self.ids))
+
+
+class SpatialIndex:
+    """Facade over the host ``GLIN`` + lazily-materialized device snapshot.
+
+    All mutations MUST go through :meth:`insert` / :meth:`delete` so the
+    mutation epoch tracks the host structure; the device snapshot and device
+    geometry payload are invalidated by epoch and rebuilt on demand.
+    """
+
+    def __init__(self, glin: GLIN, config: Optional[EngineConfig] = None):
+        self.glin = glin
+        self.config = config or EngineConfig()
+        self._epoch = 0
+        self._snapshot: Optional[GLINSnapshot] = None
+        self._snapshot_epoch = -1
+        self._payload = None
+        self._payload_epoch = -1
+        # adaptive candidate capacity: remembered across queries so the
+        # overflow ladder (cap doubling) is walked once, not per call
+        self._cap = self.config.initial_cap
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(cls, gs: GeometrySet, glin_cfg: GLINConfig = GLINConfig(),
+              config: Optional[EngineConfig] = None) -> "SpatialIndex":
+        return cls(GLIN.build(gs, glin_cfg), config)
+
+    @property
+    def gs(self) -> GeometrySet:
+        return self.glin.gs
+
+    def __len__(self) -> int:
+        return self.glin.num_records
+
+    def stats(self) -> dict:
+        st = self.glin.stats()
+        st["epoch"] = self._epoch
+        st["snapshot_epoch"] = self._snapshot_epoch
+        st["snapshot_stale"] = self.snapshot_is_stale()
+        return st
+
+    # ------------------------------------------------------------ maintenance
+    def insert(self, verts: np.ndarray, nverts: int, kind: int = 0) -> int:
+        rec = self.glin.insert(verts, nverts, kind)
+        self._epoch += 1
+        return rec
+
+    def delete(self, rec: int) -> bool:
+        ok = self.glin.delete(rec)
+        if ok:
+            self._epoch += 1
+        return ok
+
+    # --------------------------------------------------------------- snapshot
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    @property
+    def device_cap(self) -> int:
+        """Current adaptive per-query candidate capacity of the device path."""
+        return self._cap
+
+    @property
+    def snapshot_epoch(self) -> int:
+        return self._snapshot_epoch
+
+    def snapshot_is_stale(self) -> bool:
+        return self._snapshot is None or self._snapshot_epoch != self._epoch
+
+    def _padded(self, n: int) -> int:
+        q = self.config.pad_quantum
+        return n if q <= 0 else max(q, -(-n // q) * q)
+
+    def snapshot(self) -> GLINSnapshot:
+        """The flattened device snapshot at the CURRENT epoch (rebuilds when
+        stale; a stale snapshot is never handed out).
+
+        The slot arrays are bucket-padded (``EngineConfig.pad_quantum``) so an
+        insert-only epoch bump usually republishes with UNCHANGED shapes and
+        the jitted query does not recompile. Padding slots sit past the
+        ``leaf_start`` sentinel, so no probe or candidate window ever reaches
+        them; their values are inert.
+        """
+        if self.snapshot_is_stale():
+            snap = snapshot_from_host(self.glin)
+            n = snap.keys_hi.shape[0]
+            pad = self._padded(n) - n
+            if pad:
+                big = np.full(pad, (1 << 30) - 1, np.int32)
+                snap = dataclasses.replace(
+                    snap,
+                    keys_hi=jnp.concatenate([snap.keys_hi, jnp.asarray(big)]),
+                    keys_lo=jnp.concatenate([snap.keys_lo, jnp.asarray(big)]),
+                    recs=jnp.concatenate(
+                        [snap.recs, jnp.zeros(pad, jnp.int32)]),
+                    rec_leaf=jnp.concatenate(
+                        [snap.rec_leaf,
+                         jnp.full(pad, snap.num_leaves - 1, jnp.int32)]),
+                )
+            self._snapshot = snap
+            self._snapshot_epoch = self._epoch
+        return self._snapshot
+
+    def _device_payload(self):
+        """fp32 device copies of the geometry store, bucket-padded like the
+        snapshot (padding rows are never gathered: snapshot ``recs`` only
+        holds real record ids). Keyed on the store's (records, vertex
+        capacity) rather than the epoch: deletes never touch the store, so
+        they must not force a multi-MB re-upload."""
+        gs = self.glin.gs
+        store_key = (len(gs), gs.verts.shape[1])
+        if self._payload is None or self._payload_epoch != store_key:
+            n = len(gs)
+            m = self._padded(n)
+            verts = np.zeros((m, *gs.verts.shape[1:]), np.float32)
+            verts[:n] = gs.verts
+            nverts = np.ones(m, gs.nverts.dtype)
+            nverts[:n] = gs.nverts
+            kinds = np.zeros(m, np.int32)
+            kinds[:n] = gs.kinds
+            mbrs = np.zeros((m, 4), np.float32)
+            mbrs[:n] = gs.mbrs
+            self._payload = (jnp.asarray(verts), jnp.asarray(nverts),
+                             jnp.asarray(kinds), jnp.asarray(mbrs))
+            self._payload_epoch = store_key
+        return self._payload
+
+    def _check_augmentable(self, relation: str, base) -> None:
+        """Fail loudly when a relation needs the piecewise augmentation and
+        the index was built without it — the device ``_augment()`` would
+        silently no-op on an empty piecewise table and drop true hits."""
+        if base.augment and self.glin.pw is None:
+            raise ValueError(f"{relation} requires the piecewise function "
+                             "(cfg.enable_piecewise=True)")
+
+    # ------------------------------------------------------------------- plan
+    def plan(self, batch, relation: Optional[str] = None) -> QueryPlan:
+        """Planned execution for ``batch`` (same input forms as ``query``)."""
+        if not isinstance(batch, QueryBatch):
+            batch = QueryBatch.window(batch, relation or "intersects")
+        cfg = self.config
+        if batch.kind == "knn":
+            return QueryPlan("host", "knn", None, None, False,
+                             "knn executes on the host index")
+        rel = get_relation(batch.relation)
+        base = get_relation(rel.base_name())
+        self._check_augmentable(batch.relation, base)
+        stale = self.snapshot_is_stale()
+
+        def host(reason):
+            return QueryPlan("host", "window", rel.name, base.name, False, reason)
+
+        def device(reason):
+            return QueryPlan("device", "window", rel.name, base.name, stale,
+                             reason)
+
+        if batch.collect_stats and batch.backend == "device":
+            raise ValueError("collect_stats is host-only; drop it or force "
+                             "backend='host'")
+        if batch.backend == "host":
+            return host("forced by caller")
+        if batch.backend == "device":
+            return device("forced by caller")
+        if batch.backend is not None:
+            raise ValueError(f"unknown backend {batch.backend!r}")
+        if batch.collect_stats:
+            return host("QueryStats instrumentation is host-only")
+        if not base.device_native:
+            return host(f"relation {base.name!r} is not device-native")
+        q = len(batch)
+        if q < cfg.device_min_batch:
+            return host(f"batch of {q} < device_min_batch={cfg.device_min_batch}")
+        if stale and q < cfg.stale_rebuild_min_batch:
+            return host(f"snapshot stale and batch of {q} < "
+                        f"stale_rebuild_min_batch={cfg.stale_rebuild_min_batch}")
+        return device(f"batch of {q} windows on {jax.default_backend()}")
+
+    # ------------------------------------------------------------------ query
+    def query(self, batch, relation: Optional[str] = None, **kw) -> QueryResult:
+        """THE entry point: one or thousands of queries, any relation or knn.
+
+        ``batch`` is a :class:`QueryBatch`, or a bare (4,) / (Q, 4) window
+        array (``relation`` then applies, default ``intersects``).
+        """
+        if not isinstance(batch, QueryBatch):
+            batch = QueryBatch.window(batch, relation or "intersects", **kw)
+        else:
+            if relation is not None and relation != batch.relation:
+                raise ValueError("pass the relation inside the QueryBatch")
+            if kw:
+                raise ValueError(f"{sorted(kw)} must be set on the QueryBatch "
+                                 "itself")
+        plan = self.plan(batch)
+        if batch.kind == "knn":
+            return self._run_knn(batch, plan)
+        if plan.backend == "device":
+            ids = self._run_device(batch, plan)
+            stats = None
+        else:
+            ids, stats = self._run_host(batch)
+        return QueryResult(ids=ids, plan=plan, epoch=self._epoch, stats=stats)
+
+    # ------------------------------------------------------------- estimation
+    def count_candidates(self, windows, relation: str = "intersects"
+                         ) -> np.ndarray:
+        """MBR-level candidate counts per window (selectivity estimation)
+        through the tiled refine kernel — Pallas on TPU, its XLA reference
+        semantics elsewhere."""
+        from repro.kernels import ops
+
+        base = get_relation(relation).base_name()
+        self._check_augmentable(relation, get_relation(base))
+        snap = self.snapshot()
+        wj = jnp.asarray(np.atleast_2d(np.asarray(windows)).astype(np.float32))
+        start, end = batch_query_bounds(snap, wj, base)
+        bounds = jnp.stack([start, end], axis=1).astype(jnp.int32)
+        slot_mbrs = jnp.asarray(
+            self.glin.gs.mbrs[np.asarray(snap.recs)].astype(np.float32))
+        counts = ops.refine_count(wj, bounds, slot_mbrs,
+                                  use_pallas=jax.default_backend() == "tpu")
+        return np.asarray(counts)
+
+    # -------------------------------------------------------------- execution
+    def _run_host(self, batch: QueryBatch):
+        stats = ([QueryStats() for _ in range(len(batch))]
+                 if batch.collect_stats else None)
+        ids = []
+        for i, w in enumerate(batch.windows):
+            st = stats[i] if stats is not None else None
+            ids.append(np.sort(self.glin.query(w, batch.relation, st)))
+        return ids, stats
+
+    def _run_device(self, batch: QueryBatch, plan: QueryPlan) -> List[np.ndarray]:
+        cfg = self.config
+        rel = get_relation(batch.relation)
+        snap = self.snapshot()              # never serves a stale epoch
+        verts, nv, kd, mb = self._device_payload()
+        wj = jnp.asarray(batch.windows.astype(np.float32))
+        cap, budget = self._cap, cfg.exact_budget
+        while True:
+            use_budget = budget if 0 < budget < cap else 0
+            hits, counts = batch_query(
+                snap, wj, verts, nv, kd, mb, relation=rel.base_name(),
+                cap=cap, exact_budget=use_budget)
+            counts = np.asarray(counts)
+            if (counts >= 0).all():
+                self._cap = cap
+                break
+            # The overflow signal conflates run-length > cap with MBR
+            # survivors > exact_budget. A cheap bounds-only probe tells them
+            # apart, so we jump straight to a sufficient cap (keeping the
+            # two-stage budget) and only drop to single-stage when the budget
+            # itself was exceeded.
+            start, end = batch_query_bounds(snap, wj, relation=rel.base_name())
+            need = int(np.max(np.asarray(end - start))) if len(batch) else 0
+            if need > cap:
+                if cap >= cfg.max_cap or need > cfg.max_cap:
+                    raise OverflowError(
+                        f"candidate run of {need} exceeded max_cap="
+                        f"{cfg.max_cap}; raise EngineConfig.max_cap or "
+                        f"narrow the windows")
+                cap = min(max(cap * 2, 1 << (need - 1).bit_length()),
+                          cfg.max_cap)
+            else:
+                if not use_budget:
+                    raise AssertionError(
+                        "single-stage overflow with run <= cap")  # unreachable
+                budget = 0
+        hits = np.asarray(hits)
+        ids = [np.sort(row[row >= 0]).astype(np.int64) for row in hits]
+        if rel.complement_of is not None:
+            live = np.nonzero(self.glin._live_mask())[0].astype(np.int64)
+            ids = [np.setdiff1d(live, r) for r in ids]
+        return ids
+
+    def _run_knn(self, batch: QueryBatch, plan: QueryPlan) -> QueryResult:
+        ids, dists = [], []
+        for p in batch.points:
+            i, d = _host_knn(self.glin, p, batch.k)
+            ids.append(np.asarray(i, np.int64))
+            dists.append(np.asarray(d))
+        return QueryResult(ids=ids, plan=plan, epoch=self._epoch,
+                           distances=dists)

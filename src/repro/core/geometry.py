@@ -27,9 +27,13 @@ __all__ = [
     "mbr_contains",
     "mbrs_of_verts",
     "rect_contains_geoms",
+    "rect_covers_geoms",
+    "rect_contains_geoms_proper",
     "rect_intersects_polygons",
     "rect_intersects_polylines",
     "rect_intersects_geoms",
+    "rect_disjoint_geoms",
+    "geoms_cover_rect",
 ]
 
 
@@ -86,6 +90,81 @@ def rect_contains_geoms(rect, verts, nverts, xp=np):
     inside = (x >= rect[0]) & (x <= rect[2]) & (y >= rect[1]) & (y <= rect[3])
     valid = _valid_mask(verts, nverts, xp)
     return xp.all(inside | ~valid, axis=-1)
+
+
+# DE-9IM name for the closed-boundary test: a geometry touching the window
+# boundary from the inside is *covered*.
+rect_covers_geoms = rect_contains_geoms
+
+
+def _seg_next_idx(verts, nverts, kinds, xp):
+    """Successor-vertex index per vertex: closed ring for polygons (wraps to
+    0), clamped open chain for polylines. Returns (idx, nxt, valid)."""
+    nv = xp.asarray(nverts)[:, None]
+    vcount = verts.shape[-2]
+    idx = xp.arange(vcount)[None, :]
+    is_poly = (xp.asarray(kinds) == int(GeomKind.POLYGON))[:, None]
+    nxt_poly = xp.where(idx + 1 >= nv, 0, idx + 1)
+    nxt_line = xp.minimum(idx + 1, vcount - 1)
+    return idx, xp.where(is_poly, nxt_poly, nxt_line), idx < nv
+
+
+def rect_contains_geoms_proper(rect, verts, nverts, kinds, xp=np):
+    """Proper (GEOS-style) Contains: geometry covered by the closed window AND
+    at least one point of it lies in the window's open interior.
+
+    Exact for the supported shape families: for a covered geometry the interior
+    witness exists iff some vertex, edge midpoint, or (polygons) the vertex
+    mean is strictly inside — a convex geometry lying wholly on the 1-D window
+    boundary has none of the three.
+    """
+    covered = rect_contains_geoms(rect, verts, nverts, xp=xp)
+    x, y = verts[..., 0], verts[..., 1]
+    _, nxt, valid = _seg_next_idx(verts, nverts, kinds, xp)
+
+    def strict(px, py):
+        return (px > rect[0]) & (px < rect[2]) & (py > rect[1]) & (py < rect[3])
+
+    wit = xp.any(strict(x, y) & valid, axis=-1)
+    mx = (x + xp.take_along_axis(x, nxt, axis=-1)) * 0.5
+    my = (y + xp.take_along_axis(y, nxt, axis=-1)) * 0.5
+    wit = wit | xp.any(strict(mx, my) & valid, axis=-1)
+    cnt = xp.maximum(xp.asarray(nverts), 1)
+    cx_ = xp.sum(xp.where(valid, x, 0.0), axis=-1) / cnt
+    cy_ = xp.sum(xp.where(valid, y, 0.0), axis=-1) / cnt
+    is_poly = xp.asarray(kinds) == int(GeomKind.POLYGON)
+    wit = wit | (strict(cx_, cy_) & is_poly)
+    return covered & wit
+
+
+def geoms_cover_rect(rect, verts, nverts, kinds, xp=np):
+    """(4,), (N,V,2), (N,), (N,) -> (N,): geometry covers the whole window
+    (the facade's *Within* relation: window within geometry).
+
+    Only convex polygons with positive area can cover a 2-D window, and for a
+    convex polygon "all four window corners inside" is exact (same-side test
+    over every edge; degenerate zero-area rings are rejected via shoelace).
+    Polylines never cover a window and return False.
+    """
+    x, y = verts[..., 0], verts[..., 1]
+    _, nxt, valid = _seg_next_idx(verts, nverts, kinds, xp)
+    x2 = xp.take_along_axis(x, nxt, axis=-1)
+    y2 = xp.take_along_axis(y, nxt, axis=-1)
+    ex = xp.where(valid, x2 - x, 0.0)
+    ey = xp.where(valid, y2 - y, 0.0)
+    cx = xp.stack([rect[0], rect[2], rect[2], rect[0]])
+    cy = xp.stack([rect[1], rect[1], rect[3], rect[3]])
+    # cross(edge, corner - vertex) per edge per corner: (N, V, 4)
+    rx = cx[None, None, :] - x[:, :, None]
+    ry = cy[None, None, :] - y[:, :, None]
+    cross = ex[:, :, None] * ry - ey[:, :, None] * rx
+    pvalid = valid[:, :, None]
+    pos = xp.all(xp.where(pvalid, cross >= 0.0, True), axis=1)
+    neg = xp.all(xp.where(pvalid, cross <= 0.0, True), axis=1)
+    corners_in = xp.all(pos | neg, axis=-1)
+    area2 = xp.abs(xp.sum(xp.where(valid, x * y2 - x2 * y, 0.0), axis=-1))
+    is_poly = xp.asarray(kinds) == int(GeomKind.POLYGON)
+    return corners_in & is_poly & (area2 > 0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -193,3 +272,8 @@ def rect_intersects_geoms(rect, verts, nverts, kinds, xp=np):
     poly = rect_intersects_polygons(rect, verts, nverts, xp=xp)
     line = rect_intersects_polylines(rect, verts, nverts, xp=xp)
     return xp.where(xp.asarray(kinds) == int(GeomKind.POLYGON), poly, line)
+
+
+def rect_disjoint_geoms(rect, verts, nverts, kinds, xp=np):
+    """Complement of Intersects (closed boundaries: touching is NOT disjoint)."""
+    return ~rect_intersects_geoms(rect, verts, nverts, kinds, xp=xp)

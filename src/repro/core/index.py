@@ -21,6 +21,7 @@ from .datasets import GeometrySet
 from .model import (GLINModelConfig, InternalNode, LeafNode, build_tree,
                     leaves_in_order, probe, tree_stats)
 from .piecewise import PiecewiseFunction
+from .relations import get_relation
 from .zorder import mbr_to_zinterval_np
 
 __all__ = ["GLINConfig", "GLIN", "QueryStats"]
@@ -90,15 +91,25 @@ class GLIN:
     # ------------------------------------------------------------------ query
     def query(self, window: np.ndarray, relation: str = "contains",
               stats: Optional[QueryStats] = None) -> np.ndarray:
-        """Algorithm 1. ``window``: (4,) [xmin, ymin, xmax, ymax].
-        Returns record ids satisfying the relation, in Zmin order."""
-        assert relation in ("contains", "intersects")
+        """Algorithm 1 for any registered relation. ``window``: (4,)
+        [xmin, ymin, xmax, ymax]. Returns record ids satisfying the relation,
+        in Zmin order (complement relations: ascending record id)."""
+        rel = get_relation(relation)
         window = np.asarray(window, np.float64)
+        if rel.complement_of is not None:
+            base = self.query(window, rel.complement_of, stats)
+            live = np.nonzero(self._live_mask())[0].astype(np.int64)
+            res = np.setdiff1d(live, base)
+            if stats is not None:
+                # candidates/checked/leaves_* honestly describe the base
+                # probe's work, but the hit count must be the complement's
+                stats.results = int(res.shape[0])
+            return res
         zmin_q, zmax_q = (int(v[0]) for v in
                           mbr_to_zinterval_np(window[None, :], self.gs.grid))
-        if relation == "intersects":
+        if rel.augment:
             if self.pw is None:
-                raise ValueError("Intersects requires the piecewise function "
+                raise ValueError(f"{relation} requires the piecewise function "
                                  "(cfg.enable_piecewise=True)")
             zmin_q = self.pw.augment(zmin_q)  # §VIII query augmentation
 
@@ -124,17 +135,12 @@ class GLIN:
                 st.leaves_visited += 1
                 sel = cand
                 if self.cfg.record_mbr_prefilter:
-                    keep = geom.mbr_intersects(gs.mbrs[sel], window[None, :])
+                    keep = rel.mbr_prefilter(gs.mbrs[sel], window[None, :])
                     sel = sel[keep]
                 st.checked += int(sel.shape[0])
                 if sel.shape[0]:
-                    if relation == "contains":
-                        ok = geom.rect_contains_geoms(window, gs.verts[sel],
-                                                      gs.nverts[sel])
-                    else:
-                        ok = geom.rect_intersects_geoms(window, gs.verts[sel],
-                                                        gs.nverts[sel],
-                                                        gs.kinds[sel])
+                    ok = rel.predicate(window, gs.verts[sel], gs.nverts[sel],
+                                       gs.kinds[sel])
                     hits = sel[ok]
                     if hits.shape[0]:
                         out.append(hits)
@@ -147,14 +153,12 @@ class GLIN:
 
     def query_bruteforce(self, window: np.ndarray, relation: str = "contains"
                          ) -> np.ndarray:
-        """Oracle for correctness tests: exact check on every record."""
+        """Oracle for correctness tests: exact check on every live record."""
         gs = self.gs
+        rel = get_relation(relation)
         window = np.asarray(window, np.float64)
         live = self._live_mask()
-        if relation == "contains":
-            ok = geom.rect_contains_geoms(window, gs.verts, gs.nverts)
-        else:
-            ok = geom.rect_intersects_geoms(window, gs.verts, gs.nverts, gs.kinds)
+        ok = rel.predicate(window, gs.verts, gs.nverts, gs.kinds)
         return np.nonzero(ok & live)[0].astype(np.int64)
 
     def _live_mask(self) -> np.ndarray:
@@ -165,17 +169,26 @@ class GLIN:
 
     # ------------------------------------------------------------ maintenance
     def insert(self, verts: np.ndarray, nverts: int, kind: int) -> int:
-        """Insert one geometry; returns its record id (§VII)."""
+        """Insert one geometry; returns its record id (§VII).
+
+        Geometries wider than the store's vertex capacity grow the store
+        (re-padding every record) instead of being silently truncated, so the
+        MBR and exact-shape checks always see the full input ring."""
         gs = self.gs
         verts = np.asarray(verts, np.float64)
+        nverts = int(nverts)
+        if verts.ndim != 2 or verts.shape[1] != 2 or not 1 <= nverts <= verts.shape[0]:
+            raise ValueError(
+                f"verts must be (>=nverts, 2) with nverts >= 1; got "
+                f"shape {verts.shape}, nverts={nverts}")
+        keep = verts[:nverts]
+        if nverts > gs.verts.shape[1]:
+            gs.grow_vertex_capacity(nverts)
         vmax = gs.verts.shape[1]
-        if verts.shape[0] != vmax:  # pad with the last valid vertex
-            pad = np.repeat(verts[nverts - 1 : nverts], vmax, axis=0)
-            pad[: min(nverts, vmax)] = verts[: min(nverts, vmax)]
-            verts = pad
-            nverts = min(nverts, vmax)
-        mbr = np.array([verts[:nverts, 0].min(), verts[:nverts, 1].min(),
-                        verts[:nverts, 0].max(), verts[:nverts, 1].max()])
+        verts = np.repeat(keep[-1:], vmax, axis=0)  # pad with last valid vertex
+        verts[:nverts] = keep
+        mbr = np.array([keep[:, 0].min(), keep[:, 1].min(),
+                        keep[:, 0].max(), keep[:, 1].max()])
         rec = len(gs)
         # append to the geometry store (amortized growth)
         gs.verts = np.concatenate([gs.verts, verts[None, :, :]], axis=0)

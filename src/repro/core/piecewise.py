@@ -90,6 +90,11 @@ class PiecewiseFunction:
                 self._suffix_min = np.minimum.accumulate(self.min_zmin[::-1])[::-1].copy()
         return self._suffix_min
 
+    def suffix_min(self) -> np.ndarray:
+        """Suffix-min of ``Min_Zmin`` (read-only view used by the augmentation
+        fast path and by the device snapshot flattening)."""
+        return self._suffix()
+
     # ------------------------------------------------------------ augmentation
     def augment_scan(self, zmin_q: int) -> int:
         """Paper Algorithm 2: binary search, then scan pieces to the end."""

@@ -1,0 +1,140 @@
+"""First-class spatial relations for the GLIN query engine.
+
+The paper's central claim (§VI, §VIII) is that ONE interval-probe mechanism
+answers many spatial relationships exactly, provided each relation brings two
+things: an *exact predicate* for the refinement step and a *window-augmentation
+rule* for the probe key. This module makes that pairing explicit: a
+:class:`Relation` bundles
+
+* ``predicate``      — the exact-shape check (array-namespace generic, so the
+  same rule runs on the fp64 host path and the fp32 jitted device path);
+* ``augment``        — whether the probe key ``Zmin_Q`` must be lowered by the
+  piecewise function (Alg 2 / Lemma 2). Relations whose hits can have
+  ``Zmin_GM < Zmin_Q`` (anything that admits geometries *overlapping* the
+  window) need it; relations whose hits start inside the window do not;
+* ``mbr_prefilter``  — a conservative record-MBR test (never drops a true hit)
+  used by both the host refinement loop and the batched device kernel;
+* ``device_native``  — whether the batched device path evaluates it directly;
+* ``complement_of``  — relations answered as the complement of another
+  (``disjoint`` = live records minus ``intersects``); these are host-finished.
+
+Every query layer — host ``GLIN.query``, the jitted ``core.device`` batch
+path, the sharded ``core.distributed`` step, the baselines' refinement, and
+the ``SpatialIndex`` facade — dispatches through this registry, so adding a
+relation is one ``register_relation`` call, not five string branches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from . import geometry as geom
+
+__all__ = ["Relation", "RELATIONS", "register_relation", "get_relation",
+           "relation_names"]
+
+# predicate(window(4,), verts(N,V,2), nverts(N,), kinds(N,), xp) -> (N,) bool
+Predicate = Callable[..., np.ndarray]
+# prefilter(rec_mbr(...,4), window(...,4), xp) -> bool mask (broadcasting)
+MbrPrefilter = Callable[..., np.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Relation:
+    """A spatial relationship between a rectangular query window and the
+    stored geometries, with everything the probe + refine pipeline needs."""
+
+    name: str
+    predicate: Predicate
+    augment: bool                 # probe key needs piecewise augmentation
+    mbr_prefilter: MbrPrefilter
+    device_native: bool = True    # batched device path evaluates it directly
+    complement_of: Optional[str] = None
+    doc: str = ""
+
+    def base_name(self) -> str:
+        """Relation whose candidate interval is actually probed."""
+        return self.complement_of if self.complement_of else self.name
+
+
+RELATIONS: Dict[str, Relation] = {}
+
+
+def register_relation(rel: Relation) -> Relation:
+    if rel.complement_of is not None and rel.complement_of not in RELATIONS:
+        raise ValueError(f"complement_of {rel.complement_of!r} is unknown")
+    RELATIONS[rel.name] = rel
+    return rel
+
+
+def get_relation(name: str) -> Relation:
+    try:
+        return RELATIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown relation {name!r}; registered: {sorted(RELATIONS)}"
+        ) from None
+
+
+def relation_names(device_native: Optional[bool] = None) -> Tuple[str, ...]:
+    names = (n for n, r in RELATIONS.items()
+             if device_native is None or r.device_native == device_native)
+    return tuple(sorted(names))
+
+
+# ---------------------------------------------------------------------------
+# Built-in relations. Window W is the query rectangle, G a stored geometry.
+# ---------------------------------------------------------------------------
+def _pf_intersects(rec_mbr, window, xp=np):
+    return geom.mbr_intersects(rec_mbr, window, xp=xp)
+
+
+def _pf_rec_mbr_covers_window(rec_mbr, window, xp=np):
+    return geom.mbr_contains(rec_mbr, window, xp=xp)
+
+
+register_relation(Relation(
+    name="intersects",
+    predicate=geom.rect_intersects_geoms,
+    augment=True,   # hits may start before W: Zmin_GM < Zmin_Q (Lemma 2)
+    mbr_prefilter=_pf_intersects,
+    doc="W and G share at least one point (the paper's Intersects).",
+))
+
+register_relation(Relation(
+    name="contains",
+    predicate=geom.rect_contains_geoms_proper,
+    augment=False,  # MBR(G) inside W implies Zmin_GM in [Zmin_Q, Zmax_Q]
+    mbr_prefilter=_pf_intersects,
+    doc="G lies in W and touches W's interior (GEOS-style proper Contains).",
+))
+
+register_relation(Relation(
+    name="covers",
+    predicate=lambda rect, verts, nverts, kinds, xp=np:
+        geom.rect_covers_geoms(rect, verts, nverts, xp=xp),
+    augment=False,
+    mbr_prefilter=_pf_intersects,
+    doc="Every point of G lies in closed W (boundary-inclusive Contains; "
+        "the paper's closed-window Contains).",
+))
+
+register_relation(Relation(
+    name="within",
+    predicate=geom.geoms_cover_rect,
+    augment=True,   # covering geometries start before W: Zmin_GM <= Zmin_Q
+    mbr_prefilter=_pf_rec_mbr_covers_window,
+    doc="W lies entirely inside G (window within geometry).",
+))
+
+register_relation(Relation(
+    name="disjoint",
+    predicate=geom.rect_disjoint_geoms,
+    augment=False,
+    mbr_prefilter=_pf_intersects,   # prefilter of the base relation
+    device_native=False,
+    complement_of="intersects",
+    doc="W and G share no point: complement of Intersects over live records.",
+))

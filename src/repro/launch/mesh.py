@@ -7,8 +7,7 @@ so these meshes can be built on the CPU container.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.utils.compat import make_auto_mesh
 
 __all__ = ["make_production_mesh", "make_test_mesh"]
 
@@ -16,11 +15,9 @@ __all__ = ["make_production_mesh", "make_test_mesh"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(4, 2), axes=("data", "model")):
     """Small mesh for multi-device unit tests (8 fake devices)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)

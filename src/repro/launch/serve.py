@@ -11,58 +11,23 @@ A small-scale but structurally real serving loop:
     queued request;
   * reports prefill/decode latency and tokens/s.
 
-Used by examples/serve_queries.py and the serving integration test.
+The server class itself lives in ``repro.serve.server`` (the serving layer);
+this module is the thin CLI launcher and re-exports :class:`SlotServer` for
+backward compatibility.
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_arch
 from repro.models import transformer as tf
-from repro.sharding import constrain
+from repro.serve.server import SlotServer
 
-
-class SlotServer:
-    """Fixed-slot continuous batching around prefill/decode_step."""
-
-    def __init__(self, cfg, params, slots: int, max_ctx: int):
-        self.cfg = cfg
-        self.params = params
-        self.slots = slots
-        self.max_ctx = max_ctx
-        self.cache = tf.init_cache(cfg, slots, max_ctx)
-        self.active = [False] * slots
-        self.remaining = [0] * slots
-        self.generated: List[List[int]] = [[] for _ in range(slots)]
-        self._decode = jax.jit(
-            lambda p, c, b: tf.decode_step(p, cfg, b, c, constrain))
-        self._prefill = jax.jit(
-            lambda p, b: tf.prefill(p, cfg, b, constrain,
-                                    seq_len_cache=max_ctx))
-
-    def admit(self, slot: int, prompt: np.ndarray, gen_len: int) -> None:
-        """Prefill a request and splice its state into `slot`."""
-        batch = {"tokens": jnp.asarray(prompt[None, :])}
-        _, cache1 = self._prefill(self.params, batch)
-
-        def splice(dst, src):
-            return dst.at[:, slot].set(src[:, 0])
-
-        self.cache = jax.tree_util.tree_map(splice, self.cache, cache1)
-        self.active[slot] = True
-        self.remaining[slot] = gen_len
-        self.generated[slot] = []
-
-    def step(self, tokens: np.ndarray) -> np.ndarray:
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          {"tokens": jnp.asarray(tokens)})
-        return np.asarray(jnp.argmax(logits, axis=-1))
+__all__ = ["SlotServer", "main"]
 
 
 def main(argv=None) -> int:

@@ -92,6 +92,11 @@ def main(argv=None) -> int:
                 break
             params, opt_state, metrics = step_fn(params, opt_state, batch)
             if args.simulate_failure_at is not None and step == args.simulate_failure_at:
+                # Drain in-flight async saves so the crash point is
+                # deterministic: resume then restores the last boundary
+                # checkpoint regardless of IO load. Torn-write recovery is
+                # exercised separately (test_atomic_commit_ignores_partial).
+                ckpt.wait_all()
                 print(f"[train] simulating crash at step {step}", flush=True)
                 os._exit(42)
             if args.ckpt_dir and step > 0 and step % args.ckpt_every == 0:
@@ -107,8 +112,8 @@ def main(argv=None) -> int:
     finally:
         prefetch.close()
     if args.ckpt_dir:
+        ckpt.wait_all()   # drain in-flight async saves before the final one
         ckpt.save(args.ckpt_dir, args.steps, {"params": params, "opt": opt_state})
-        ckpt.wait_all()
     if len(losses) >= 2:
         print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
               f"({'improved' if losses[-1] < losses[0] else 'NOT improved'})",

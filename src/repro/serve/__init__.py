@@ -1,4 +1,4 @@
-"""Serving substrate: continuous-batching slot server (see server.py)."""
-from .server import SlotServer
+"""Serving substrate: LM slot server + GLIN spatial-query server."""
+from .server import SlotServer, SpatialQueryServer
 
-__all__ = ["SlotServer"]
+__all__ = ["SlotServer", "SpatialQueryServer"]

@@ -1,4 +1,132 @@
-"""Continuous-batching slot server (moved from launch/serve.py for reuse)."""
-from repro.launch.serve import SlotServer  # single source of truth
+"""Serving layer: the continuous-batching LM slot server and the GLIN
+spatial-query front-end.
 
-__all__ = ["SlotServer"]
+This module is the single source of truth for server classes;
+``launch/serve.py`` is a thin CLI launcher that re-exports from here.
+
+* :class:`SlotServer`        — fixed-slot continuous batching around the
+  transformer ``prefill`` / ``decode_step`` (used by the serving launcher and
+  the serving integration test).
+* :class:`SpatialQueryServer` — micro-batching front-end over
+  :class:`repro.core.SpatialIndex.query`: requests are queued per relation and
+  flushed as one batched facade query each, writes go through the facade so
+  the device snapshot's mutation epoch stays correct.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import QueryBatch, SpatialIndex
+from repro.core.relations import get_relation
+from repro.sharding import constrain
+
+__all__ = ["SlotServer", "SpatialQueryServer"]
+
+
+class SlotServer:
+    """Fixed-slot continuous batching around prefill/decode_step."""
+
+    def __init__(self, cfg, params, slots: int, max_ctx: int):
+        from repro.models import transformer as tf
+
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_ctx = max_ctx
+        self.cache = tf.init_cache(cfg, slots, max_ctx)
+        self.active = [False] * slots
+        self.remaining = [0] * slots
+        self.generated: List[List[int]] = [[] for _ in range(slots)]
+        self._decode = jax.jit(
+            lambda p, c, b: tf.decode_step(p, cfg, b, c, constrain))
+        self._prefill = jax.jit(
+            lambda p, b: tf.prefill(p, cfg, b, constrain,
+                                    seq_len_cache=max_ctx))
+
+    def admit(self, slot: int, prompt: np.ndarray, gen_len: int) -> None:
+        """Prefill a request and splice its state into `slot`."""
+        batch = {"tokens": jnp.asarray(prompt[None, :])}
+        _, cache1 = self._prefill(self.params, batch)
+
+        def splice(dst, src):
+            return dst.at[:, slot].set(src[:, 0])
+
+        self.cache = jax.tree_util.tree_map(splice, self.cache, cache1)
+        self.active[slot] = True
+        self.remaining[slot] = gen_len
+        self.generated[slot] = []
+
+    def step(self, tokens: np.ndarray) -> np.ndarray:
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          {"tokens": jnp.asarray(tokens)})
+        return np.asarray(jnp.argmax(logits, axis=-1))
+
+
+class SpatialQueryServer:
+    """Micro-batching spatial-query server over a :class:`SpatialIndex`.
+
+    ``submit`` enqueues a window and returns a ticket; ``flush`` groups the
+    queue by relation, issues ONE facade query per relation group (so the
+    planner sees the full batch and can take the device path), and returns
+    ``{ticket: hit ids}``. ``query`` is the submit-all + flush convenience.
+    Writes are delegated to the facade, which bumps the snapshot epoch —
+    a flush after a write can never serve stale results.
+    """
+
+    def __init__(self, index: SpatialIndex):
+        self.index = index
+        self._queue: List[Tuple[int, str, np.ndarray]] = []
+        self._next_ticket = 0
+        self.served_queries = 0
+        self.served_batches = 0
+        self.write_ops = 0
+
+    # ------------------------------------------------------------------ reads
+    def submit(self, window: np.ndarray, relation: str = "intersects") -> int:
+        get_relation(relation)  # fail fast, not at flush time
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, relation,
+                            np.asarray(window, np.float64).reshape(4)))
+        return ticket
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        if not self._queue:
+            return {}
+        by_rel: Dict[str, List[Tuple[int, np.ndarray]]] = {}
+        for ticket, rel, w in self._queue:
+            by_rel.setdefault(rel, []).append((ticket, w))
+        out: Dict[int, np.ndarray] = {}
+        for rel, items in by_rel.items():
+            windows = np.stack([w for _, w in items])
+            res = self.index.query(windows, rel)
+            for (ticket, _), ids in zip(items, res):
+                out[ticket] = ids
+        # only drop the queue once every group succeeded — an exception above
+        # (e.g. device OverflowError) leaves all tickets retryable
+        self._queue.clear()
+        self.served_queries += len(out)
+        self.served_batches += len(by_rel)
+        return out
+
+    def query(self, windows: np.ndarray, relation: str = "intersects",
+              backend: Optional[str] = None):
+        """Batched one-shot: queue nothing, serve ``windows`` directly."""
+        res = self.index.query(
+            QueryBatch.window(windows, relation, backend=backend))
+        self.served_queries += len(res)
+        self.served_batches += 1
+        return res
+
+    # ----------------------------------------------------------------- writes
+    def insert(self, verts: np.ndarray, nverts: int, kind: int = 0) -> int:
+        self.write_ops += 1
+        return self.index.insert(verts, nverts, kind)
+
+    def delete(self, rec: int) -> bool:
+        self.write_ops += 1
+        return self.index.delete(rec)

@@ -62,9 +62,6 @@ def gpipe(stage_fn: Callable, mesh: Mesh, stage_axis: str = "pod"):
         return jax.lax.psum(ys, stage_axis)          # nonzero only at last
 
     other = tuple(a for a in mesh.axis_names if a != stage_axis)
-    return jax.shard_map(
-        inner, mesh=mesh,
-        in_specs=(P(stage_axis), P(*([None]))),
-        out_specs=P(),
-        check_vma=False,
-    )
+    from repro.utils.compat import shard_map as compat_shard_map
+    return compat_shard_map(inner, mesh,
+                            (P(stage_axis), P(*([None]))), P())

@@ -27,7 +27,10 @@ def test_scan_trip_counts_are_applied():
     analytic = 160 * 2 * 256**3
     assert abs(cost.flops / analytic - 1.0) < 1e-6
     # XLA's own counter must show the undercount we correct for
-    xla_flops = c.cost_analysis().get("flops", 0.0)
+    ca = c.cost_analysis()
+    if isinstance(ca, list):  # jax<=0.4.x returns one dict per device
+        ca = ca[0] if ca else {}
+    xla_flops = ca.get("flops", 0.0)
     assert xla_flops < cost.flops / 10
 
 
@@ -44,8 +47,8 @@ def test_collectives_and_bytes_positive_on_sharded_program(tmp_path):
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.utils.hlo import analyze_hlo
-mesh = jax.make_mesh((4,2), ("data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.utils.compat import make_auto_mesh
+mesh = make_auto_mesh((4,2), ("data","model"))
 def f(x, w):
     h = x @ w
     h = jax.lax.with_sharding_constraint(h, NamedSharding(mesh, P("data","model")))

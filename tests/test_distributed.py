@@ -24,8 +24,8 @@ def run_py(code: str, devices: int = 8) -> str:
 def test_distributed_glin_query():
     out = run_py("""
         import numpy as np, jax, jax.numpy as jnp
-        mesh = jax.make_mesh((4,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.utils.compat import make_auto_mesh
+        mesh = make_auto_mesh((4,2), ("data","model"))
         from repro.core.datasets import generate, make_query_windows
         from repro.core.index import GLIN, GLINConfig
         from repro.core.device import snapshot_from_host
@@ -62,8 +62,8 @@ def test_sharded_train_step_runs_and_matches_single():
     out = run_py("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((4,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.utils.compat import make_auto_mesh
+        mesh = make_auto_mesh((4,2), ("data","model"))
         from repro.configs.base import get_arch, ShapeConfig
         from repro.sharding import MeshRules
         from repro.train.step import build_train_step, param_shardings
@@ -120,14 +120,14 @@ def test_gradient_compression_psum():
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.train.compress import apply_error_feedback, compressed_psum_mean
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.utils.compat import make_auto_mesh
+        from repro.utils.compat import shard_map as compat_shard_map
+        mesh = make_auto_mesh((8,), ("data",))
 
         def f(gs):
             return compressed_psum_mean(gs, "data")
         gs = np.random.default_rng(0).normal(0, 1, (8, 256)).astype(np.float32)
-        out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"),
-                                    out_specs=P("data")))(gs)
+        out = jax.jit(compat_shard_map(f, mesh, P("data"), P("data")))(gs)
         ref = gs.mean(axis=0)
         err = np.abs(np.asarray(out)[0] - ref).max()
         # int8 quantization error bound: ~ max|g| / 127
@@ -138,8 +138,7 @@ def test_gradient_compression_psum():
             return apply_error_feedback(g, e, "data")
         g = np.tile(np.linspace(-1, 1, 64, dtype=np.float32), (8, 1))
         e = np.zeros_like(g)
-        fn = jax.jit(jax.shard_map(ef, mesh=mesh, in_specs=(P("data"), P("data")),
-                                   out_specs=(P("data"), P("data"))))
+        fn = jax.jit(compat_shard_map(ef, mesh, (P("data"), P("data")), (P("data"), P("data"))))
         tot = np.zeros(64, np.float32)
         for step in range(20):
             avg, e = fn(g, e)
@@ -157,8 +156,8 @@ def test_elastic_checkpoint_restore():
         import tempfile, numpy as np, jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.ckpt import checkpoint as ckpt
-        mesh = jax.make_mesh((4,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.utils.compat import make_auto_mesh
+        mesh = make_auto_mesh((4,2), ("data","model"))
         tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
                 "b": np.ones(16, np.float32)}
         sh = {"w": NamedSharding(mesh, P("data", "model")),

@@ -1,0 +1,280 @@
+"""SpatialIndex facade: one entry point for all relations + knn, planner
+backend selection, epoch-invalidated snapshots under interleaved maintenance
+(split and merge both exercised), and the GLIN.insert vertex-capacity fix."""
+import numpy as np
+import pytest
+
+from repro.core import geometry as geom
+from repro.core.datasets import generate, make_query_windows
+from repro.core.engine import EngineConfig, QueryBatch, SpatialIndex
+from repro.core.index import GLINConfig
+from repro.core.model import GLINModelConfig
+from repro.core.relations import get_relation, relation_names
+
+RELATIONS = ("contains", "intersects", "within", "covers", "disjoint")
+
+
+def _build(name="cluster", n=4000, pl=200, seed=1, config=None, **kw):
+    gs = generate(name, n, seed=seed)
+    return SpatialIndex.build(gs, GLINConfig(piece_limitation=pl, **kw),
+                              config=config)
+
+
+def _oracle(idx, w, relation, dtype=np.float64):
+    """Brute-force relation oracle over live records at the given precision."""
+    gs = idx.gs
+    rel = get_relation(relation)
+    ok = rel.predicate(np.asarray(w, dtype), gs.verts.astype(dtype),
+                       gs.nverts, gs.kinds)
+    live = idx.glin._live_mask()
+    return np.nonzero(np.asarray(ok) & live)[0].astype(np.int64)
+
+
+def _big_polygon(rng, c, r=0.02, nv=10):
+    ang = np.sort(rng.uniform(0, 2 * np.pi, nv))
+    return np.stack([c[0] + r * np.cos(ang), c[1] + r * np.sin(ang)], -1)
+
+
+# ---------------------------------------------------------------- relations --
+@pytest.mark.parametrize("relation", RELATIONS)
+def test_all_relations_host_match_bruteforce(relation):
+    idx = _build()
+    wins = make_query_windows(idx.gs, 0.01, 4, seed=3)
+    res = idx.query(wins, relation, backend="host")
+    for qi, w in enumerate(wins):
+        np.testing.assert_array_equal(res[qi], _oracle(idx, w, relation))
+
+
+@pytest.mark.parametrize("relation", ["contains", "intersects", "covers",
+                                      "disjoint"])
+def test_all_relations_device_match_fp32_oracle(relation):
+    idx = _build()
+    wins = make_query_windows(idx.gs, 0.01, 4, seed=3)
+    res = idx.query(wins, relation, backend="device")
+    for qi, w in enumerate(wins):
+        np.testing.assert_array_equal(
+            res[qi], _oracle(idx, w.astype(np.float32), relation, np.float32))
+
+
+def test_within_finds_covering_polygons_on_both_backends():
+    idx = _build()
+    rng = np.random.default_rng(5)
+    centers = [rng.uniform(0.2, 0.8, 2) for _ in range(4)]
+    recs = [idx.insert(_big_polygon(rng, c), 10, 0) for c in centers]
+    wins = np.array([[c[0] - 1e-3, c[1] - 1e-3, c[0] + 1e-3, c[1] + 1e-3]
+                     for c in centers])
+    for backend in ("host", "device"):
+        res = idx.query(wins, "within", backend=backend)
+        dtype = np.float64 if backend == "host" else np.float32
+        for qi, w in enumerate(wins):
+            assert recs[qi] in res[qi]
+            np.testing.assert_array_equal(
+                res[qi], _oracle(idx, w.astype(dtype), "within", dtype))
+
+
+def test_contains_is_proper_covers_is_closed():
+    """A point record ON the window boundary is covered but not contained."""
+    idx = _build("points", n=500, pl=50)
+    p = idx.gs.verts[7, 0]  # an arbitrary record's point
+    w = np.array([p[0], p[1] - 1e-4, p[0] + 1e-4, p[1] + 1e-4])  # xmin == px
+    covers = idx.query(w, "covers")[0]
+    contains = idx.query(w, "contains")[0]
+    assert 7 in covers and 7 not in contains
+    assert set(contains).issubset(set(covers))
+
+
+def test_disjoint_complements_intersects():
+    idx = _build(n=2000)
+    w = make_query_windows(idx.gs, 0.02, 1, seed=9)[0]
+    inter = idx.query(w, "intersects")[0]
+    disj = idx.query(w, "disjoint")[0]
+    assert len(set(inter) & set(disj)) == 0
+    assert len(inter) + len(disj) == len(idx)
+
+
+def test_knn_is_a_query_kind():
+    idx = _build(n=3000)
+    pts = np.array([[0.3, 0.4], [0.7, 0.2]])
+    res = idx.query(QueryBatch.knn(pts, k=7))
+    assert res.plan.backend == "host" and res.plan.kind == "knn"
+    m = idx.gs.mbrs
+    for qi, p in enumerate(pts):
+        assert res.ids[qi].shape == (7,) and res.distances[qi].shape == (7,)
+        dx = np.maximum(np.maximum(m[:, 0] - p[0], p[0] - m[:, 2]), 0.0)
+        dy = np.maximum(np.maximum(m[:, 1] - p[1], p[1] - m[:, 3]), 0.0)
+        d = np.hypot(dx, dy)
+        assert res.distances[qi][-1] <= np.sort(d)[6] + 1e-12
+
+
+def test_unknown_relation_rejected():
+    idx = _build(n=500, pl=50)
+    with pytest.raises(ValueError, match="unknown relation"):
+        idx.query(np.array([0, 0, 1, 1.0]), "touches")
+    assert set(RELATIONS) == set(relation_names())
+
+
+# ------------------------------------------------------------------ planner --
+def test_planner_picks_host_for_small_device_for_large():
+    idx = _build(config=EngineConfig(device_min_batch=16))
+    idx.snapshot()   # fresh snapshot: the batch size alone decides
+    w = make_query_windows(idx.gs, 0.01, 1, seed=2)
+    assert idx.plan(w, "intersects").backend == "host"
+    big = np.repeat(w, 32, axis=0)
+    assert idx.plan(big, "intersects").backend == "device"
+    assert idx.plan(QueryBatch.window(big, "intersects",
+                                      collect_stats=True)).backend == "host"
+    assert idx.plan(big, "disjoint").base_relation == "intersects"
+
+
+def test_device_cap_overflow_auto_retries():
+    idx = _build(n=3000, config=EngineConfig(initial_cap=64, max_cap=1 << 15))
+    whole = np.repeat(np.array([[0.0, 0.0, 1.0, 1.0]]), 2, axis=0)
+    res = idx.query(whole, "covers", backend="device")
+    np.testing.assert_array_equal(
+        res[0], _oracle(idx, whole[0].astype(np.float32), "covers", np.float32))
+
+
+def test_two_stage_budget_equals_single_stage():
+    idx1 = _build(config=EngineConfig(initial_cap=8192))
+    idx2 = SpatialIndex(idx1.glin,
+                        EngineConfig(initial_cap=8192, exact_budget=512))
+    wins = make_query_windows(idx1.gs, 0.005, 6, seed=7)
+    r1 = idx1.query(wins, "intersects", backend="device")
+    r2 = idx2.query(wins, "intersects", backend="device")
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------- maintenance + epoch invalidation
+def test_interleaved_maintenance_parity_with_split_and_merge():
+    """Host-vs-device equality through the facade after interleaved
+    insert/delete hammering one region (forces leaf splits) followed by a
+    deletion storm (forces merges). fp32-representable coordinates keep the
+    two precisions comparable."""
+    gs = generate("uniform", 1500, seed=11)
+    gs.verts = gs.verts.astype(np.float32).astype(np.float64)
+    gs.mbrs = geom.mbrs_of_verts(gs.verts, gs.nverts)
+    cfg = GLINConfig(model=GLINModelConfig(max_leaf=32, fanout=8),
+                     piece_limitation=100)
+    idx = SpatialIndex.build(gs, cfg,
+                             EngineConfig(stale_rebuild_min_batch=1,
+                                          device_min_batch=1))
+    n_leaves0 = len(idx.glin.leaves)
+    rng = np.random.default_rng(13)
+    wins = make_query_windows(gs, 0.02, 3, seed=4)
+
+    def check_parity():
+        for rel in ("contains", "intersects", "covers"):
+            h = idx.query(wins, rel, backend="host")
+            d = idx.query(wins, rel, backend="device")
+            for a, b in zip(h, d):
+                np.testing.assert_array_equal(a, b)
+
+    for step in range(300):
+        c = np.array([0.5, 0.5]) + rng.normal(0, 1e-4, 2)
+        v = _big_polygon(rng, c, r=1e-5, nv=6).astype(np.float32).astype(np.float64)
+        idx.insert(v, 6, 0)
+        if step % 100 == 99:
+            check_parity()
+    assert len(idx.glin.leaves) > n_leaves0, "no leaf split happened"
+    live = np.nonzero(idx.glin._live_mask())[0]
+    for d in live[: len(live) * 3 // 4]:
+        idx.delete(int(d))
+    check_parity()
+
+
+def test_stale_snapshot_never_served():
+    """Every mutation bumps the epoch; any device answer must reflect it."""
+    idx = _build(n=2000, config=EngineConfig(device_min_batch=1,
+                                             stale_rebuild_min_batch=1))
+    rng = np.random.default_rng(17)
+    snap0 = idx.snapshot()
+    assert idx.snapshot_epoch == idx.epoch == 0
+    rec = idx.insert(_big_polygon(rng, np.array([0.4, 0.4]), r=1e-3), 10, 0)
+    assert idx.snapshot_is_stale() and idx.epoch == 1
+    # device-planned query right after the write must see the new record
+    w = np.array([[0.39, 0.39, 0.41, 0.41]])
+    res = idx.query(w, "intersects")
+    assert res.plan.backend == "device" and res.plan.rebuild_snapshot
+    assert rec in res[0] and res.epoch == 1
+    assert idx.snapshot_epoch == 1 and idx.snapshot() is not snap0
+    # a delete must disappear from device results immediately
+    assert idx.delete(rec)
+    res = idx.query(w, "intersects")
+    assert rec not in res[0] and res.epoch == 2 == idx.snapshot_epoch
+
+
+def test_stale_snapshot_small_batch_falls_back_to_host():
+    idx = _build(n=2000, config=EngineConfig(device_min_batch=1,
+                                             stale_rebuild_min_batch=64))
+    idx.snapshot()
+    rng = np.random.default_rng(19)
+    rec = idx.insert(_big_polygon(rng, np.array([0.6, 0.6]), r=1e-3), 10, 0)
+    w = np.array([[0.59, 0.59, 0.61, 0.61]])
+    res = idx.query(w, "intersects")    # 1 window < stale_rebuild_min_batch
+    assert res.plan.backend == "host" and "stale" in res.plan.reason
+    assert rec in res[0]
+    assert idx.snapshot_epoch == 0      # snapshot untouched, but never served
+
+
+# ------------------------------------------------- GLIN.insert capacity fix --
+def test_insert_wider_than_store_grows_instead_of_truncating():
+    idx = _build(n=800, pl=50, seed=23)
+    vmax0 = idx.gs.verts.shape[1]
+    rng = np.random.default_rng(29)
+    nv = vmax0 + 8
+    verts = _big_polygon(rng, np.array([0.3, 0.7]), r=5e-3, nv=nv)
+    rec = idx.insert(verts, nv, 0)
+    # store grew; no vertex was dropped; MBR covers the full input ring
+    assert idx.gs.verts.shape[1] == nv
+    assert int(idx.gs.nverts[rec]) == nv
+    np.testing.assert_allclose(idx.gs.verts[rec, :nv], verts)
+    np.testing.assert_allclose(
+        idx.gs.mbrs[rec],
+        [verts[:, 0].min(), verts[:, 1].min(),
+         verts[:, 0].max(), verts[:, 1].max()])
+    # old records keep the pad-with-last-valid-vertex convention
+    old = 5
+    n_old = int(idx.gs.nverts[old])
+    np.testing.assert_array_equal(
+        idx.gs.verts[old, n_old:],
+        np.repeat(idx.gs.verts[old, n_old - 1][None], nv - n_old, axis=0))
+    # and the record is exactly queryable on both backends
+    w = np.array(idx.gs.mbrs[rec]) + [-1e-4, -1e-4, 1e-4, 1e-4]
+    for backend in ("host", "device"):
+        res = idx.query(np.atleast_2d(w), "contains", backend=backend)
+        assert rec in res[0]
+    np.testing.assert_array_equal(
+        idx.query(w, "contains", backend="host")[0],
+        _oracle(idx, w, "contains"))
+
+
+def test_insert_rejects_inconsistent_inputs():
+    idx = _build(n=200, pl=50)
+    with pytest.raises(ValueError):
+        idx.insert(np.zeros((3, 2)), 5, 0)   # nverts > provided rows
+    with pytest.raises(ValueError):
+        idx.insert(np.zeros((3, 3)), 3, 0)   # not (N, 2)
+
+
+# ------------------------------------------------------------------- server --
+def test_spatial_query_server_mixed_relations():
+    from repro.serve.server import SpatialQueryServer
+
+    idx = _build(n=2000)
+    server = SpatialQueryServer(idx)
+    wins = make_query_windows(idx.gs, 0.01, 4, seed=31)
+    tickets = [server.submit(w, rel)
+               for w, rel in zip(wins, ("intersects", "contains",
+                                        "intersects", "covers"))]
+    out = server.flush()
+    assert set(out) == set(tickets)
+    np.testing.assert_array_equal(out[tickets[1]],
+                                  idx.query(wins[1], "contains")[0])
+    assert server.flush() == {}
+    # writes go through the facade: epoch moves, next flush is fresh
+    rng = np.random.default_rng(37)
+    rec = server.insert(_big_polygon(rng, np.array([0.5, 0.5]), r=1e-3), 10, 0)
+    t = server.submit(np.array([0.49, 0.49, 0.51, 0.51]), "intersects")
+    assert rec in server.flush()[t]
+    assert server.write_ops == 1 and server.served_queries >= 5

@@ -87,3 +87,21 @@ def test_prefetcher_orders_and_closes():
     steps = [next(pf)[0] for _ in range(4)]
     pf.close()
     assert steps == [5, 6, 7, 8]
+
+
+def test_latest_pointer_is_monotonic():
+    """Regression: a slow async save finishing after a newer save must not
+    swing LATEST back to an older step (trainer's final sync save used to
+    race the in-flight background save under load)."""
+    from repro.ckpt import checkpoint as ckpt
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 24, {"x": np.arange(4.0)})
+        ckpt.save(d, 20, {"x": np.zeros(4)})  # late out-of-order commit
+        assert ckpt.latest_step(d) == 24
+        # the older step is still restorable explicitly
+        step, tree = ckpt.restore(d, {"x": np.zeros(4)}, step=20)
+        assert step == 20 and np.array_equal(tree["x"], np.zeros(4))
+        # same-step overwrite still moves the pointer's content
+        ckpt.save(d, 24, {"x": np.ones(4)})
+        _, tree = ckpt.restore(d, {"x": np.zeros(4)})
+        assert np.array_equal(tree["x"], np.ones(4))

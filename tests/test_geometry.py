@@ -1,6 +1,6 @@
 """Exact-predicate correctness via Monte-Carlo oracles (SAT vs sampling)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import geometry as geom
 from repro.core.datasets import generate

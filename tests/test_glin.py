@@ -2,7 +2,7 @@
 selectivities; leaf-MBR pruning effectiveness (Table III); maintenance."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.datasets import generate, make_query_windows
 from repro.core.index import GLIN, GLINConfig, QueryStats

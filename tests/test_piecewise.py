@@ -1,7 +1,7 @@
 """Piecewise augmentation function (paper §VIII): Algorithm-2 equivalence,
 the no-false-negative invariant, and maintenance semantics."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.piecewise import PiecewiseFunction
 

@@ -15,8 +15,8 @@ def test_gpipe_matches_sequential():
     code = textwrap.dedent("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.sharding.pipeline import gpipe, bubble_fraction
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.utils.compat import make_auto_mesh
+        mesh = make_auto_mesh((4,), ("pod",))
         S, M, D = 4, 8, 32
         rng = np.random.default_rng(0)
         ws = jnp.asarray(rng.normal(0, 0.3, (S, D, D)), jnp.float32)
