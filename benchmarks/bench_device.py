@@ -23,7 +23,8 @@ def device_batch_query(csv: Csv, n: int) -> None:
     idx.snapshot()  # materialize outside the timed region
     for q in (64, 512):
         wins = np.concatenate([windows(name, n, 0.0001, k=20)] * (q // 20 + 1))[:q]
-        fn = lambda: idx.query(wins, "intersects", backend="device")
+        def fn(wins=wins):
+            return idx.query(wins, "intersects", backend="device")
         fn()  # compile + settle the adaptive cap
         t = timeit(fn, repeats=3)
         # host loop comparison (same facade, forced host backend)
@@ -47,22 +48,27 @@ def kernels(csv: Csv) -> None:
     # morton (XLA path)
     qx = jnp.asarray(rng.integers(0, 2**30, 1 << 20), jnp.int32)
     qy = jnp.asarray(rng.integers(0, 2**30, 1 << 20), jnp.int32)
-    f = lambda: ops.morton_encode(qx, qy, use_pallas=False)[0].block_until_ready()
+    def f():
+        return ops.morton_encode(qx, qy,
+                                 use_pallas=False)[0].block_until_ready()
     f()
     csv.emit("kernels/morton_1M_us", timeit(f), "XLA path; pallas=TPU target")
     # refine count
     wins = jnp.asarray(rng.uniform(0, 1, (64, 4)).astype(np.float32))
     mbrs = jnp.asarray(rng.uniform(0, 1, (1 << 17, 4)).astype(np.float32))
     bounds = jnp.zeros((64, 2), jnp.int32).at[:, 1].set(1 << 17)
-    f = lambda: ops.refine_count(wins, bounds, mbrs,
-                                 use_pallas=False).block_until_ready()
+    def f():
+        return ops.refine_count(wins, bounds, mbrs,
+                                use_pallas=False).block_until_ready()
     f()
     csv.emit("kernels/refine_64x131k_us", timeit(f), "XLA path")
     # flash attention vs reference (XLA timing)
     q = jnp.asarray(rng.normal(0, 1, (1, 8, 1024, 64)), jnp.float32)
     k = jnp.asarray(rng.normal(0, 1, (1, 2, 1024, 64)), jnp.float32)
     v = jnp.asarray(rng.normal(0, 1, (1, 2, 1024, 64)), jnp.float32)
-    f = lambda: ops.flash_attention(q, k, v, use_pallas=False).block_until_ready()
+    def f():
+        return ops.flash_attention(q, k, v,
+                                   use_pallas=False).block_until_ready()
     f()
     csv.emit("kernels/attention_1k_us", timeit(f), "XLA ref; pallas=TPU target")
     # ssd chunked
@@ -72,7 +78,8 @@ def kernels(csv: Csv) -> None:
     bm = jnp.asarray(rng.normal(0, 1, (1, 1024, 64)), jnp.float32)
     cm = jnp.asarray(rng.normal(0, 1, (1, 1024, 64)), jnp.float32)
     from repro.models.ssm import ssd_chunked
-    f = lambda: ssd_chunked(x, dt, a, bm, cm, 128)[0].block_until_ready()
+    def f():
+        return ssd_chunked(x, dt, a, bm, cm, 128)[0].block_until_ready()
     f()
     csv.emit("kernels/ssd_1k_us", timeit(f), "XLA chunked path")
 

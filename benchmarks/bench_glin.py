@@ -63,9 +63,11 @@ def tab6_fig8(csv: Csv, n: int) -> None:
         csv.emit(f"fig8/glin_bytes/{name}", gs_["total_index_bytes"],
                  f"nodes={gs_['nodes']}")
         csv.emit(f"fig8/rtree_bytes/{name}", rt.stats()["index_bytes"],
-                 f"nodes={rt.stats()['nodes']};x{rt.stats()['index_bytes']/gs_['total_index_bytes']:.1f}")
+                 f"nodes={rt.stats()['nodes']};"
+                 f"x{rt.stats()['index_bytes']/gs_['total_index_bytes']:.1f}")
         csv.emit(f"fig8/quadtree_bytes/{name}", qt.stats()["index_bytes"],
-                 f"nodes={qt.stats()['nodes']};x{qt.stats()['index_bytes']/gs_['total_index_bytes']:.1f}")
+                 f"nodes={qt.stats()['nodes']};"
+                 f"x{qt.stats()['index_bytes']/gs_['total_index_bytes']:.1f}")
 
 
 def fig9(csv: Csv, n: int) -> None:
@@ -125,8 +127,10 @@ def tab3_fig13(csv: Csv, n: int) -> None:
             res = idx.query(wins, "contains", collect_stats=True)
             cand = sum(st.candidates for st in res.stats)
             checked = sum(st.checked for st in res.stats)
-            csv.emit(f"tab3/refine_checked/{name}/sel={sel}", checked / len(wins),
-                     f"wo_leaf_mbr={cand/len(wins):.0f};reduction=x{cand/max(checked,1):.1f}")
+            csv.emit(f"tab3/refine_checked/{name}/sel={sel}",
+                     checked / len(wins),
+                     f"wo_leaf_mbr={cand/len(wins):.0f};"
+                     f"reduction=x{cand/max(checked,1):.1f}")
 
 
 def fig15_16(csv: Csv, n: int) -> None:
@@ -201,11 +205,13 @@ def fig17(csv: Csv, n: int) -> None:
             if idx_label == "glin_piecewise":
                 from repro.core.engine import SpatialIndex
                 idx = SpatialIndex.build(sub, GLINConfig())
-                ins = lambda rec: idx.insert(gs.verts[rec], int(gs.nverts[rec]),
-                                             int(gs.kinds[rec]))
+                def ins(rec, idx=idx):
+                    return idx.insert(gs.verts[rec], int(gs.nverts[rec]),
+                                      int(gs.kinds[rec]))
             else:
                 idx = RTree.build(gs.take(np.arange(half)))
-                ins = lambda rec: idx.insert(rec % half)
+                def ins(rec, idx=idx):
+                    return idx.insert(rec % half)
             rng = np.random.default_rng(1)
             nxt = half
             t0 = time.perf_counter()

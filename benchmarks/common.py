@@ -9,14 +9,13 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Callable, Dict, List
+from typing import Callable, List
 
 import numpy as np
 
-from repro.core.baselines import QuadTree, RTree, SortedArray
 from repro.core.datasets import GeometrySet, generate, make_query_windows
 from repro.core.engine import EngineConfig, SpatialIndex
-from repro.core.index import GLIN, GLINConfig, QueryStats
+from repro.core.index import GLIN, GLINConfig
 
 SELECTIVITIES = [0.01, 0.001, 0.0001, 0.00001]  # 1% .. 0.001% of N
 DATASETS = ["cluster", "uniform", "roads"]

@@ -27,7 +27,6 @@ def rows(mesh="single"):
             out.append((name, "FAIL", r.get("error", "")[:80]))
             continue
         ro = r["roofline"]
-        h = r["hlo_cost"]
         mem = r["memory"].get("total_bytes_per_device", 0) / 2**30
         out.append((
             name, "ok",

@@ -15,12 +15,12 @@ def main() -> None:
     ap.add_argument("--large", action="store_true",
                     help="paper-scale datasets (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma list: glin,device")
+                    help="comma list: glin,device,maintenance")
     args = ap.parse_args()
 
     from .common import Csv
     csv = Csv()
-    which = set((args.only or "glin,device").split(","))
+    which = set((args.only or "glin,device,maintenance").split(","))
     print("name,us_per_call,derived")
     if "glin" in which:
         from . import bench_glin
@@ -28,6 +28,9 @@ def main() -> None:
     if "device" in which:
         from . import bench_device
         bench_device.run(csv, large=args.large)
+    if "maintenance" in which:
+        from . import bench_maintenance
+        bench_maintenance.run(csv, large=args.large)
     print(f"# {len(csv.rows)} measurements")
 
 

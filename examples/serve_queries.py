@@ -3,9 +3,11 @@
 Builds a 200k-geometry index behind the ``SpatialIndex`` facade and serves
 batches of Intersects queries through the ``SpatialQueryServer`` front-end
 while interleaved inserts/deletes stream through the same facade — every
-mutation bumps the snapshot epoch, and the planner republishes the device
-snapshot lazily before the next large batch (a stale snapshot is never
-served).
+mutation is recorded as a delta against the published device snapshot, so
+the planner serves the ``device+delta`` backend (snapshot + tombstone mask +
+added-set check, exact at the current epoch) instead of republishing per
+write, and republishes only once the delta crosses
+``EngineConfig.refresh_threshold``.
 
     PYTHONPATH=src python examples/serve_queries.py [--n 200000] [--batches 20]
 """
@@ -35,7 +37,8 @@ def main() -> None:
     # facade's adaptive cap climbs from initial_cap to the run length once
     index = SpatialIndex.build(
         gs, GLINConfig(piece_limitation=10_000),
-        config=EngineConfig(initial_cap=8192, exact_budget=1024))
+        config=EngineConfig(initial_cap=8192, exact_budget=1024,
+                            refresh_threshold=4096, delta_patch_max=4096))
     server = SpatialQueryServer(index)
     print(f"[serve] built in {time.time()-t0:.1f}s; "
           f"index {index.stats()['total_index_bytes']/1024:.0f} KiB")
@@ -73,8 +76,12 @@ def main() -> None:
                   f"[{res.plan.backend}, epoch {res.epoch}]")
     lat = np.array(lat[1:])  # drop compile batch
     qps = args.batch_size / lat.mean()
+    st = index.stats()
     print(f"[serve] {args.batches} batches, {total_hits} total hits, "
           f"{server.write_ops} writes, {refreshes} snapshot refreshes")
+    print(f"[serve] backends {server.backend_counts}; "
+          f"{st['snapshot_publishes']} publishes, "
+          f"delta {st['delta_size']} at exit")
     print(f"[serve] p50={np.percentile(lat,50)*1e3:.1f}ms "
           f"p95={np.percentile(lat,95)*1e3:.1f}ms throughput={qps:.0f} queries/s")
 

@@ -7,11 +7,9 @@ the 100M-parameter configuration.
     PYTHONPATH=src python examples/train_lm.py [--full] [--steps 200]
 """
 import argparse
-import dataclasses
 import sys
 
 from repro.configs.base import ArchConfig
-from repro.launch import train as train_mod
 
 
 def config_100m() -> ArchConfig:

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 __all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "ARCH_IDS", "get_arch",
            "get_shape", "all_cells"]
@@ -102,7 +102,8 @@ class ArchConfig:
             return self.param_count()
         d, f = self.d_model, self.d_ff
         ff_mats = 3 if self.mlp_gated else 2
-        dense_like = self.param_count() - self.n_layers * self.n_experts * ff_mats * d * f
+        dense_like = (self.param_count()
+                      - self.n_layers * self.n_experts * ff_mats * d * f)
         return dense_like + self.n_layers * self.top_k * ff_mats * d * f
 
     def reduced(self) -> "ArchConfig":
@@ -164,7 +165,8 @@ def get_shape(name: str) -> ShapeConfig:
 
 def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
     if shape.name == "long_500k" and not cfg.subquadratic:
-        return False, "pure full-attention arch: long_500k needs sub-quadratic attention (DESIGN.md §5)"
+        return False, ("pure full-attention arch: long_500k needs "
+                       "sub-quadratic attention (DESIGN.md §5)")
     return True, ""
 
 

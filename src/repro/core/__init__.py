@@ -11,7 +11,6 @@ from .model import GLINModelConfig
 from .piecewise import PiecewiseFunction
 from .relations import Relation, get_relation, register_relation, relation_names
 from .device import GLINSnapshot, snapshot_from_host, batch_query
-from .delta import SnapshotManager
 from .engine import (EngineConfig, QueryBatch, QueryPlan, QueryResult,
                      SpatialIndex)
 
@@ -19,7 +18,6 @@ __all__ = [
     "GeometrySet", "generate", "make_query_windows",
     "GLIN", "GLINConfig", "QueryStats", "GLINModelConfig",
     "PiecewiseFunction", "GLINSnapshot", "snapshot_from_host", "batch_query",
-    "SnapshotManager",
     "Relation", "get_relation", "register_relation", "relation_names",
     "EngineConfig", "QueryBatch", "QueryPlan", "QueryResult", "SpatialIndex",
 ]

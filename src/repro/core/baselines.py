@@ -152,8 +152,9 @@ class RTree:
         mbr = self.gs.mbrs[rec]
 
         def enlarge(m, b):
-            return (max(m[2], b[2]) - min(m[0], b[0])) * (max(m[3], b[3]) - min(m[1], b[1])) \
-                - (m[2] - m[0]) * (m[3] - m[1])
+            return ((max(m[2], b[2]) - min(m[0], b[0]))
+                    * (max(m[3], b[3]) - min(m[1], b[1]))
+                    - (m[2] - m[0]) * (m[3] - m[1]))
 
         node = self.root
         path = [node]

@@ -51,7 +51,8 @@ class GeometrySet:
         )
 
     def nbytes(self) -> int:
-        return self.verts.nbytes + self.nverts.nbytes + self.kinds.nbytes + self.mbrs.nbytes
+        return (self.verts.nbytes + self.nverts.nbytes
+                + self.kinds.nbytes + self.mbrs.nbytes)
 
     def grow_vertex_capacity(self, new_vmax: int) -> None:
         """Widen the padded vertex rings to ``new_vmax`` in place, preserving
@@ -94,8 +95,10 @@ def _polylines(rng: np.random.Generator, starts: np.ndarray, steps: np.ndarray,
     theta = heading + wiggle
     dx = np.cos(theta) * steps[:, None] * anisotropy
     dy = np.sin(theta) * steps[:, None]
-    vx = starts[:, 0:1] + np.concatenate([np.zeros((n, 1)), dx[:, :-1].cumsum(axis=1)], axis=1)
-    vy = starts[:, 1:2] + np.concatenate([np.zeros((n, 1)), dy[:, :-1].cumsum(axis=1)], axis=1)
+    vx = starts[:, 0:1] + np.concatenate(
+        [np.zeros((n, 1)), dx[:, :-1].cumsum(axis=1)], axis=1)
+    vy = starts[:, 1:2] + np.concatenate(
+        [np.zeros((n, 1)), dy[:, :-1].cumsum(axis=1)], axis=1)
     verts = np.stack([vx, vy], axis=-1)
     idx = np.minimum(np.arange(max_verts)[None, :], nverts[:, None] - 1)
     verts = np.take_along_axis(verts, idx[:, :, None], axis=1)
@@ -124,7 +127,9 @@ def generate(name: str, n: int, seed: int = 0, max_verts: int = 12,
         mus = rng.uniform(0.05, 0.95, size=(k, 2))
         sig = rng.uniform(0.004, 0.03, size=k)
         comp = rng.integers(0, k, size=n)
-        centers = np.clip(mus[comp] + rng.normal(0, 1, (n, 2)) * sig[comp][:, None], 0.001, 0.999)
+        centers = np.clip(
+            mus[comp] + rng.normal(0, 1, (n, 2)) * sig[comp][:, None],
+            0.001, 0.999)
         sizes = rng.uniform(1e-5, 3e-4, size=n)
         parts = _convex_polygons(rng, centers, sizes, max_verts)
     elif name == "roads":

@@ -30,8 +30,8 @@ import numpy as np
 from . import geometry as geom
 from .model import InternalNode, LeafNode
 from .relations import get_relation
-from .zorder import (LO_LIMB_SIZE, hilo_to_float32, mbr_to_zinterval_hilo,
-                     split_hilo_np, z_leq_hilo, z_less_hilo)
+from .zorder import (LO_LIMB_SIZE, mbr_to_zinterval_hilo, split_hilo_np,
+                     z_less_hilo)
 
 __all__ = ["GLINSnapshot", "snapshot_from_host", "batch_probe",
            "batch_query_bounds", "batch_query", "input_specs_like"]
@@ -99,14 +99,15 @@ def snapshot_from_host(glin) -> GLINSnapshot:
     rec_leaf = np.repeat(np.arange(L, dtype=np.int32),
                          np.diff(starts).astype(np.int64))
 
-    dlos = np.array([l.dlo for l in leaves] + [leaves[-1].dhi if L else 1],
+    dlos = np.array([lf.dlo for lf in leaves] + [leaves[-1].dhi if L else 1],
                     dtype=object)
     dlo_hi = np.array([int(d) >> 30 for d in dlos], np.int64).astype(np.int32)
     dlo_lo = np.array([int(d) & (LO_LIMB_SIZE - 1) for d in dlos], np.int32)
 
-    k0_hi, k0_lo = split_hilo_np(np.array([l.key0 for l in leaves], np.int64))
-    slope = np.array([l.slope for l in leaves], np.float32)
-    icpt = np.array([l.intercept for l in leaves], np.float32)
+    k0_hi, k0_lo = split_hilo_np(
+        np.array([lf.key0 for lf in leaves], np.int64))
+    slope = np.array([lf.slope for lf in leaves], np.float32)
+    icpt = np.array([lf.intercept for lf in leaves], np.float32)
 
     # Device-side max error: re-evaluate the fp32 model on every key so the
     # binary-search window provably brackets the answer on device.
@@ -120,8 +121,7 @@ def snapshot_from_host(glin) -> GLINSnapshot:
     search_steps = max(1, math.ceil(math.log2(2 * max_err + 4)))
 
     # Flatten internal nodes (BFS). A leaf root is wrapped in a fanout-1 node.
-    internals = []
-    leaf_ids = {id(l): i for i, l in enumerate(leaves)}
+    leaf_ids = {id(lf): i for i, lf in enumerate(leaves)}
     root = glin.root
     if isinstance(root, LeafNode):
         wrapper = InternalNode(root.dlo, root.dhi, 1)

@@ -18,7 +18,6 @@ is explicit, and is what the multi-pod dry-run lowers (launch/dryrun.py).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Dict, Tuple
 
 import jax
@@ -66,12 +65,15 @@ def shard_glin_arrays(glin, num_shards: int) -> Dict[str, np.ndarray]:
         "kinds": gs.kinds[recs].astype(np.int32),
     }
     if pad:
-        out["keys_hi"] = np.concatenate([out["keys_hi"], np.full(pad, 2**30 - 1, np.int32)])
+        out["keys_hi"] = np.concatenate(
+            [out["keys_hi"], np.full(pad, 2**30 - 1, np.int32)])
         out["keys_lo"] = np.concatenate([out["keys_lo"], np.full(pad, 0, np.int32)])
         out["recs"] = np.concatenate([out["recs"], np.full(pad, -1, np.int32)])
-        out["rec_leaf"] = np.concatenate([out["rec_leaf"], np.zeros(pad, np.int32)])
+        out["rec_leaf"] = np.concatenate(
+            [out["rec_leaf"], np.zeros(pad, np.int32)])
         out["mbrs"] = np.concatenate([out["mbrs"], np.zeros((pad, 4), np.float32)])
-        out["verts"] = np.concatenate([out["verts"], np.zeros((pad, *gs.verts.shape[1:]), np.float32)])
+        out["verts"] = np.concatenate(
+            [out["verts"], np.zeros((pad, *gs.verts.shape[1:]), np.float32)])
         out["nverts"] = np.concatenate([out["nverts"], np.zeros(pad, np.int32)])
         out["kinds"] = np.concatenate([out["kinds"], np.zeros(pad, np.int32)])
     return out
@@ -94,7 +96,6 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
         raise ValueError(f"relation {relation!r} is not device-native; shard "
                          f"its base relation {rel.base_name()!r} instead")
     daxes = _data_axes(mesh)
-    n_shards = int(np.prod([mesh.shape[a] for a in daxes]))
 
     table_spec = {k: P(daxes) for k in
                   ("keys_hi", "keys_lo", "recs", "rec_leaf", "mbrs", "verts",
@@ -113,7 +114,8 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
         # global sorted key array is never materialized per device.
         shard_id = jax.lax.axis_index(daxes[0])
         if len(daxes) == 2:
-            shard_id = shard_id * jax.lax.axis_size(daxes[1]) + jax.lax.axis_index(daxes[1])
+            shard_id = (shard_id * jax.lax.axis_size(daxes[1])
+                        + jax.lax.axis_index(daxes[1]))
         local_n = table["keys_hi"].shape[0]
         offset = shard_id.astype(_I32) * local_n
 

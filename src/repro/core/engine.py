@@ -10,12 +10,25 @@ the device path. This facade owns all of it:
   ``intersects``, ``within``, ``covers``, ``disjoint`` — plus ``knn`` as a
   query *kind* — all through one entry point, ``SpatialIndex.query``;
 * **snapshots are epoch-invalidated**: every insert/delete bumps a mutation
-  epoch; the flattened device snapshot is materialized lazily and rebuilt
+  epoch; the flattened device snapshot is materialized lazily and republished
   automatically when stale, so a stale snapshot is never served;
+* **writes are LSM-style deltas** (DESIGN.md §2): ALEX-style in-place mutation
+  does not map onto immutable device arrays — per-record scatter into a sorted
+  device array is O(N). Instead every insert/delete is applied to the host
+  ``GLIN`` immediately (host queries are always exact) and recorded in a small
+  delta against the last *published* snapshot: inserted record ids in an
+  added-set, deleted published records in a tombstone-set. Device queries can
+  then be served from the stale snapshot and *patched* — tombstones masked
+  out, added records brute-force checked (the delta is tiny, a vectorized
+  fp32 mask) — instead of paying a full republish per write. Once the delta
+  grows past ``EngineConfig.refresh_threshold`` the snapshot is republished
+  (bulk re-flatten, a few ms of vectorized work, amortized O(1)/update);
 * **execution is planned**: ``plan(batch)`` picks the host loop (small or
-  stats-collecting batches, complement finishing, knn), or the jitted device
-  ``batch_query`` (large batches; candidate ``cap`` doubles on overflow), and
-  ``count_candidates`` routes through the Pallas refine kernel on TPU;
+  stats-collecting batches, knn), the jitted device ``batch_query`` (large
+  batches, fresh or republished snapshot), or ``device+delta`` (stale
+  snapshot, small delta: snapshot query + delta patch, no republish); the
+  candidate ``cap`` doubles on overflow and is shared by all device modes,
+  and ``count_candidates`` routes through the Pallas refine kernel on TPU;
 * **precision**: host execution refines in fp64; device execution refines in
   fp32 (results can differ at exact window boundaries, by design — the probe
   interval is quantized conservatively so hits are never missed, see
@@ -35,7 +48,7 @@ Typical use::
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional
+from typing import Iterator, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,14 +70,21 @@ class EngineConfig:
     """Planner / execution knobs for :class:`SpatialIndex`."""
 
     device_min_batch: int = 16        # smaller window batches run on host
-    stale_rebuild_min_batch: int = 64  # stale snapshot: rebuild only for
-                                       # batches at least this big, else host
+    stale_rebuild_min_batch: int = 64  # stale + unpatchable: republish only
+                                       # for batches this big, else host
     initial_cap: int = 4096           # device candidate capacity per query
     max_cap: int = 1 << 20            # give up (OverflowError) past this
     exact_budget: int = 0             # two-stage refinement budget (0 = off)
     pad_quantum: int = 4096           # bucket-pad record/slot array lengths so
                                       # insert-driven growth does not change
                                       # jitted shapes (0 disables padding)
+    delta_patch_max: int = 4096       # patch a stale snapshot instead of
+                                      # republishing while the delta (added +
+                                      # tombstoned records) is at most this
+                                      # (0 disables delta patching)
+    refresh_threshold: int = 4096     # delta size at which the planner prefers
+                                      # a republish over patching (0 means
+                                      # republish on every stale query)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,7 +100,7 @@ class QueryBatch:
     relation: str = "intersects"
     points: Optional[np.ndarray] = None     # (Q, 2) fp64, knn only
     k: int = 1
-    backend: Optional[str] = None           # force "host" / "device"
+    backend: Optional[str] = None     # force "host"/"device"/"device+delta"
     collect_stats: bool = False             # per-window QueryStats (host path)
 
     @classmethod
@@ -110,12 +130,13 @@ class QueryBatch:
 class QueryPlan:
     """How a batch will execute (returned by ``plan``, recorded on results)."""
 
-    backend: str                  # "host" | "device"
+    backend: str                  # "host" | "device" | "device+delta"
     kind: str                     # "window" | "knn"
     relation: Optional[str]       # None for knn
     base_relation: Optional[str]  # probed relation (complements differ)
     rebuild_snapshot: bool        # device path will republish the snapshot
     reason: str
+    delta_size: int = 0           # added + tombstoned records vs the snapshot
 
 
 @dataclasses.dataclass
@@ -156,8 +177,13 @@ class SpatialIndex:
         self._epoch = 0
         self._snapshot: Optional[GLINSnapshot] = None
         self._snapshot_epoch = -1
+        self._snapshot_recs = 0         # store length at publish time
+        self._publishes = 0             # snapshot (re)publish count
+        # delta vs the last published snapshot (LSM-style patch-not-rebuild)
+        self._added: Set[int] = set()   # record ids inserted since publish
+        self._tombstones: Set[int] = set()  # published records deleted since
         self._payload = None
-        self._payload_epoch = -1
+        self._payload_key: Optional[Tuple[int, int]] = None  # (real rows, V)
         # adaptive candidate capacity: remembered across queries so the
         # overflow ladder (cap doubling) is walked once, not per call
         self._cap = self.config.initial_cap
@@ -180,19 +206,33 @@ class SpatialIndex:
         st["epoch"] = self._epoch
         st["snapshot_epoch"] = self._snapshot_epoch
         st["snapshot_stale"] = self.snapshot_is_stale()
+        st["delta_size"] = self.delta_size()
+        st["snapshot_publishes"] = self._publishes
         return st
 
     # ------------------------------------------------------------ maintenance
     def insert(self, verts: np.ndarray, nverts: int, kind: int = 0) -> int:
         rec = self.glin.insert(verts, nverts, kind)
         self._epoch += 1
+        self._added.add(rec)
         return rec
 
     def delete(self, rec: int) -> bool:
         ok = self.glin.delete(rec)
         if ok:
             self._epoch += 1
+            if rec in self._added:
+                self._added.remove(rec)
+            elif rec < self._snapshot_recs:
+                self._tombstones.add(rec)
+            # else: the record was never published nor added since the last
+            # publish — it cannot appear in snapshot results, nothing to patch
         return ok
+
+    def delta_size(self) -> int:
+        """Records added plus published records tombstoned since the last
+        snapshot publish (the work a ``device+delta`` query must patch)."""
+        return len(self._added) + len(self._tombstones)
 
     # --------------------------------------------------------------- snapshot
     @property
@@ -243,17 +283,35 @@ class SpatialIndex:
                 )
             self._snapshot = snap
             self._snapshot_epoch = self._epoch
+            self._snapshot_recs = len(self.glin.gs)
+            self._publishes += 1
+            self._added.clear()
+            self._tombstones.clear()
         return self._snapshot
 
-    def _device_payload(self):
+    def _published_snapshot(self) -> GLINSnapshot:
+        """The last *published* snapshot, possibly behind the current epoch —
+        only the ``device+delta`` path may serve it, and only together with
+        the tombstone/added patch that restores exactness. Publishes a fresh
+        snapshot when none exists yet (the delta is then empty)."""
+        if self._snapshot is None:
+            return self.snapshot()
+        return self._snapshot
+
+    def _device_payload(self, needed_recs: Optional[int] = None):
         """fp32 device copies of the geometry store, bucket-padded like the
         snapshot (padding rows are never gathered: snapshot ``recs`` only
         holds real record ids). Keyed on the store's (records, vertex
-        capacity) rather than the epoch: deletes never touch the store, so
-        they must not force a multi-MB re-upload."""
+        capacity) rather than the epoch, and reused as long as it covers
+        ``needed_recs`` (the store length the snapshot being served
+        references): the store is append-only and deletes never touch it, so
+        neither deletes nor inserts past the snapshot may force a multi-MB
+        re-upload."""
         gs = self.glin.gs
-        store_key = (len(gs), gs.verts.shape[1])
-        if self._payload is None or self._payload_epoch != store_key:
+        width = gs.verts.shape[1]
+        need = len(gs) if needed_recs is None else needed_recs
+        if (self._payload is None or self._payload_key[1] != width
+                or self._payload_key[0] < need):
             n = len(gs)
             m = self._padded(n)
             verts = np.zeros((m, *gs.verts.shape[1:]), np.float32)
@@ -266,7 +324,7 @@ class SpatialIndex:
             mbrs[:n] = gs.mbrs
             self._payload = (jnp.asarray(verts), jnp.asarray(nverts),
                              jnp.asarray(kinds), jnp.asarray(mbrs))
-            self._payload_epoch = store_key
+            self._payload_key = (n, width)
         return self._payload
 
     def _check_augmentable(self, relation: str, base) -> None:
@@ -290,21 +348,35 @@ class SpatialIndex:
         base = get_relation(rel.base_name())
         self._check_augmentable(batch.relation, base)
         stale = self.snapshot_is_stale()
+        delta = self.delta_size()
+        # patch viable: a snapshot has been published, the per-query patch
+        # work is bounded (delta_patch_max), and the delta has not yet hit
+        # the republish point (refresh_threshold)
+        patchable = (self._snapshot is not None
+                     and delta <= cfg.delta_patch_max
+                     and delta < cfg.refresh_threshold)
 
         def host(reason):
-            return QueryPlan("host", "window", rel.name, base.name, False, reason)
+            return QueryPlan("host", "window", rel.name, base.name, False,
+                             reason, delta)
 
         def device(reason):
             return QueryPlan("device", "window", rel.name, base.name, stale,
-                             reason)
+                             reason, delta)
 
-        if batch.collect_stats and batch.backend == "device":
+        def patched(reason):
+            return QueryPlan("device+delta", "window", rel.name, base.name,
+                             self._snapshot is None, reason, delta)
+
+        if batch.collect_stats and batch.backend in ("device", "device+delta"):
             raise ValueError("collect_stats is host-only; drop it or force "
                              "backend='host'")
         if batch.backend == "host":
             return host("forced by caller")
         if batch.backend == "device":
             return device("forced by caller")
+        if batch.backend == "device+delta":
+            return patched("forced by caller")
         if batch.backend is not None:
             raise ValueError(f"unknown backend {batch.backend!r}")
         if batch.collect_stats:
@@ -314,10 +386,22 @@ class SpatialIndex:
         q = len(batch)
         if q < cfg.device_min_batch:
             return host(f"batch of {q} < device_min_batch={cfg.device_min_batch}")
-        if stale and q < cfg.stale_rebuild_min_batch:
+        if not stale:
+            return device(f"batch of {q} windows on {jax.default_backend()}")
+        if patchable:
+            return patched(f"snapshot stale; delta of {delta} <= "
+                           f"delta_patch_max={cfg.delta_patch_max}: patching "
+                           "instead of republishing")
+        if q < cfg.stale_rebuild_min_batch:
             return host(f"snapshot stale and batch of {q} < "
                         f"stale_rebuild_min_batch={cfg.stale_rebuild_min_batch}")
-        return device(f"batch of {q} windows on {jax.default_backend()}")
+        if self._snapshot is None:
+            return device(f"no published snapshot yet: publishing for "
+                          f"batch of {q}")
+        return device(f"snapshot stale; delta of {delta} not patchable "
+                      f"(delta_patch_max={cfg.delta_patch_max}, "
+                      f"refresh_threshold={cfg.refresh_threshold}): "
+                      f"republishing for batch of {q}")
 
     # ------------------------------------------------------------------ query
     def query(self, batch, relation: Optional[str] = None, **kw) -> QueryResult:
@@ -337,7 +421,7 @@ class SpatialIndex:
         plan = self.plan(batch)
         if batch.kind == "knn":
             return self._run_knn(batch, plan)
-        if plan.backend == "device":
+        if plan.backend in ("device", "device+delta"):
             ids = self._run_device(batch, plan)
             stats = None
         else:
@@ -377,8 +461,12 @@ class SpatialIndex:
     def _run_device(self, batch: QueryBatch, plan: QueryPlan) -> List[np.ndarray]:
         cfg = self.config
         rel = get_relation(batch.relation)
-        snap = self.snapshot()              # never serves a stale epoch
-        verts, nv, kd, mb = self._device_payload()
+        patch = plan.backend == "device+delta"
+        # device+delta serves the published snapshot and patches the delta on
+        # top; plain device republishes first — either way a query answer
+        # always reflects the current epoch exactly
+        snap = self._published_snapshot() if patch else self.snapshot()
+        verts, nv, kd, mb = self._device_payload(self._snapshot_recs)
         wj = jnp.asarray(batch.windows.astype(np.float32))
         cap, budget = self._cap, cfg.exact_budget
         while True:
@@ -412,10 +500,43 @@ class SpatialIndex:
                 budget = 0
         hits = np.asarray(hits)
         ids = [np.sort(row[row >= 0]).astype(np.int64) for row in hits]
+        if patch:
+            ids = self._patch_delta(batch, ids)
         if rel.complement_of is not None:
             live = np.nonzero(self.glin._live_mask())[0].astype(np.int64)
             ids = [np.setdiff1d(live, r) for r in ids]
         return ids
+
+    def _patch_delta(self, batch: QueryBatch, ids: List[np.ndarray]
+                     ) -> List[np.ndarray]:
+        """Restore exactness of snapshot results at the current epoch: mask
+        out tombstoned records and brute-force check the added set (fp32, to
+        match the device precision contract) against the *base* relation —
+        complement finishing happens after, on top of the patched ids."""
+        if not (self._tombstones or self._added):
+            return ids
+        gs = self.glin.gs
+        base = get_relation(batch.relation).base_name()
+        pred = get_relation(base).predicate
+        tombs = (np.fromiter(self._tombstones, np.int64,
+                             len(self._tombstones))
+                 if self._tombstones else None)
+        added = np.asarray(sorted(self._added), np.int64)
+        if added.shape[0]:
+            av = gs.verts[added].astype(np.float32)
+            an, ak = gs.nverts[added], gs.kinds[added]
+        out: List[np.ndarray] = []
+        for qi, h in enumerate(ids):
+            if tombs is not None:
+                h = h[~np.isin(h, tombs)]
+            if added.shape[0]:
+                w32 = batch.windows[qi].astype(np.float32)
+                ok = np.asarray(pred(w32, av, an, ak))
+                # added ids all postdate (exceed) every snapshot id, so the
+                # concatenation stays ascending
+                h = np.concatenate([h, added[ok]])
+            out.append(h)
+        return out
 
     def _run_knn(self, batch: QueryBatch, plan: QueryPlan) -> QueryResult:
         ids, dists = [], []

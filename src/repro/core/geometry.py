@@ -173,7 +173,6 @@ def geoms_cover_rect(rect, verts, nverts, kinds, xp=np):
 # ---------------------------------------------------------------------------
 def rect_intersects_polygons(rect, verts, nverts, xp=np):
     """(4,), (N,V,2), (N,) -> (N,) bool. Exact convex-polygon vs rect."""
-    n = verts.shape[0]
     valid = _valid_mask(verts, nverts, xp)  # (N, V)
     x, y = verts[..., 0], verts[..., 1]
 
@@ -185,7 +184,8 @@ def rect_intersects_polygons(rect, verts, nverts, xp=np):
 
     # Rect axes (== MBR overlap test).
     axis_sep = (
-        (px_max < rect[0]) | (rect[2] < px_min) | (py_max < rect[1]) | (rect[3] < py_min)
+        (px_max < rect[0]) | (rect[2] < px_min)
+        | (py_max < rect[1]) | (rect[3] < py_min)
     )
 
     # Polygon edge normals. Edge i: v[i] -> v[(i+1) mod nv]; padded edges are
@@ -210,7 +210,8 @@ def rect_intersects_polygons(rect, verts, nverts, xp=np):
     # Project the 4 rect corners onto each edge normal.
     cx = xp.stack([rect[0], rect[2], rect[2], rect[0]])
     cy = xp.stack([rect[1], rect[1], rect[3], rect[3]])
-    proj_rect = nx_[:, :, None] * cx[None, None, :] + ny_[:, :, None] * cy[None, None, :]
+    proj_rect = (nx_[:, :, None] * cx[None, None, :]
+                 + ny_[:, :, None] * cy[None, None, :])
     pr_min = xp.min(proj_rect, axis=-1)
     pr_max = xp.max(proj_rect, axis=-1)
 

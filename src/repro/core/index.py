@@ -19,7 +19,7 @@ import numpy as np
 from . import geometry as geom
 from .datasets import GeometrySet
 from .model import (GLINModelConfig, InternalNode, LeafNode, build_tree,
-                    leaves_in_order, probe, tree_stats)
+                    probe, tree_stats)
 from .piecewise import PiecewiseFunction
 from .relations import get_relation
 from .zorder import mbr_to_zinterval_np
@@ -282,10 +282,13 @@ class GLIN:
         if leaf.size + sib.size > cfg.max_leaf:
             return
         lo_leaf, hi_leaf = (leaf, sib) if leaf.cell == 0 else (sib, leaf)
-        keys = np.concatenate([lo_leaf.keys[: lo_leaf.size], hi_leaf.keys[: hi_leaf.size]])
-        recs = np.concatenate([lo_leaf.recs[: lo_leaf.size], hi_leaf.recs[: hi_leaf.size]])
+        keys = np.concatenate([lo_leaf.keys[: lo_leaf.size],
+                               hi_leaf.keys[: hi_leaf.size]])
+        recs = np.concatenate([lo_leaf.recs[: lo_leaf.size],
+                               hi_leaf.recs[: hi_leaf.size]])
         merged = LeafNode(keys, recs, parent.dlo, parent.dhi)
-        merged.set_mbr_from(self.gs.mbrs[merged.recs[: merged.size]])  # fresh MBR (§VII)
+        # fresh MBR (§VII)
+        merged.set_mbr_from(self.gs.mbrs[merged.recs[: merged.size]])
         self._replace_child(parent, merged)
         idx = self.leaves.index(lo_leaf)
         prev = self.leaves[idx - 1] if idx > 0 else None
@@ -307,18 +310,18 @@ class GLIN:
     def all_leaf_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """(keys, recs, leaf_start, leaf_mbr) packed over live records, used by
         the device snapshot and by rebuilds."""
-        total = sum(l.size for l in self.leaves)
+        total = sum(lf.size for lf in self.leaves)
         keys = np.empty(total, np.int64)
         recs = np.empty(total, np.int64)
         starts = np.empty(len(self.leaves) + 1, np.int64)
         mbrs = np.empty((len(self.leaves), 4), np.float64)
         off = 0
-        for i, l in enumerate(self.leaves):
+        for i, lf in enumerate(self.leaves):
             starts[i] = off
-            keys[off : off + l.size] = l.keys[: l.size]
-            recs[off : off + l.size] = l.recs[: l.size]
-            mbrs[i] = l.mbr
-            off += l.size
+            keys[off : off + lf.size] = lf.keys[: lf.size]
+            recs[off : off + lf.size] = lf.recs[: lf.size]
+            mbrs[i] = lf.mbr
+            off += lf.size
         starts[-1] = off
         return keys, recs, starts, mbrs
 

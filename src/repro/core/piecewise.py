@@ -68,7 +68,8 @@ class PiecewiseFunction:
         pw.min_zmin = zmin_g.min(axis=1).astype(np.int64)
         real = np.where(zmin_g == np.iinfo(np.int64).max, 0, zmin_g)
         pw.sum_zmin = real.astype(np.float64).sum(axis=1)
-        pw.count = np.minimum(k, np.maximum(0, n - np.arange(n_pieces) * k)).astype(np.int64)
+        pw.count = np.minimum(
+            k, np.maximum(0, n - np.arange(n_pieces) * k)).astype(np.int64)
         pw.domain_lo = int(zmax_s[0])
         pw._suffix_min = None
         return pw
@@ -87,7 +88,8 @@ class PiecewiseFunction:
             if self.num_pieces == 0:
                 self._suffix_min = np.empty(0, np.int64)
             else:
-                self._suffix_min = np.minimum.accumulate(self.min_zmin[::-1])[::-1].copy()
+                self._suffix_min = np.minimum.accumulate(
+                    self.min_zmin[::-1])[::-1].copy()
         return self._suffix_min
 
     def suffix_min(self) -> np.ndarray:

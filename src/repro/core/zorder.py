@@ -58,9 +58,12 @@ class ZGrid:
     y0: float
     cell_size: float
 
-    def quantize_np(self, x: np.ndarray, y: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        qx = np.floor((np.asarray(x, np.float64) - self.x0) / self.cell_size).astype(np.int64)
-        qy = np.floor((np.asarray(y, np.float64) - self.y0) / self.cell_size).astype(np.int64)
+    def quantize_np(self, x: np.ndarray, y: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        qx = np.floor((np.asarray(x, np.float64) - self.x0)
+                      / self.cell_size).astype(np.int64)
+        qy = np.floor((np.asarray(y, np.float64) - self.y0)
+                      / self.cell_size).astype(np.int64)
         lim = (1 << BITS_PER_DIM) - 1
         return np.clip(qx, 0, lim), np.clip(qy, 0, lim)
 
@@ -148,7 +151,8 @@ def split_hilo_np(z: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
 
 
 def pack_hilo_np(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
-    return (np.asarray(hi).astype(np.int64) << LO_LIMB_BITS) | np.asarray(lo).astype(np.int64)
+    return ((np.asarray(hi).astype(np.int64) << LO_LIMB_BITS)
+            | np.asarray(lo).astype(np.int64))
 
 
 # ---------------------------------------------------------------------------
@@ -164,7 +168,8 @@ def _part1by1_jnp(v: jnp.ndarray) -> jnp.ndarray:
     return v
 
 
-def morton_encode_hilo(qx: jnp.ndarray, qy: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def morton_encode_hilo(qx: jnp.ndarray, qy: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """30-bit int32 coords -> (hi, lo) int32 Z-address limbs.
 
     The key identity: interleaving bits [0,15) of x/y yields z bits [0,30)

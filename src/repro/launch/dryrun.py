@@ -20,7 +20,6 @@ Usage:
   ... --resume     # skip cells whose artifact already exists
 """
 import argparse
-import dataclasses
 import json
 import pathlib
 import time
@@ -34,7 +33,8 @@ from repro.launch.mesh import make_production_mesh
 from repro.sharding import MeshRules
 from repro.utils import roofline
 
-ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+ART_DIR = (pathlib.Path(__file__).resolve().parents[3]
+           / "benchmarks" / "artifacts" / "dryrun")
 
 
 def _mem_analysis(compiled):
@@ -88,7 +88,6 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
         with mesh:
             lowered = jax.jit(step, in_shardings=in_sh,
                               out_shardings=out_sh).lower(*specs)
-            hlo = lowered.as_text()
             compiled = lowered.compile()
         rec["tokens"] = num_queries
         cfg = None
@@ -119,12 +118,12 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
         with mesh:
             lowered = jax.jit(step, in_shardings=in_sh,
                               out_shardings=out_sh).lower(*specs)
-            hlo = lowered.as_text()
             compiled = lowered.compile()
 
     rec["lower_compile_s"] = round(time.time() - t0, 1)
     rec["memory"] = _mem_analysis(compiled)
-    rec["cost_analysis_raw"] = _cost_analysis(compiled)  # per-computation; see utils/hlo.py
+    # per-computation; see utils/hlo.py
+    rec["cost_analysis_raw"] = _cost_analysis(compiled)
 
     # Per-chip costs from the partitioned module, with while-loop trip-count
     # scaling (XLA's cost_analysis counts loop bodies once — utils/hlo.py).
@@ -189,9 +188,10 @@ def main() -> None:
                 extra = ""
                 if status == "ok":
                     r = rec["roofline"]
+                    gib = rec["memory"].get("total_bytes_per_device", 0) / 2**30
                     extra = (f" compile={rec['lower_compile_s']}s"
                              f" dominant={r['dominant']}"
-                             f" mem/dev={rec['memory'].get('total_bytes_per_device', 0)/2**30:.2f}GiB")
+                             f" mem/dev={gib:.2f}GiB")
                 print(f"[{status}] {name}{extra}", flush=True)
     raise SystemExit(1 if failures else 0)
 

@@ -25,14 +25,12 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
 from repro.configs.base import get_arch
 from repro.data.pipeline import Prefetcher, SyntheticLM
 from repro.models import transformer as tf
-from repro.sharding import constrain, use_rules
+from repro.sharding import constrain
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
 
@@ -91,7 +89,8 @@ def main(argv=None) -> int:
             if step >= args.steps:
                 break
             params, opt_state, metrics = step_fn(params, opt_state, batch)
-            if args.simulate_failure_at is not None and step == args.simulate_failure_at:
+            if (args.simulate_failure_at is not None
+                    and step == args.simulate_failure_at):
                 # Drain in-flight async saves so the crash point is
                 # deterministic: resume then restores the last boundary
                 # checkpoint regardless of IO load. Torn-write recovery is

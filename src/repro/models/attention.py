@@ -17,7 +17,7 @@ numerical oracle for it.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,18 +31,18 @@ NEG_INF = -1e30
 # Params
 # ---------------------------------------------------------------------------
 def init_attn_params(cfg, key, dtype) -> Dict[str, jax.Array]:
-    l, d = cfg.n_layers, cfg.d_model
+    nl, d = cfg.n_layers, cfg.d_model
     a, kv = cfg.attn_dim, cfg.kv_dim
     ks = jax.random.split(key, 4)
     p = {
-        "wq": he_init(ks[0], (l, d, a), d, dtype),
-        "wk": he_init(ks[1], (l, d, kv), d, dtype),
-        "wv": he_init(ks[2], (l, d, kv), d, dtype),
-        "wo": he_init(ks[3], (l, a, d), a, dtype),
+        "wq": he_init(ks[0], (nl, d, a), d, dtype),
+        "wk": he_init(ks[1], (nl, d, kv), d, dtype),
+        "wv": he_init(ks[2], (nl, d, kv), d, dtype),
+        "wo": he_init(ks[3], (nl, a, d), a, dtype),
     }
     if cfg.qk_norm:
-        p["qn"] = jnp.ones((l, cfg.head_dim), dtype)
-        p["kn"] = jnp.ones((l, cfg.head_dim), dtype)
+        p["qn"] = jnp.ones((nl, cfg.head_dim), dtype)
+        p["kn"] = jnp.ones((nl, cfg.head_dim), dtype)
     return p
 
 
@@ -183,12 +183,12 @@ def init_decode_cache(cfg, batch: int, seq_len: int, dtype,
                       as_specs: bool = False):
     """Per-layer KV cache pytree ((L, B, W, Hkv, Dh) stacked)."""
     w = cache_window(cfg, seq_len)
-    l = cfg.n_layers
+    nl = cfg.n_layers
     shapes = {
-        "k": ((l, batch, w, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "v": ((l, batch, w, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "abs_pos": ((l, batch, w), jnp.int32),
-        "pos": ((l, batch), jnp.int32),
+        "k": ((nl, batch, w, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": ((nl, batch, w, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "abs_pos": ((nl, batch, w), jnp.int32),
+        "pos": ((nl, batch), jnp.int32),
     }
     if as_specs:
         return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}

@@ -20,19 +20,19 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from .layers import dense, he_init
+from .layers import he_init
 
 __all__ = ["init_moe_params", "moe_logical", "moe_ffn"]
 
 
 def init_moe_params(cfg, key, dtype) -> Dict[str, jax.Array]:
-    l, d, f, e = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_experts
+    nl, d, f, e = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_experts
     ks = jax.random.split(key, 4)
     p = {
-        "router": he_init(ks[0], (l, d, e), d, jnp.float32),
-        "wg": he_init(ks[1], (l, e, d, f), d, dtype),
-        "wu": he_init(ks[2], (l, e, d, f), d, dtype),
-        "wd": he_init(ks[3], (l, e, f, d), f, dtype),
+        "router": he_init(ks[0], (nl, d, e), d, jnp.float32),
+        "wg": he_init(ks[1], (nl, e, d, f), d, dtype),
+        "wu": he_init(ks[2], (nl, e, d, f), d, dtype),
+        "wd": he_init(ks[3], (nl, e, f, d), f, dtype),
     }
     if not cfg.mlp_gated:
         del p["wg"]
@@ -70,7 +70,6 @@ def _moe_chunk(xf: jax.Array, p: Dict[str, jax.Array], cfg, constrain,
     flat_e = eidx.reshape(-1).astype(jnp.int32)       # (T*k,)
     order = jnp.argsort(flat_e, stable=True)
     se = flat_e[order]
-    tok = (order // k).astype(jnp.int32)
     counts = jnp.bincount(flat_e, length=e)
     starts = jnp.cumsum(counts) - counts
     ranks = (jnp.arange(t * k, dtype=jnp.int32) - starts[se]).astype(jnp.int32)

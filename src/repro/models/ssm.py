@@ -22,22 +22,22 @@ __all__ = ["init_ssm_params", "ssm_logical", "ssd_chunked", "ssm_mixer_train",
 
 
 def init_ssm_params(cfg, key, dtype) -> Dict[str, jax.Array]:
-    l, d = cfg.n_layers, cfg.d_model
+    nl, d = cfg.n_layers, cfg.d_model
     di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
     ks = jax.random.split(key, 8)
     return {
-        "wz": he_init(ks[0], (l, d, di), d, dtype),
-        "wx": he_init(ks[1], (l, d, di), d, dtype),
-        "wb": he_init(ks[2], (l, d, n), d, dtype),
-        "wc": he_init(ks[3], (l, d, n), d, dtype),
-        "wdt": he_init(ks[4], (l, d, h), d, dtype),
-        "dt_bias": jnp.zeros((l, h), jnp.float32) + 0.5,
-        "a_log": jnp.zeros((l, h), jnp.float32),          # A = -exp(a_log)
-        "skip_d": jnp.ones((l, h), jnp.float32),
-        "conv_w": he_init(ks[5], (l, cfg.conv_width, di + 2 * n),
+        "wz": he_init(ks[0], (nl, d, di), d, dtype),
+        "wx": he_init(ks[1], (nl, d, di), d, dtype),
+        "wb": he_init(ks[2], (nl, d, n), d, dtype),
+        "wc": he_init(ks[3], (nl, d, n), d, dtype),
+        "wdt": he_init(ks[4], (nl, d, h), d, dtype),
+        "dt_bias": jnp.zeros((nl, h), jnp.float32) + 0.5,
+        "a_log": jnp.zeros((nl, h), jnp.float32),         # A = -exp(a_log)
+        "skip_d": jnp.ones((nl, h), jnp.float32),
+        "conv_w": he_init(ks[5], (nl, cfg.conv_width, di + 2 * n),
                           cfg.conv_width, dtype),
-        "norm": jnp.ones((l, di), dtype),
-        "out": he_init(ks[6], (l, di, d), di, dtype),
+        "norm": jnp.ones((nl, di), dtype),
+        "out": he_init(ks[6], (nl, di, d), di, dtype),
     }
 
 
@@ -199,11 +199,11 @@ def ssm_mixer_decode(x, p, cfg, cache, constrain
 
 
 def init_ssm_cache(cfg, batch: int, dtype, as_specs: bool = False):
-    l = cfg.n_layers
+    nl = cfg.n_layers
     shapes = {
-        "conv": ((l, batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state),
+        "conv": ((nl, batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state),
                  dtype),
-        "state": ((l, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+        "state": ((nl, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
                   jnp.float32),
     }
     if as_specs:

@@ -16,8 +16,7 @@ Weights are stacked along a leading layer axis and the stack is a single
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,12 +42,12 @@ def pick_chunk(s: int, target: int = 1024) -> int:
 # Parameters
 # ---------------------------------------------------------------------------
 def _mlp_init(cfg, key, dtype):
-    l, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    nl, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
     ks = jax.random.split(key, 3)
-    p = {"wu": he_init(ks[1], (l, d, f), d, dtype),
-         "wd": he_init(ks[2], (l, f, d), f, dtype)}
+    p = {"wu": he_init(ks[1], (nl, d, f), d, dtype),
+         "wd": he_init(ks[2], (nl, f, d), f, dtype)}
     if cfg.mlp_gated:
-        p["wg"] = he_init(ks[0], (l, d, f), d, dtype)
+        p["wg"] = he_init(ks[0], (nl, d, f), d, dtype)
     return p
 
 
@@ -62,18 +61,18 @@ def _mlp_logical(cfg):
 def init_params(cfg, key) -> Dict[str, Any]:
     dtype = jnp.dtype(cfg.dtype)
     keys = jax.random.split(key, 8)
-    l, d, v = cfg.n_layers, cfg.d_model, cfg.vocab
+    nl, d, v = cfg.n_layers, cfg.d_model, cfg.vocab
     params: Dict[str, Any] = {
         "embed": he_init(keys[0], (v, d), d, dtype),
         "final_norm": jnp.ones((d,), dtype),
     }
-    blocks: Dict[str, Any] = {"ln1": jnp.ones((l, d), dtype)}
+    blocks: Dict[str, Any] = {"ln1": jnp.ones((nl, d), dtype)}
     if cfg.has_attention:
         blocks["attn"] = attn.init_attn_params(cfg, keys[1], dtype)
     if cfg.has_ssm:
         blocks["ssm"] = ssm_mod.init_ssm_params(cfg, keys[2], dtype)
     if cfg.d_ff > 0:
-        blocks["ln2"] = jnp.ones((l, d), dtype)
+        blocks["ln2"] = jnp.ones((nl, d), dtype)
         if cfg.is_moe:
             blocks["moe"] = moe_mod.init_moe_params(cfg, keys[3], dtype)
         else:
@@ -262,8 +261,6 @@ def prefill(params, cfg, batch, constrain, seq_len_cache: Optional[int] = None):
     Returns (last-token logits (B,V), cache pytree with stacked L axis)."""
     logits, caches = forward_train(params, cfg, batch, constrain, remat=False,
                                    collect_cache=True, logits_last_only=True)
-    b = logits.shape[0]
-    s_in = logits.shape[1]
     out = {}
     if cfg.has_attention:
         kv = caches["attn"]                       # k,v: (L,B,S',Hkv,Dh)

@@ -73,8 +73,11 @@ class SpatialQueryServer:
     queue by relation, issues ONE facade query per relation group (so the
     planner sees the full batch and can take the device path), and returns
     ``{ticket: hit ids}``. ``query`` is the submit-all + flush convenience.
-    Writes are delegated to the facade, which bumps the snapshot epoch —
-    a flush after a write can never serve stale results.
+    Writes are delegated to the facade, which records them as a delta against
+    the published device snapshot — a flush after a write can never serve
+    stale results, and under a write-heavy stream the planner serves the
+    ``device+delta`` backend (snapshot + tombstone/added patch) instead of
+    republishing the snapshot per write (``backend_counts`` records the mix).
     """
 
     def __init__(self, index: SpatialIndex):
@@ -84,6 +87,11 @@ class SpatialQueryServer:
         self.served_queries = 0
         self.served_batches = 0
         self.write_ops = 0
+        self.backend_counts: Dict[str, int] = {}  # plan.backend -> batches
+
+    def _record_plan(self, res) -> None:
+        b = res.plan.backend
+        self.backend_counts[b] = self.backend_counts.get(b, 0) + 1
 
     # ------------------------------------------------------------------ reads
     def submit(self, window: np.ndarray, relation: str = "intersects") -> int:
@@ -104,6 +112,7 @@ class SpatialQueryServer:
         for rel, items in by_rel.items():
             windows = np.stack([w for _, w in items])
             res = self.index.query(windows, rel)
+            self._record_plan(res)
             for (ticket, _), ids in zip(items, res):
                 out[ticket] = ids
         # only drop the queue once every group succeeded — an exception above
@@ -118,6 +127,7 @@ class SpatialQueryServer:
         """Batched one-shot: queue nothing, serve ``windows`` directly."""
         res = self.index.query(
             QueryBatch.window(windows, relation, backend=backend))
+        self._record_plan(res)
         self.served_queries += len(res)
         self.served_batches += 1
         return res

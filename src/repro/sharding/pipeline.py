@@ -21,7 +21,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["gpipe", "bubble_fraction"]
 
@@ -61,7 +61,6 @@ def gpipe(stage_fn: Callable, mesh: Mesh, stage_axis: str = "pod"):
         ys = jnp.stack(outs[s - 1:])                 # (M, ...)
         return jax.lax.psum(ys, stage_axis)          # nonzero only at last
 
-    other = tuple(a for a in mesh.axis_names if a != stage_axis)
     from repro.utils.compat import shard_map as compat_shard_map
     return compat_shard_map(inner, mesh,
                             (P(stage_axis), P(*([None]))), P())

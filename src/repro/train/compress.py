@@ -12,7 +12,6 @@ step builder; validated in tests (bounded error, toy-model convergence).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax

@@ -36,7 +36,9 @@ def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def adamw_init(params) -> Dict[str, Any]:
-    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     return {
         "mu": jax.tree_util.tree_map(zeros32, params),
         "nu": jax.tree_util.tree_map(zeros32, params),
@@ -46,7 +48,8 @@ def adamw_init(params) -> Dict[str, Any]:
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    return jnp.sqrt(
+        sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
 
 
 def adamw_update(grads, opt_state, params, cfg: AdamWConfig
@@ -66,7 +69,8 @@ def adamw_update(grads, opt_state, params, cfg: AdamWConfig
         nu = b2 * nu + (1 - b2) * g32 * g32
         mhat = mu / c1
         nhat = nu / c2
-        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        delta = (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                 + cfg.weight_decay * p.astype(jnp.float32))
         return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
 
     flat_p, tdef = jax.tree_util.tree_flatten(params)

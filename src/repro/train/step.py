@@ -8,7 +8,7 @@ produced by :func:`input_specs` (nothing is allocated).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,9 +64,12 @@ def param_shardings(cfg: ArchConfig, rules: MeshRules):
     def to_sharding(lg, shp):
         return NamedSharding(rules.mesh, logical_to_spec(rules, lg, tuple(shp.shape)))
 
-    is_lg = lambda x: isinstance(x, tuple) and all(
-        isinstance(e, (str, type(None))) for e in x)
-    shardings = jax.tree_util.tree_map(to_sharding, logical, shapes, is_leaf=is_lg)
+    def is_lg(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+
+    shardings = jax.tree_util.tree_map(to_sharding, logical, shapes,
+                                       is_leaf=is_lg)
     return shapes, shardings
 
 
@@ -135,7 +138,6 @@ def build_prefill_step(cfg: ArchConfig, shape: ShapeConfig, rules: MeshRules):
     batch = input_specs(cfg, shape)
     b_sh = _batch_spec(rules, batch)
     cache_sh = _cache_shardings(cfg, shape, rules)
-    rep = NamedSharding(rules.mesh, P())
     logits_sh = NamedSharding(
         rules.mesh, logical_to_spec(rules, ("batch", "vocab"),
                                     (shape.global_batch, cfg.vocab)))
@@ -153,8 +155,10 @@ def _cache_shardings(cfg, shape, rules: MeshRules):
     def to_sh(lg, shp):
         return NamedSharding(rules.mesh, logical_to_spec(rules, lg, tuple(shp.shape)))
 
-    is_lg = lambda x: isinstance(x, tuple) and all(
-        isinstance(e, (str, type(None))) for e in x)
+    def is_lg(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+
     return jax.tree_util.tree_map(to_sh, logical, cache_specs, is_leaf=is_lg)
 
 

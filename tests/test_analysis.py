@@ -2,7 +2,6 @@
 must be exact on analytically-countable programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.utils.hlo import analyze_hlo
 from repro.utils import roofline
@@ -56,8 +55,9 @@ def f(x, w):
 x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
 w = jax.ShapeDtypeStruct((128, 256), jnp.float32)
 with mesh:
-    c = jax.jit(f, in_shardings=(NamedSharding(mesh, P("data", None)),
-                                 NamedSharding(mesh, P(None, "model")))).lower(x, w).compile()
+    c = jax.jit(f, in_shardings=(
+        NamedSharding(mesh, P("data", None)),
+        NamedSharding(mesh, P(None, "model")))).lower(x, w).compile()
 cost = analyze_hlo(c.as_text())
 # per-chip dot flops = total / 8
 assert abs(cost.flops - 2*64*128*256/8) / (2*64*128*256/8) < 1e-6, cost.flops

@@ -1,15 +1,23 @@
-"""Device-resident GLIN: snapshot probing and batched query vs host oracle,
-plus the LSM delta-buffer manager under a live update stream."""
+"""Device-resident GLIN: snapshot probing and batched query vs host oracle.
+
+Snapshots are published through the ``SpatialIndex`` facade (unpadded, so
+slot indices match the raw leaf arrays); the delta-patched update stream is
+covered by the facade tests in test_engine.py."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from repro.core import geometry as geom
 from repro.core.datasets import generate, make_query_windows
-from repro.core.delta import SnapshotManager
-from repro.core.device import batch_probe, batch_query, snapshot_from_host
+from repro.core.device import batch_probe, batch_query
+from repro.core.engine import EngineConfig, SpatialIndex
 from repro.core.index import GLIN, GLINConfig
-from repro.core.zorder import mbr_to_zinterval_np, split_hilo_np
+from repro.core.zorder import split_hilo_np
+
+
+def _publish(g: GLIN):
+    """Unpadded device snapshot of a host GLIN, via the facade publisher."""
+    return SpatialIndex(g, EngineConfig(pad_quantum=0)).snapshot()
 
 
 def _fp32_oracle(gs, w, relation):
@@ -25,7 +33,7 @@ def _fp32_oracle(gs, w, relation):
 def test_probe_matches_host_lower_bound(name):
     gs = generate(name, 5000, seed=3)
     g = GLIN.build(gs, GLINConfig(piece_limitation=300))
-    s = snapshot_from_host(g)
+    s = _publish(g)
     keys, _, _, _ = g.all_leaf_arrays()
     rng = np.random.default_rng(0)
     # present keys, absent keys, boundary keys
@@ -44,7 +52,7 @@ def test_probe_matches_host_lower_bound(name):
 def test_batch_query_matches_fp32_oracle(relation):
     gs = generate("cluster", 8000, seed=1)
     g = GLIN.build(gs, GLINConfig(piece_limitation=400))
-    s = snapshot_from_host(g)
+    s = _publish(g)
     wins = make_query_windows(gs, 0.005, 6, seed=4).astype(np.float32)
     hits, counts = batch_query(
         s, jnp.asarray(wins), jnp.asarray(gs.verts.astype(np.float32)),
@@ -60,7 +68,7 @@ def test_batch_query_matches_fp32_oracle(relation):
 def test_cap_overflow_is_signalled():
     gs = generate("uniform", 4000, seed=2)
     g = GLIN.build(gs, GLINConfig(piece_limitation=200))
-    s = snapshot_from_host(g)
+    s = _publish(g)
     w = np.array([[0.0, 0.0, 1.0, 1.0]], np.float32)  # whole domain
     _, counts = batch_query(
         s, jnp.asarray(w), jnp.asarray(gs.verts.astype(np.float32)),
@@ -69,38 +77,11 @@ def test_cap_overflow_is_signalled():
     assert int(counts[0]) < 0
 
 
-def test_snapshot_manager_stream():
-    gs = generate("cluster", 3000, seed=4)
-    g = GLIN.build(gs, GLINConfig(piece_limitation=150))
-    mgr = SnapshotManager(g, refresh_threshold=120)
-    rng = np.random.default_rng(7)
-    wins = make_query_windows(gs, 0.01, 2, seed=8)
-    for step in range(300):
-        if rng.random() < 0.6:
-            c = rng.uniform(0.1, 0.9, 2)
-            ang = np.sort(rng.uniform(0, 2 * np.pi, 12))
-            verts = np.stack([c[0] + 3e-4 * np.cos(ang),
-                              c[1] + 3e-4 * np.sin(ang)], -1)
-            mgr.insert(verts, 12, 0)
-        else:
-            live = np.nonzero(g._live_mask())[0]
-            mgr.delete(int(rng.choice(live)))
-        if step % 60 == 17:
-            for rel in ("contains", "intersects"):
-                res = mgr.query_device(wins, rel, cap=8192)
-                live = g._live_mask()
-                for qi, r in enumerate(res):
-                    ref = _fp32_oracle(g.gs, wins[qi].astype(np.float32), rel)
-                    ref = ref[live[ref]]
-                    np.testing.assert_array_equal(r, np.sort(ref))
-    assert mgr.refresh_count >= 1
-
-
 def test_two_stage_equals_one_stage():
     """exact_budget path must return identical results when nothing drops."""
     gs = generate("cluster", 6000, seed=6)
     g = GLIN.build(gs, GLINConfig(piece_limitation=300))
-    s = snapshot_from_host(g)
+    s = _publish(g)
     wins = make_query_windows(gs, 0.002, 6, seed=7).astype(np.float32)
     args = (s, jnp.asarray(wins), jnp.asarray(gs.verts.astype(np.float32)),
             jnp.asarray(gs.nverts), jnp.asarray(gs.kinds.astype(np.int32)),
@@ -118,7 +99,7 @@ def test_two_stage_equals_one_stage():
 def test_two_stage_budget_overflow_signalled():
     gs = generate("uniform", 4000, seed=2)
     g = GLIN.build(gs, GLINConfig(piece_limitation=200))
-    s = snapshot_from_host(g)
+    s = _publish(g)
     w = np.array([[0.0, 0.0, 1.0, 1.0]], np.float32)  # everything passes MBR
     _, counts = batch_query(
         s, jnp.asarray(w), jnp.asarray(gs.verts.astype(np.float32)),

@@ -6,8 +6,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
@@ -28,13 +26,13 @@ def test_distributed_glin_query():
         mesh = make_auto_mesh((4,2), ("data","model"))
         from repro.core.datasets import generate, make_query_windows
         from repro.core.index import GLIN, GLINConfig
-        from repro.core.device import snapshot_from_host
+        from repro.core.engine import EngineConfig, SpatialIndex
         from repro.core.distributed import shard_glin_arrays, build_glin_query_step
         from repro.core import geometry as geom
 
         gs = generate("cluster", 6000, seed=2)
         g = GLIN.build(gs, GLINConfig(piece_limitation=300))
-        snap = snapshot_from_host(g)
+        snap = SpatialIndex(g, EngineConfig(pad_quantum=0)).snapshot()
         table_np = shard_glin_arrays(g, 4)
         step, in_sh, out_sh = build_glin_query_step(mesh, "intersects", cap=4096)
         wins = make_query_windows(gs, 0.003, 8, seed=5).astype(np.float32)
@@ -138,7 +136,8 @@ def test_gradient_compression_psum():
             return apply_error_feedback(g, e, "data")
         g = np.tile(np.linspace(-1, 1, 64, dtype=np.float32), (8, 1))
         e = np.zeros_like(g)
-        fn = jax.jit(compat_shard_map(ef, mesh, (P("data"), P("data")), (P("data"), P("data"))))
+        fn = jax.jit(compat_shard_map(ef, mesh, (P("data"), P("data")),
+                                      (P("data"), P("data"))))
         tot = np.zeros(64, np.float32)
         for step in range(20):
             avg, e = fn(g, e)

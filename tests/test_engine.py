@@ -1,6 +1,7 @@
 """SpatialIndex facade: one entry point for all relations + knn, planner
-backend selection, epoch-invalidated snapshots under interleaved maintenance
-(split and merge both exercised), and the GLIN.insert vertex-capacity fix."""
+backend selection (host / device / device+delta), epoch-invalidated snapshots
+and LSM-style delta patching under interleaved maintenance (split and merge
+both exercised), and the GLIN.insert vertex-capacity fix."""
 import numpy as np
 import pytest
 
@@ -9,7 +10,9 @@ from repro.core.datasets import generate, make_query_windows
 from repro.core.engine import EngineConfig, QueryBatch, SpatialIndex
 from repro.core.index import GLINConfig
 from repro.core.model import GLINModelConfig
-from repro.core.relations import get_relation, relation_names
+from repro.core.relations import RELATIONS as RELATION_REGISTRY
+from repro.core.relations import (Relation, get_relation, register_relation,
+                                  relation_names)
 
 RELATIONS = ("contains", "intersects", "within", "covers", "disjoint")
 
@@ -183,8 +186,10 @@ def test_interleaved_maintenance_parity_with_split_and_merge():
     check_parity()
 
 
-def test_stale_snapshot_never_served():
-    """Every mutation bumps the epoch; any device answer must reflect it."""
+def test_stale_snapshot_never_served_patched():
+    """Every mutation bumps the epoch; any device answer must reflect it.
+    With delta patching (the default) the published snapshot is NOT
+    republished — the write is patched on top, exactly."""
     idx = _build(n=2000, config=EngineConfig(device_min_batch=1,
                                              stale_rebuild_min_batch=1))
     rng = np.random.default_rng(17)
@@ -192,13 +197,44 @@ def test_stale_snapshot_never_served():
     assert idx.snapshot_epoch == idx.epoch == 0
     rec = idx.insert(_big_polygon(rng, np.array([0.4, 0.4]), r=1e-3), 10, 0)
     assert idx.snapshot_is_stale() and idx.epoch == 1
-    # device-planned query right after the write must see the new record
+    assert idx.delta_size() == 1
+    # the query right after the write must see the new record — served from
+    # the *old* snapshot plus the added-set patch, no republish
+    w = np.array([[0.39, 0.39, 0.41, 0.41]])
+    res = idx.query(w, "intersects")
+    assert res.plan.backend == "device+delta"
+    assert not res.plan.rebuild_snapshot and res.plan.delta_size == 1
+    assert rec in res[0] and res.epoch == 1
+    assert idx.snapshot_epoch == 0 and idx._snapshot is snap0
+    # a delete must disappear from device results immediately; deleting a
+    # never-published record just cancels its added-set entry
+    assert idx.delete(rec)
+    assert idx.delta_size() == 0 and idx.snapshot_is_stale()
+    res = idx.query(w, "intersects")
+    assert res.plan.backend == "device+delta"
+    assert rec not in res[0] and res.epoch == 2 and idx.snapshot_epoch == 0
+    # a tombstoned *published* record is masked out of snapshot results
+    w2 = np.array([[0.3, 0.3, 0.5, 0.5]])
+    victim = int(idx.query(w2, "intersects", backend="host")[0][0])
+    assert idx.delete(victim)
+    res = idx.query(w2, "intersects")
+    assert res.plan.backend == "device+delta" and victim not in res[0]
+
+
+def test_stale_snapshot_republished_when_patching_disabled():
+    """delta_patch_max=0 restores the PR-1 behavior: a stale snapshot is
+    republished before any device execution."""
+    idx = _build(n=2000, config=EngineConfig(device_min_batch=1,
+                                             stale_rebuild_min_batch=1,
+                                             delta_patch_max=0))
+    rng = np.random.default_rng(17)
+    snap0 = idx.snapshot()
+    rec = idx.insert(_big_polygon(rng, np.array([0.4, 0.4]), r=1e-3), 10, 0)
     w = np.array([[0.39, 0.39, 0.41, 0.41]])
     res = idx.query(w, "intersects")
     assert res.plan.backend == "device" and res.plan.rebuild_snapshot
     assert rec in res[0] and res.epoch == 1
     assert idx.snapshot_epoch == 1 and idx.snapshot() is not snap0
-    # a delete must disappear from device results immediately
     assert idx.delete(rec)
     res = idx.query(w, "intersects")
     assert rec not in res[0] and res.epoch == 2 == idx.snapshot_epoch
@@ -206,7 +242,8 @@ def test_stale_snapshot_never_served():
 
 def test_stale_snapshot_small_batch_falls_back_to_host():
     idx = _build(n=2000, config=EngineConfig(device_min_batch=1,
-                                             stale_rebuild_min_batch=64))
+                                             stale_rebuild_min_batch=64,
+                                             delta_patch_max=0))
     idx.snapshot()
     rng = np.random.default_rng(19)
     rec = idx.insert(_big_polygon(rng, np.array([0.6, 0.6]), r=1e-3), 10, 0)
@@ -215,6 +252,206 @@ def test_stale_snapshot_small_batch_falls_back_to_host():
     assert res.plan.backend == "host" and "stale" in res.plan.reason
     assert rec in res[0]
     assert idx.snapshot_epoch == 0      # snapshot untouched, but never served
+
+
+def test_stale_small_batch_patches_instead_of_host_fallback():
+    """With patching enabled the same small stale batch stays on device:
+    patching costs no republish, so stale_rebuild_min_batch does not apply."""
+    idx = _build(n=2000, config=EngineConfig(device_min_batch=1,
+                                             stale_rebuild_min_batch=64))
+    idx.snapshot()
+    rng = np.random.default_rng(19)
+    rec = idx.insert(_big_polygon(rng, np.array([0.6, 0.6]), r=1e-3), 10, 0)
+    w = np.array([[0.59, 0.59, 0.61, 0.61]])
+    res = idx.query(w, "intersects")
+    assert res.plan.backend == "device+delta" and rec in res[0]
+    assert idx.snapshot_epoch == 0
+
+
+# ----------------------------------------------- delta-patched device serving
+def _fp32_grid(gs):
+    """Clamp coordinates to fp32-representable values so fp64 host and fp32
+    device refinement decide identically (see the interleaved test above)."""
+    gs.verts = gs.verts.astype(np.float32).astype(np.float64)
+    gs.mbrs = geom.mbrs_of_verts(gs.verts, gs.nverts)
+    return gs
+
+
+def test_write_heavy_parity_stream():
+    """The headline maintenance scenario: interleaved insert/delete/query
+    with device-delta results equal to host results at EVERY step, crossing
+    republish boundaries (small refresh_threshold) and one vertex-store-width
+    growth (wide-geometry insert between publishes)."""
+    gs = _fp32_grid(generate("cluster", 2000, seed=21))
+    idx = SpatialIndex.build(
+        gs, GLINConfig(piece_limitation=100),
+        EngineConfig(device_min_batch=1, stale_rebuild_min_batch=1,
+                     refresh_threshold=24, delta_patch_max=4096))
+    idx.snapshot()
+    rng = np.random.default_rng(23)
+    wins = make_query_windows(gs, 0.02, 3, seed=4)
+    wins = wins.astype(np.float32).astype(np.float64)
+    width0 = gs.verts.shape[1]
+    patched_plans = 0
+    for step in range(120):
+        if step == 60:  # wide-geometry insert between publishes
+            nv = gs.verts.shape[1] + 4
+            v = _big_polygon(rng, np.array([0.5, 0.5]), r=3e-3, nv=nv)
+            idx.insert(v.astype(np.float32).astype(np.float64), nv, 0)
+        elif rng.random() < 0.6:
+            c = rng.uniform(0.2, 0.8, 2)
+            v = _big_polygon(rng, c, r=3e-4, nv=6)
+            idx.insert(v.astype(np.float32).astype(np.float64), 6, 0)
+        else:
+            live = np.nonzero(idx.glin._live_mask())[0]
+            idx.delete(int(rng.choice(live)))
+        for rel in ("intersects", "contains", "disjoint"):
+            d = idx.query(wins, rel)
+            assert d.plan.backend in ("device", "device+delta")
+            patched_plans += d.plan.backend == "device+delta"
+            h = idx.query(wins, rel, backend="host")
+            for a, b in zip(d, h):
+                np.testing.assert_array_equal(a, b)
+    assert idx.gs.verts.shape[1] > width0        # width growth happened
+    assert idx._publishes >= 3                   # republish boundary crossed
+    assert patched_plans > 200                   # and patching dominated
+
+
+def test_delta_path_no_payload_reupload_between_publishes():
+    """The added-set patch runs host-side: streaming inserts must NOT force
+    per-query re-uploads of the multi-MB geometry payload, and deletes never
+    invalidate it. Only width growth and republish past the cached store do."""
+    idx = _build(n=2000, config=EngineConfig(device_min_batch=1))
+    wins = make_query_windows(idx.gs, 0.01, 8, seed=3)
+    idx.query(wins, "intersects", backend="device")
+    pay0 = idx._payload
+    rng = np.random.default_rng(31)
+    for _ in range(10):
+        idx.insert(_big_polygon(rng, rng.uniform(0.2, 0.8, 2), r=3e-4), 10, 0)
+        res = idx.query(wins, "intersects")
+        assert res.plan.backend == "device+delta"
+        assert idx._payload is pay0
+    live = np.nonzero(idx.glin._live_mask())[0]
+    idx.delete(int(live[0]))
+    idx.query(wins, "intersects")
+    assert idx._payload is pay0
+    # width growth between publishes: payload rebuilt, snapshot NOT republished
+    publishes = idx._publishes
+    nv = idx.gs.verts.shape[1] + 4
+    idx.insert(_big_polygon(rng, np.array([0.5, 0.5]), r=1e-3, nv=nv), nv, 0)
+    res = idx.query(wins, "intersects")
+    assert res.plan.backend == "device+delta"
+    assert idx._payload is not pay0 and idx._publishes == publishes
+
+
+def test_delta_path_shares_adaptive_cap_ladder():
+    """A wide window on the patched path must walk the same overflow ladder
+    as the rebuild path (no fixed-cap OverflowError), remembering the cap."""
+    idx = _build(n=3000, config=EngineConfig(initial_cap=64, max_cap=1 << 15,
+                                             device_min_batch=1))
+    idx.snapshot()
+    rng = np.random.default_rng(37)
+    idx.insert(_big_polygon(rng, np.array([0.4, 0.4]), r=1e-3), 10, 0)
+    whole = np.repeat(np.array([[0.0, 0.0, 1.0, 1.0]]), 2, axis=0)
+    res = idx.query(whole, "covers", backend="device+delta")
+    assert res.plan.backend == "device+delta"
+    np.testing.assert_array_equal(
+        res[0], _oracle(idx, whole[0].astype(np.float32), "covers",
+                        np.float32))
+    assert idx.device_cap > 64                   # ladder walked and remembered
+
+
+@pytest.mark.parametrize("relation", RELATIONS)
+def test_delta_path_serves_every_registry_relation(relation):
+    """The old delta manager's device query crashed on non-device-native
+    relations (passed `relation` through instead of probing the base); the
+    facade delta path must probe the base and complement-finish for all."""
+    idx = _build(n=2000, config=EngineConfig(device_min_batch=1))
+    idx.snapshot()
+    rng = np.random.default_rng(41)
+    for _ in range(5):
+        idx.insert(_big_polygon(rng, rng.uniform(0.3, 0.7, 2), r=3e-4), 10, 0)
+    live = np.nonzero(idx.glin._live_mask())[0]
+    idx.delete(int(live[5]))
+    wins = make_query_windows(idx.gs, 0.01, 4, seed=3)
+    res = idx.query(QueryBatch.window(wins, relation, backend="device+delta"))
+    assert res.plan.backend == "device+delta"
+    assert res.plan.base_relation == get_relation(relation).base_name()
+    for qi, w in enumerate(wins):
+        np.testing.assert_array_equal(
+            res[qi], _oracle(idx, w.astype(np.float32), relation, np.float32))
+
+
+def test_plan_reason_every_branch():
+    """Every QueryPlan.reason branch of the three-backend planner."""
+    cfg = EngineConfig(device_min_batch=4, stale_rebuild_min_batch=8,
+                       delta_patch_max=2, refresh_threshold=2)
+    idx = _build(n=1000, pl=100, config=cfg)
+    one = make_query_windows(idx.gs, 0.01, 1, seed=2)
+    big = np.repeat(one, 8, axis=0)
+    rng = np.random.default_rng(43)
+
+    # knn / forced backends / stats / validation
+    assert "knn" in idx.plan(QueryBatch.knn([[0.5, 0.5]], k=3)).reason
+    for be in ("host", "device", "device+delta"):
+        p = idx.plan(QueryBatch.window(big, "intersects", backend=be))
+        assert p.backend == be and p.reason == "forced by caller"
+    p = idx.plan(QueryBatch.window(big, "intersects", collect_stats=True))
+    assert p.backend == "host" and "host-only" in p.reason
+    for be in ("device", "device+delta"):
+        with pytest.raises(ValueError, match="collect_stats"):
+            idx.plan(QueryBatch.window(big, "intersects", backend=be,
+                                       collect_stats=True))
+    with pytest.raises(ValueError, match="unknown backend"):
+        idx.plan(QueryBatch.window(big, "intersects", backend="tpu"))
+
+    # a relation whose base is not device-native always plans host
+    register_relation(Relation(
+        name="_hostonly", predicate=get_relation("intersects").predicate,
+        augment=False, mbr_prefilter=get_relation("intersects").mbr_prefilter,
+        device_native=False))
+    try:
+        p = idx.plan(big, "_hostonly")
+        assert p.backend == "host" and "not device-native" in p.reason
+    finally:
+        del RELATION_REGISTRY["_hostonly"]
+
+    # batch-size and staleness ladder
+    p = idx.plan(one, "intersects")
+    assert p.backend == "host" and "device_min_batch" in p.reason
+    p = idx.plan(big, "intersects")      # nothing published yet
+    assert p.backend == "device" and "no published snapshot" in p.reason
+    assert p.rebuild_snapshot
+    idx.snapshot()
+    p = idx.plan(big, "intersects")
+    assert p.backend == "device" and "windows on" in p.reason
+    assert not p.rebuild_snapshot and p.delta_size == 0
+    idx.insert(_big_polygon(rng, np.array([0.5, 0.5]), r=1e-3), 10, 0)
+    p = idx.plan(big, "intersects")          # delta of 1 < refresh_threshold
+    assert p.backend == "device+delta" and "patching" in p.reason
+    assert p.delta_size == 1 and not p.rebuild_snapshot
+    idx.insert(_big_polygon(rng, np.array([0.5, 0.5]), r=1e-3), 10, 0)
+    p = idx.plan(big, "intersects")          # delta of 2 >= refresh_threshold
+    assert p.backend == "device" and "republishing" in p.reason
+    assert p.rebuild_snapshot and p.delta_size == 2
+    p = idx.plan(np.repeat(one, 5, axis=0), "intersects")
+    assert p.backend == "host" and "stale_rebuild_min_batch" in p.reason
+
+
+def test_delta_cancels_to_empty_after_insert_delete_roundtrip():
+    idx = _build(n=1500, config=EngineConfig(device_min_batch=1))
+    idx.snapshot()
+    rng = np.random.default_rng(47)
+    rec = idx.insert(_big_polygon(rng, np.array([0.5, 0.5]), r=1e-3), 10, 0)
+    assert idx.delete(rec) and idx.delta_size() == 0
+    assert idx.snapshot_is_stale()           # epoch moved ...
+    wins = make_query_windows(idx.gs, 0.01, 4, seed=3)
+    res = idx.query(wins, "intersects")      # ... but the empty delta patches
+    assert res.plan.backend == "device+delta" and res.plan.delta_size == 0
+    for qi, w in enumerate(wins):
+        np.testing.assert_array_equal(
+            res[qi],
+            _oracle(idx, w.astype(np.float32), "intersects", np.float32))
 
 
 # ------------------------------------------------- GLIN.insert capacity fix --
@@ -278,3 +515,32 @@ def test_spatial_query_server_mixed_relations():
     t = server.submit(np.array([0.49, 0.49, 0.51, 0.51]), "intersects")
     assert rec in server.flush()[t]
     assert server.write_ops == 1 and server.served_queries >= 5
+
+
+def test_server_write_flush_stream_takes_delta_plan():
+    """Interleaved write/flush through the server: exact at every flush, on
+    the device+delta backend (no republish per write) until the delta crosses
+    refresh_threshold, which republishes — still exact."""
+    from repro.serve.server import SpatialQueryServer
+
+    gs = _fp32_grid(generate("cluster", 2000, seed=53))
+    idx = SpatialIndex.build(
+        gs, GLINConfig(piece_limitation=100),
+        EngineConfig(device_min_batch=1, stale_rebuild_min_batch=1,
+                     refresh_threshold=16))
+    idx.snapshot()
+    server = SpatialQueryServer(idx)
+    rng = np.random.default_rng(59)
+    wins = make_query_windows(gs, 0.02, 4, seed=6)
+    wins = wins.astype(np.float32).astype(np.float64)
+    for step in range(24):
+        v = _big_polygon(rng, rng.uniform(0.3, 0.7, 2), r=3e-4, nv=6)
+        server.insert(v.astype(np.float32).astype(np.float64), 6, 0)
+        tickets = [server.submit(w, "intersects") for w in wins]
+        out = server.flush()
+        host = idx.query(wins, "intersects", backend="host")
+        for ti, t in enumerate(tickets):
+            np.testing.assert_array_equal(out[t], host[ti])
+    assert server.backend_counts.get("device+delta", 0) >= 20
+    assert idx._publishes >= 2               # crossed a republish boundary
+    assert server.write_ops == 24

@@ -7,7 +7,6 @@ import sys
 import tempfile
 
 import numpy as np
-import pytest
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 

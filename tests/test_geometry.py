@@ -14,7 +14,6 @@ def _sample_poly_points(verts, nv, rng, n=64):
 
 
 def test_contains_matches_vertex_rule():
-    rng = np.random.default_rng(0)
     gs = generate("uniform", 500, seed=1)
     rect = np.array([0.2, 0.2, 0.8, 0.8])
     got = geom.rect_contains_geoms(rect, gs.verts, gs.nverts)

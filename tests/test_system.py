@@ -5,7 +5,7 @@ import numpy as np
 
 from repro.core.baselines import QuadTree, RTree, SortedArray
 from repro.core.datasets import generate, make_query_windows
-from repro.core.index import GLIN, GLINConfig, QueryStats
+from repro.core.index import GLIN, GLINConfig
 
 
 def test_end_to_end_hybrid_workload():

@@ -2,7 +2,6 @@
 (paper Thm 1) and interval covering (the property Lemmas 1/2 rest on)."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import zorder as z
