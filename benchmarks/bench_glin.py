@@ -25,10 +25,13 @@ from .common import (DATASETS, SELECTIVITIES, Csv, build_glin, build_index,
 
 def _probe_only(g: GLIN, w, relation):
     from repro.core.model import probe
+    from repro.core.relations import get_relation
     from repro.core.zorder import mbr_to_zinterval_np
+    rel = get_relation(relation)
+    probe_win = rel.probe_window(np.asarray(w, np.float64))
     zmin_q, zmax_q = (int(v[0]) for v in
-                      mbr_to_zinterval_np(np.asarray(w)[None], g.gs.grid))
-    if relation == "intersects":
+                      mbr_to_zinterval_np(probe_win[None], g.gs.grid))
+    if rel.augment:
         zmin_q = g.pw.augment(zmin_q)
     return probe(g.root, zmin_q)
 
@@ -105,7 +108,7 @@ def fig10(csv: Csv, n: int) -> None:
 
 
 def fig11_12_14(csv: Csv, n: int) -> None:
-    for name in ("cluster", "uniform"):
+    for name in ("cluster", "uniform", "concave"):
         fac = build_index(name, n)
         rt = RTree.build(dataset(name, n))
         qt = QuadTree.build(dataset(name, n))
@@ -232,6 +235,42 @@ def fig17(csv: Csv, n: int) -> None:
                      f"{tx/dt:.1f} tx/s")
 
 
+def concave_refine(csv: Csv, n: int) -> dict:
+    """Beyond-paper: refinement cost on a CONCAVE workload, per relation.
+
+    Real corpora are mostly concave; the exact (ray-cast / edge-clip)
+    predicates are priced here so regressions in the refine step show up in
+    the tracked ``BENCH {json}`` line. Exactness is asserted against the
+    brute-force oracle on every window before anything is timed.
+    """
+    import json
+
+    name = "concave"
+    idx = build_index(name, n)
+    out: dict = {"bench": "concave_refine", "n": n, "relations": {}}
+    for relation in ("intersects", "within", "touches", "crosses",
+                     "dwithin:0.002"):
+        wins = windows(name, n, 0.001, k=8)
+        for w in wins:   # exactness gate (untimed)
+            got = idx.glin.query(w, relation)
+            want = idx.glin.query_bruteforce(w, relation)
+            np.testing.assert_array_equal(np.sort(got), np.sort(want))
+        res = idx.query(wins, relation, backend="host", collect_stats=True)
+        checked = sum(st.checked for st in res.stats)
+        t = timeit(lambda: idx.query(wins, relation, backend="host"),
+                   repeats=2) / len(wins)
+        out["relations"][relation] = {
+            "query_us": t,
+            "checked_per_window": checked / len(wins),
+            "hits_per_window": res.total_hits / len(wins),
+            "exact": True,
+        }
+        csv.emit(f"concave/query_us/{relation}/sel=0.001", t,
+                 f"checked={checked / len(wins):.0f};exact=True")
+    print("BENCH " + json.dumps(out))
+    return out
+
+
 def run(csv: Csv, large: bool = False) -> None:
     n = scale_n(large)
     tab5_fig6_fig7(csv, n)
@@ -243,6 +282,7 @@ def run(csv: Csv, large: bool = False) -> None:
     fig15_16(csv, min(n, 200_000))
     fig17(csv, min(n, 120_000))
     ablation_learned_vs_binary(csv, n)
+    concave_refine(csv, min(n, 120_000))
 
 
 def ablation_learned_vs_binary(csv: Csv, n: int) -> None:

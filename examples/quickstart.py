@@ -13,13 +13,15 @@ Everything goes through the ``SpatialIndex`` facade::
     rec = index.insert(verts, nverts=8, kind=0)  # bumps the mutation epoch
     index.delete(rec)                            # snapshot rebuilt lazily
 
-Relations: contains, intersects, within, covers, disjoint (``repro.core.
-relations`` registry) — plus knn as a query kind.
+Relations: contains, intersects, within, covers, disjoint, touches, crosses
+and the parametric ``dwithin:<d>`` (``repro.core.relations`` registry; exact
+for concave polygons) — plus knn as a query kind.
 """
 import numpy as np
 
 from repro.core import (GLINConfig, QueryBatch, SpatialIndex, generate,
                         make_query_windows, relation_names)
+from repro.core.relations import RELATIONS
 
 # 1. a synthetic "parks"-like dataset (100k convex polygons, metro clusters)
 gs = generate("cluster", 100_000, seed=0)
@@ -32,8 +34,11 @@ print(f"index: {stats['nodes']} nodes, {stats['total_index_bytes']/1024:.0f} KiB
       f"({stats['piecewise_pieces']} pieces), data {gs.nbytes()/2**20:.0f} MiB")
 
 # 3. one entry point, every relation, batched: 5 windows x all relations
+#    (parametric families like dwithin are bound by name: "dwithin:<d>")
 windows = make_query_windows(gs, 0.001, 5, seed=1)
 for relation in relation_names():
+    if RELATIONS[relation].parametric:
+        relation = f"{relation}:0.001"
     res = index.query(windows, relation, collect_stats=True)
     st = res.stats[0] if res.stats else None
     extra = (f", {st.checked} exact checks, {st.leaves_skipped} leaves "

@@ -141,7 +141,8 @@ class RTree:
               stats: Optional[QueryStats] = None) -> np.ndarray:
         st = stats if stats is not None else QueryStats()
         window = np.asarray(window, np.float64)
-        cand = self.probe(window, st)
+        rel = get_relation(relation)
+        cand = self.probe(rel.probe_window(window), st)
         st.candidates += int(cand.shape[0])
         res = _refine(self.gs, cand, window, relation, st)
         st.results = int(res.shape[0])
@@ -355,7 +356,8 @@ class QuadTree:
               stats: Optional[QueryStats] = None) -> np.ndarray:
         st = stats if stats is not None else QueryStats()
         window = np.asarray(window, np.float64)
-        cand = self.probe(window, st)
+        rel = get_relation(relation)
+        cand = self.probe(rel.probe_window(window), st)
         st.candidates += int(cand.shape[0])
         res = _refine(self.gs, cand, window, relation, st)
         st.results = int(res.shape[0])
@@ -394,9 +396,12 @@ class SortedArray:
               stats: Optional[QueryStats] = None) -> np.ndarray:
         st = stats if stats is not None else QueryStats()
         window = np.asarray(window, np.float64)
+        rel = get_relation(relation)
+        probe_win = rel.probe_window(window)
         zmin_q, zmax_q = (int(v[0]) for v in
-                          mbr_to_zinterval_np(window[None, :], self.gs.grid))
-        if relation == "intersects":
+                          mbr_to_zinterval_np(probe_win[None, :],
+                                              self.gs.grid))
+        if rel.augment:
             zmin_q = self.pw.augment(zmin_q)
         lo = int(np.searchsorted(self.keys, zmin_q, side="left"))
         hi = int(np.searchsorted(self.keys, zmax_q, side="right"))

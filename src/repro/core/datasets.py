@@ -9,6 +9,11 @@ the distributions the paper evaluates:
 * ``roads``     — TIGER ROADS / LINEARWATER style: long, thin, anisotropic
                   polylines.
 * ``points``    — OSM_Points: degenerate single-vertex geometries.
+* ``concave``   — LAKES/BUILDINGS style simple CONCAVE rings: alternating
+                  star polygons and rotated L-shaped rings. Real corpora are
+                  dominated by concave geometry; this family exercises the
+                  exact (ray-cast / edge-clip) refinement predicates that the
+                  convex generators never stress.
 
 Every generator is deterministic in its seed and returns a
 :class:`GeometrySet` with padded vertex rings (see core.geometry).
@@ -85,6 +90,49 @@ def _convex_polygons(rng: np.random.Generator, centers: np.ndarray, sizes: np.nd
     return {"verts": verts, "nverts": nverts}
 
 
+def _concave_polygons(rng: np.random.Generator, centers: np.ndarray,
+                      sizes: np.ndarray, max_verts: int) -> Dict[str, np.ndarray]:
+    """Simple concave rings: star polygons (alternating outer/inner radius —
+    star-shaped about the centre, hence simple) interleaved with randomly
+    rotated L-shaped rings. Requires ``max_verts >= 6``."""
+    if max_verts < 6:
+        raise ValueError(f"concave rings need max_verts >= 6, got {max_verts}")
+    n = centers.shape[0]
+
+    # Stars: sorted angles, radius alternating between r and frac*r.
+    nverts = (2 * rng.integers(3, max_verts // 2 + 1, size=n)).astype(np.int32)
+    angles = np.sort(rng.uniform(0.0, 2 * np.pi, size=(n, max_verts)), axis=1)
+    frac = rng.uniform(0.25, 0.5, size=(n, 1))
+    radii = np.where(np.arange(max_verts)[None, :] % 2 == 0,
+                     sizes[:, None], sizes[:, None] * frac)
+    vx = centers[:, 0:1] + radii * np.cos(angles)
+    vy = centers[:, 1:2] + radii * np.sin(angles)
+    verts = np.stack([vx, vy], axis=-1)
+
+    # L-shaped rings on half the records (reflex corner at (t, t)).
+    ell = rng.random(n) < 0.5
+    t = rng.uniform(0.25, 0.6, size=n)
+    unit = np.zeros((n, 6, 2))
+    unit[:, 1] = np.stack([np.ones(n), np.zeros(n)], -1)
+    unit[:, 2] = np.stack([np.ones(n), t], -1)
+    unit[:, 3] = np.stack([t, t], -1)
+    unit[:, 4] = np.stack([t, np.ones(n)], -1)
+    unit[:, 5] = np.stack([np.zeros(n), np.ones(n)], -1)
+    theta = rng.uniform(0.0, 2 * np.pi, size=n)
+    c, s = np.cos(theta)[:, None], np.sin(theta)[:, None]
+    shifted = (unit - 0.5) * (2.0 * sizes[:, None, None])
+    lx = centers[:, 0:1] + shifted[..., 0] * c - shifted[..., 1] * s
+    ly = centers[:, 1:2] + shifted[..., 0] * s + shifted[..., 1] * c
+    lverts = np.zeros_like(verts)
+    lverts[:, :6] = np.stack([lx, ly], axis=-1)
+    verts = np.where(ell[:, None, None], lverts, verts)
+    nverts = np.where(ell, np.int32(6), nverts).astype(np.int32)
+
+    idx = np.minimum(np.arange(max_verts)[None, :], nverts[:, None] - 1)
+    verts = np.take_along_axis(verts, idx[:, :, None], axis=1)
+    return {"verts": verts, "nverts": nverts}
+
+
 def _polylines(rng: np.random.Generator, starts: np.ndarray, steps: np.ndarray,
                max_verts: int, anisotropy: float) -> Dict[str, np.ndarray]:
     """Random-walk polylines with a persistent heading (road-like)."""
@@ -137,6 +185,10 @@ def generate(name: str, n: int, seed: int = 0, max_verts: int = 12,
         steps = rng.uniform(2e-5, 2e-4, size=n)
         parts = _polylines(rng, starts, steps, max_verts, anisotropy=3.0)
         kinds = np.full(n, int(GeomKind.POLYLINE), np.int8)
+    elif name == "concave":
+        centers = rng.uniform(0.02, 0.98, size=(n, 2))
+        sizes = rng.uniform(5e-5, 5e-4, size=n)
+        parts = _concave_polygons(rng, centers, sizes, max_verts)
     elif name == "points":
         centers = rng.uniform(0.0, 1.0, size=(n, 2))
         verts = np.repeat(centers[:, None, :], max_verts, axis=1)
@@ -157,6 +209,7 @@ DATASETS = {
     "CLUSTER": ("cluster", 2),
     "ROADS": ("roads", 3),
     "POINTS": ("points", 4),
+    "CONCAVE": ("concave", 5),
 }
 
 

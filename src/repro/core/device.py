@@ -307,9 +307,11 @@ def query_keys(s: GLINSnapshot, windows: jax.Array, relation: str
 
     rel = _device_relation(relation)
     grid = ZGrid(s.grid_x0, s.grid_y0, s.grid_cell)
-    # conservative fp32 window quantization (never lose a candidate)
+    # probe with the relation's (possibly padded) window; conservative fp32
+    # quantization on top (never lose a candidate)
     (zmin_hi, zmin_lo), (zmax_hi, zmax_lo) = mbr_to_zinterval_hilo(
-        windows, grid, guard=ZGrid.FP32_GUARD_CELLS)
+        rel.probe_window(windows, xp=jnp), grid,
+        guard=ZGrid.FP32_GUARD_CELLS)
     if rel.augment:
         zmin_hi, zmin_lo = _augment(s, zmin_hi, zmin_lo)
     carry = (zmax_lo + 1) >= LO_LIMB_SIZE
@@ -367,7 +369,10 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
     leaf = s.rec_leaf[posc]                      # (Q, cap)
     lmbr = s.leaf_mbr[leaf]                      # (Q, cap, 4)
     wq = windows[:, None, :]                     # (Q, 1, 4)
-    leaf_ok = geom.mbr_intersects(lmbr, wq, xp=jnp)
+    # leaf-MBR pruning against the padded probe window (a dwithin hit's leaf
+    # may not overlap the raw window); the record prefilter pads internally
+    leaf_ok = geom.mbr_intersects(
+        lmbr, rel.probe_window(windows, xp=jnp)[:, None, :], xp=jnp)
     rec = s.recs[posc]
     rmbr = mbrs[rec]
     rec_ok = rel.mbr_prefilter(rmbr, wq, xp=jnp)

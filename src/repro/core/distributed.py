@@ -142,7 +142,10 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
         leaf = table["rec_leaf"][posc]
         lmbr = snapshot.leaf_mbr[leaf]
         wq = windows[:, None, :]
-        leaf_ok = geom.mbr_intersects(lmbr, wq, xp=jnp)
+        # leaf pruning uses the padded probe window (dwithin); the record
+        # prefilter pads internally and the predicate sees the raw window
+        leaf_ok = geom.mbr_intersects(
+            lmbr, rel.probe_window(windows, xp=jnp)[:, None, :], xp=jnp)
         rmbr = table["mbrs"][posc]
         rec_ok = rel.mbr_prefilter(rmbr, wq, xp=jnp)
         mask = valid & leaf_ok & rec_ok

@@ -437,14 +437,18 @@ class SpatialIndex:
         from repro.kernels import ops
 
         base = get_relation(relation).base_name()
-        self._check_augmentable(relation, get_relation(base))
+        base_rel = get_relation(base)
+        self._check_augmentable(relation, base_rel)
         snap = self.snapshot()
         wj = jnp.asarray(np.atleast_2d(np.asarray(windows)).astype(np.float32))
         start, end = batch_query_bounds(snap, wj, base)
         bounds = jnp.stack([start, end], axis=1).astype(jnp.int32)
         slot_mbrs = jnp.asarray(
             self.glin.gs.mbrs[np.asarray(snap.recs)].astype(np.float32))
-        counts = ops.refine_count(wj, bounds, slot_mbrs,
+        # MBR-level counting uses the padded probe window so dwithin-style
+        # relations count the candidates their refine step will actually see
+        counts = ops.refine_count(base_rel.probe_window(wj, xp=jnp), bounds,
+                                  slot_mbrs,
                                   use_pallas=jax.default_backend() == "tpu")
         return np.asarray(counts)
 

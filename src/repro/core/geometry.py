@@ -2,7 +2,10 @@
 
 The paper refines candidates with GEOS ``Contains``/``Intersects`` on exact
 shapes. We support the shape families produced by our data generators
-(rectangles, convex polygons, polylines) with fully vectorized predicates.
+(rectangles, simple polygons — convex OR concave — and polylines) with fully
+vectorized predicates. Point-in-polygon is an even-odd ray cast and
+window/boundary interaction is decided per edge segment, so no predicate
+assumes convexity anywhere.
 
 All functions are array-namespace generic: pass ``xp=numpy`` (host refinement,
 float64) or ``xp=jax.numpy`` (jitted batch refinement, float32). Geometries
@@ -10,7 +13,7 @@ are stored as padded vertex rings::
 
     verts:  (N, V, 2)  padded with the last valid vertex
     nverts: (N,)       number of valid vertices
-    kind:   GeomKind   POLYGON (closed, convex) or POLYLINE (open chain)
+    kind:   GeomKind   POLYGON (closed simple ring) or POLYLINE (open chain)
 
 Query windows are axis-aligned rectangles (the paper's query windows are MBRs
 of KNN result sets), given as (4,) [xmin, ymin, xmax, ymax].
@@ -26,6 +29,8 @@ __all__ = [
     "mbr_intersects",
     "mbr_contains",
     "mbrs_of_verts",
+    "points_in_polygons",
+    "points_strictly_in_polygons",
     "rect_contains_geoms",
     "rect_covers_geoms",
     "rect_contains_geoms_proper",
@@ -33,12 +38,16 @@ __all__ = [
     "rect_intersects_polylines",
     "rect_intersects_geoms",
     "rect_disjoint_geoms",
+    "rect_interior_intersects_geoms",
+    "rect_touches_geoms",
+    "rect_crosses_geoms",
+    "rect_dwithin_geoms",
     "geoms_cover_rect",
 ]
 
 
 class GeomKind(enum.IntEnum):
-    POLYGON = 0   # closed convex ring
+    POLYGON = 0   # closed simple ring (convex or concave)
     POLYLINE = 1  # open chain (roads / rivers)
 
 
@@ -109,31 +118,142 @@ def _seg_next_idx(verts, nverts, kinds, xp):
     return idx, xp.where(is_poly, nxt_poly, nxt_line), idx < nv
 
 
+def _ring_edges(verts, nverts, xp):
+    """Closed-ring edges of polygon records: (x1, y1, x2, y2, valid), each
+    (N, V). Padding rows are invalid; the last valid vertex closes to v0."""
+    nv = xp.asarray(nverts)[:, None]
+    vcount = verts.shape[-2]
+    idx = xp.arange(vcount)[None, :]
+    nxt = xp.where(idx + 1 >= nv, 0, idx + 1)
+    x, y = verts[..., 0], verts[..., 1]
+    x2 = xp.take_along_axis(x, nxt, axis=-1)
+    y2 = xp.take_along_axis(y, nxt, axis=-1)
+    return x, y, x2, y2, idx < nv
+
+
+def _clip_segments(rect, x, y, dx, dy, xp):
+    """Liang–Barsky clip of segments P + t·D, t ∈ [0, 1], against the CLOSED
+    rectangle. Returns ``(t0, t1, reject)``: the clipped parameter interval
+    and the parallel-outside rejection mask. A segment meets the closed rect
+    iff ``(t0 <= t1) & ~reject``; zero-length segments degenerate to a point
+    test (t-span stays [0, 1], rejection decides)."""
+    eps = xp.asarray(1e-30, x.dtype)
+    t0 = xp.zeros_like(dx)
+    t1 = xp.ones_like(dx)
+    reject = xp.zeros(dx.shape, dtype=bool)
+    for p, q in (
+        (-dx, x - rect[0]),
+        (dx, rect[2] - x),
+        (-dy, y - rect[1]),
+        (dy, rect[3] - y),
+    ):
+        # p*t <= q half-plane; parallel segments handled via sign(q).
+        p_safe = xp.where(p == 0, eps, p)
+        r = q / p_safe
+        t0 = xp.where(p < 0, xp.maximum(t0, r), t0)
+        t1 = xp.where(p > 0, xp.minimum(t1, r), t1)
+        reject = reject | ((p == 0) & (q < 0))
+    return t0, t1, reject
+
+
+def _strict_inside(rect, px, py):
+    return (px > rect[0]) & (px < rect[2]) & (py > rect[1]) & (py < rect[3])
+
+
+def _segs_hit_and_open(rect, x, y, x2, y2, xp):
+    """One Liang–Barsky pass per segment -> ``(hit, open_hit)``: meets the
+    CLOSED rect, and meets the rect's OPEN interior. The open test uses the
+    clipped span's midpoint — a chord of a convex set not contained in the
+    boundary has a strictly interior midpoint, and a boundary-only span (or
+    single touch point) does not."""
+    t0, t1, rej = _clip_segments(rect, x, y, x2 - x, y2 - y, xp)
+    hit = (t0 <= t1) & ~rej
+    tm = (t0 + t1) * 0.5
+    mx = x + tm * (x2 - x)
+    my = y + tm * (y2 - y)
+    return hit, hit & _strict_inside(rect, mx, my)
+
+
+# ---------------------------------------------------------------------------
+# Point-in-polygon: even-odd ray cast, exact for simple (possibly concave)
+# rings. Boundary membership is decided by an explicit collinearity test, so
+# both closed (boundary counts) and strict (interior only) variants are exact.
+# ---------------------------------------------------------------------------
+def _ray_cast(px, py, verts, nverts, xp):
+    """(P,), (P,), (N,V,2), (N,) -> (odd, on_edge) each (N, P) bool."""
+    x1, y1, x2, y2, valid = _ring_edges(verts, nverts, xp)
+    x1, y1 = x1[:, :, None], y1[:, :, None]          # (N, V, 1)
+    x2, y2 = x2[:, :, None], y2[:, :, None]
+    pxb, pyb = px[None, None, :], py[None, None, :]  # (1, 1, P)
+    validb = valid[:, :, None]
+
+    # Horizontal ray to +x: count edges straddling py whose crossing lies
+    # strictly right of px (half-open rule: ties on vertices count once).
+    straddle = (y1 > pyb) != (y2 > pyb)
+    denom = y2 - y1
+    denom_safe = xp.where(denom == 0, xp.asarray(1.0, denom.dtype), denom)
+    xint = x1 + (pyb - y1) / denom_safe * (x2 - x1)
+    crossing = straddle & (pxb < xint) & validb
+    odd = (xp.sum(crossing, axis=1) % 2) == 1        # (N, P)
+
+    # On-boundary: collinear with an edge and inside its bounding box.
+    cross = (x2 - x1) * (pyb - y1) - (y2 - y1) * (pxb - x1)
+    in_box = (
+        (pxb >= xp.minimum(x1, x2)) & (pxb <= xp.maximum(x1, x2))
+        & (pyb >= xp.minimum(y1, y2)) & (pyb <= xp.maximum(y1, y2))
+    )
+    on_edge = xp.any((cross == 0) & in_box & validb, axis=1)
+    return odd, on_edge
+
+
+def points_in_polygons(px, py, verts, nverts, xp=np):
+    """Closed point-in-polygon: (P,), (P,), (N,V,2), (N,) -> (N,P) bool.
+    True when the point lies in the polygon's interior OR on its boundary.
+    Exact for simple rings, convex or concave; degenerate (zero-area) rings
+    contain only their boundary points."""
+    odd, on_edge = _ray_cast(px, py, verts, nverts, xp)
+    return odd | on_edge
+
+
+def points_strictly_in_polygons(px, py, verts, nverts, xp=np):
+    """Open point-in-polygon: true only for interior points (boundary
+    excluded). Same shapes/guarantees as :func:`points_in_polygons`."""
+    odd, on_edge = _ray_cast(px, py, verts, nverts, xp)
+    return odd & ~on_edge
+
+
+def _rect_corners(rect, xp, center=False):
+    cx = [rect[0], rect[2], rect[2], rect[0]]
+    cy = [rect[1], rect[1], rect[3], rect[3]]
+    if center:
+        cx.append((rect[0] + rect[2]) * 0.5)
+        cy.append((rect[1] + rect[3]) * 0.5)
+    return xp.stack(cx), xp.stack(cy)
+
+
 def rect_contains_geoms_proper(rect, verts, nverts, kinds, xp=np):
     """Proper (GEOS-style) Contains: geometry covered by the closed window AND
     at least one point of it lies in the window's open interior.
 
-    Exact for the supported shape families: for a covered geometry the interior
-    witness exists iff some vertex, edge midpoint, or (polygons) the vertex
-    mean is strictly inside — a convex geometry lying wholly on the 1-D window
-    boundary has none of the three.
+    Exact for the supported shape families (simple polygons — convex or
+    concave — and polylines): for a covered geometry the interior witness
+    exists iff some vertex, edge midpoint, or (polygons) the vertex mean is
+    strictly inside — a geometry lying wholly on the 1-D window boundary has
+    none of the three.
     """
     covered = rect_contains_geoms(rect, verts, nverts, xp=xp)
     x, y = verts[..., 0], verts[..., 1]
     _, nxt, valid = _seg_next_idx(verts, nverts, kinds, xp)
 
-    def strict(px, py):
-        return (px > rect[0]) & (px < rect[2]) & (py > rect[1]) & (py < rect[3])
-
-    wit = xp.any(strict(x, y) & valid, axis=-1)
+    wit = xp.any(_strict_inside(rect, x, y) & valid, axis=-1)
     mx = (x + xp.take_along_axis(x, nxt, axis=-1)) * 0.5
     my = (y + xp.take_along_axis(y, nxt, axis=-1)) * 0.5
-    wit = wit | xp.any(strict(mx, my) & valid, axis=-1)
+    wit = wit | xp.any(_strict_inside(rect, mx, my) & valid, axis=-1)
     cnt = xp.maximum(xp.asarray(nverts), 1)
     cx_ = xp.sum(xp.where(valid, x, 0.0), axis=-1) / cnt
     cy_ = xp.sum(xp.where(valid, y, 0.0), axis=-1) / cnt
     is_poly = xp.asarray(kinds) == int(GeomKind.POLYGON)
-    wit = wit | (strict(cx_, cy_) & is_poly)
+    wit = wit | (_strict_inside(rect, cx_, cy_) & is_poly)
     return covered & wit
 
 
@@ -141,84 +261,39 @@ def geoms_cover_rect(rect, verts, nverts, kinds, xp=np):
     """(4,), (N,V,2), (N,), (N,) -> (N,): geometry covers the whole window
     (the facade's *Within* relation: window within geometry).
 
-    Only convex polygons with positive area can cover a 2-D window, and for a
-    convex polygon "all four window corners inside" is exact (same-side test
-    over every edge; degenerate zero-area rings are rejected via shoelace).
-    Polylines never cover a window and return False.
+    Exact for simple polygons, convex or concave: the window is covered iff
+    all four corners AND the centre lie in the closed polygon (even-odd ray
+    cast) and no polygon edge passes through the window's open interior (a
+    clipped-midpoint test per edge). The centre test closes the measure-zero
+    gap where every corner sits exactly on the boundary of a polygon that
+    excludes the interior. Polylines never cover a 2-D window and return
+    False.
     """
-    x, y = verts[..., 0], verts[..., 1]
-    _, nxt, valid = _seg_next_idx(verts, nverts, kinds, xp)
-    x2 = xp.take_along_axis(x, nxt, axis=-1)
-    y2 = xp.take_along_axis(y, nxt, axis=-1)
-    ex = xp.where(valid, x2 - x, 0.0)
-    ey = xp.where(valid, y2 - y, 0.0)
-    cx = xp.stack([rect[0], rect[2], rect[2], rect[0]])
-    cy = xp.stack([rect[1], rect[1], rect[3], rect[3]])
-    # cross(edge, corner - vertex) per edge per corner: (N, V, 4)
-    rx = cx[None, None, :] - x[:, :, None]
-    ry = cy[None, None, :] - y[:, :, None]
-    cross = ex[:, :, None] * ry - ey[:, :, None] * rx
-    pvalid = valid[:, :, None]
-    pos = xp.all(xp.where(pvalid, cross >= 0.0, True), axis=1)
-    neg = xp.all(xp.where(pvalid, cross <= 0.0, True), axis=1)
-    corners_in = xp.all(pos | neg, axis=-1)
-    area2 = xp.abs(xp.sum(xp.where(valid, x * y2 - x2 * y, 0.0), axis=-1))
+    x1, y1, x2, y2, valid = _ring_edges(verts, nverts, xp)
+    _, open_hit = _segs_hit_and_open(rect, x1, y1, x2, y2, xp)
+    interior_clip = xp.any(open_hit & valid, axis=-1)
+
+    px, py = _rect_corners(rect, xp, center=True)
+    inside = points_in_polygons(px, py, verts, nverts, xp=xp)  # (N, 5)
     is_poly = xp.asarray(kinds) == int(GeomKind.POLYGON)
-    return corners_in & is_poly & (area2 > 0.0)
+    return xp.all(inside, axis=-1) & ~interior_clip & is_poly
 
 
 # ---------------------------------------------------------------------------
-# Intersects — convex polygons, via Separating Axis Theorem.
-# Axes: rectangle normals (x-axis, y-axis) + every polygon edge normal.
+# Intersects — simple polygons (convex or concave): the closed window meets
+# the polygon iff some boundary edge meets the closed window (Liang–Barsky)
+# or the window lies entirely inside the polygon (corner ray cast).
 # ---------------------------------------------------------------------------
 def rect_intersects_polygons(rect, verts, nverts, xp=np):
-    """(4,), (N,V,2), (N,) -> (N,) bool. Exact convex-polygon vs rect."""
-    valid = _valid_mask(verts, nverts, xp)  # (N, V)
-    x, y = verts[..., 0], verts[..., 1]
+    """(4,), (N,V,2), (N,) -> (N,) bool. Exact simple-polygon vs rect."""
+    x1, y1, x2, y2, valid = _ring_edges(verts, nverts, xp)
+    hit, _ = _segs_hit_and_open(rect, x1, y1, x2, y2, xp)
+    edge_hit = xp.any(hit & valid, axis=-1)
 
-    big = xp.asarray(1e30, verts.dtype)
-    px_min = xp.min(xp.where(valid, x, big), axis=-1)
-    py_min = xp.min(xp.where(valid, y, big), axis=-1)
-    px_max = xp.max(xp.where(valid, x, -big), axis=-1)
-    py_max = xp.max(xp.where(valid, y, -big), axis=-1)
-
-    # Rect axes (== MBR overlap test).
-    axis_sep = (
-        (px_max < rect[0]) | (rect[2] < px_min)
-        | (py_max < rect[1]) | (rect[3] < py_min)
-    )
-
-    # Polygon edge normals. Edge i: v[i] -> v[(i+1) mod nv]; padded edges are
-    # degenerate (normal 0) and never separate.
-    nv = xp.asarray(nverts)[:, None]
-    vcount = verts.shape[-2]
-    idx = xp.arange(vcount)[None, :]
-    nxt = xp.where(idx + 1 >= nv, 0, idx + 1)
-    vx_next = xp.take_along_axis(x, nxt, axis=-1)
-    vy_next = xp.take_along_axis(y, nxt, axis=-1)
-    ex = xp.where(valid, vx_next - x, 0.0)
-    ey = xp.where(valid, vy_next - y, 0.0)
-    # Outward/inward doesn't matter for SAT: normal = (-ey, ex).
-    nx_, ny_ = -ey, ex  # (N, V) one normal per edge
-
-    # Project polygon vertices onto each of its edge normals: (N, V_axes, V_pts)
-    proj_poly = nx_[:, :, None] * x[:, None, :] + ny_[:, :, None] * y[:, None, :]
-    pvalid = valid[:, None, :]
-    pp_min = xp.min(xp.where(pvalid, proj_poly, big), axis=-1)
-    pp_max = xp.max(xp.where(pvalid, proj_poly, -big), axis=-1)
-
-    # Project the 4 rect corners onto each edge normal.
-    cx = xp.stack([rect[0], rect[2], rect[2], rect[0]])
-    cy = xp.stack([rect[1], rect[1], rect[3], rect[3]])
-    proj_rect = (nx_[:, :, None] * cx[None, None, :]
-                 + ny_[:, :, None] * cy[None, None, :])
-    pr_min = xp.min(proj_rect, axis=-1)
-    pr_max = xp.max(proj_rect, axis=-1)
-
-    degenerate = (nx_ == 0.0) & (ny_ == 0.0)
-    edge_sep = ((pp_max < pr_min) | (pr_max < pp_min)) & ~degenerate & valid
-    axis_sep = axis_sep | xp.any(edge_sep, axis=-1)
-    return ~axis_sep
+    px, py = _rect_corners(rect, xp)
+    corner_in = xp.any(points_in_polygons(px, py, verts, nverts, xp=xp),
+                       axis=-1)
+    return edge_hit | corner_in
 
 
 # ---------------------------------------------------------------------------
@@ -235,32 +310,7 @@ def rect_intersects_polylines(rect, verts, nverts, xp=np):
     nxt = xp.minimum(idx + 1, vcount - 1)
     x1 = xp.take_along_axis(x, nxt, axis=-1)
     y1 = xp.take_along_axis(y, nxt, axis=-1)
-    dx, dy = x1 - x, y1 - y
-
-    # Liang–Barsky: segment P + t*D, t in [0,1], clipped by 4 half-planes.
-    eps = xp.asarray(1e-30, verts.dtype)
-
-    def _clip(t0, t1, p, q):
-        # p*t <= q  half-plane; update (t0, t1); parallel handled via sign(q).
-        p_safe = xp.where(p == 0, eps, p)
-        r = q / p_safe
-        t0n = xp.where(p < 0, xp.maximum(t0, r), t0)
-        t1n = xp.where(p < 0, t1, xp.where(p > 0, xp.minimum(t1, r), t1))
-        t0n = xp.where(p > 0, t0n, t0n)
-        reject_parallel = (p == 0) & (q < 0)
-        return t0n, t1n, reject_parallel
-
-    t0 = xp.zeros_like(dx)
-    t1 = xp.ones_like(dx)
-    reject = xp.zeros_like(dx, dtype=bool)
-    for p, q in (
-        (-dx, x - rect[0]),
-        (dx, rect[2] - x),
-        (-dy, y - rect[1]),
-        (dy, rect[3] - y),
-    ):
-        t0, t1, rej = _clip(t0, t1, p, q)
-        reject = reject | rej
+    t0, t1, reject = _clip_segments(rect, x, y, x1 - x, y1 - y, xp)
     seg_hit = (t0 <= t1) & ~reject & seg_valid
 
     valid = _valid_mask(verts, nverts, xp)
@@ -278,3 +328,115 @@ def rect_intersects_geoms(rect, verts, nverts, kinds, xp=np):
 def rect_disjoint_geoms(rect, verts, nverts, kinds, xp=np):
     """Complement of Intersects (closed boundaries: touching is NOT disjoint)."""
     return ~rect_intersects_geoms(rect, verts, nverts, kinds, xp=xp)
+
+
+# ---------------------------------------------------------------------------
+# Interior interaction — the DE-9IM int(W) ∩ int(G) test behind Touches and
+# Crosses. A geometry's interior meets the open window iff some edge's
+# clipped midpoint is strictly inside (the clipped span of a segment through
+# the open interior has a strictly-interior midpoint; spans on the boundary
+# do not), or — polygons only — the window centre is strictly inside the
+# ring (window fully interior to the polygon, no boundary crossing).
+# Degenerate point-like records follow the DE-9IM convention that a point's
+# interior is the point itself.
+# ---------------------------------------------------------------------------
+def rect_interior_intersects_geoms(rect, verts, nverts, kinds, xp=np):
+    x, y = verts[..., 0], verts[..., 1]
+    _, nxt, valid = _seg_next_idx(verts, nverts, kinds, xp)
+    x2 = xp.take_along_axis(x, nxt, axis=-1)
+    y2 = xp.take_along_axis(y, nxt, axis=-1)
+    _, open_hit = _segs_hit_and_open(rect, x, y, x2, y2, xp)
+    seg_int = xp.any(open_hit & valid, axis=-1)
+
+    ccx = xp.stack([(rect[0] + rect[2]) * 0.5])
+    ccy = xp.stack([(rect[1] + rect[3]) * 0.5])
+    center_in = points_strictly_in_polygons(ccx, ccy, verts, nverts,
+                                            xp=xp)[:, 0]
+    is_poly = xp.asarray(kinds) == int(GeomKind.POLYGON)
+    return seg_int | (center_in & is_poly)
+
+
+def rect_touches_geoms(rect, verts, nverts, kinds, xp=np):
+    """DE-9IM Touches: W and G share at least one point but their interiors
+    are disjoint (they meet only along boundaries).
+
+    Single-pass: one Liang–Barsky clip over the kind-aware edge set decides
+    both closed contact and open-interior contact (for polygons the
+    kind-aware edges ARE the closed ring; for polylines the clamped trailing
+    zero-length segment makes every vertex — including a single-vertex
+    record — a point test, so no separate endpoint term is needed), and one
+    five-point ray cast decides corners-in (closed, window inside polygon)
+    plus centre-in (strict, window interior inside polygon).
+    """
+    x, y = verts[..., 0], verts[..., 1]
+    _, nxt, valid = _seg_next_idx(verts, nverts, kinds, xp)
+    x2 = xp.take_along_axis(x, nxt, axis=-1)
+    y2 = xp.take_along_axis(y, nxt, axis=-1)
+    hit, open_hit = _segs_hit_and_open(rect, x, y, x2, y2, xp)
+    edge_hit = xp.any(hit & valid, axis=-1)
+    edge_open = xp.any(open_hit & valid, axis=-1)
+
+    px, py = _rect_corners(rect, xp, center=True)
+    odd, on_edge = _ray_cast(px, py, verts, nverts, xp)
+    corner_in = xp.any((odd | on_edge)[:, :4], axis=-1)
+    center_strict = odd[:, 4] & ~on_edge[:, 4]
+
+    is_poly = xp.asarray(kinds) == int(GeomKind.POLYGON)
+    inter = edge_hit | (corner_in & is_poly)
+    interior = edge_open | (center_strict & is_poly)
+    return inter & ~interior
+
+
+def rect_crosses_geoms(rect, verts, nverts, kinds, xp=np):
+    """DE-9IM Crosses for mixed dimensions: a polyline crosses the window
+    when its interior passes through the window's interior AND part of it
+    lies outside the closed window. Area/area crosses is undefined in
+    DE-9IM, so polygon records always return False."""
+    open_hit = rect_interior_intersects_geoms(rect, verts, nverts, kinds,
+                                              xp=xp)
+    inside_all = rect_contains_geoms(rect, verts, nverts, xp=xp)
+    is_line = xp.asarray(kinds) == int(GeomKind.POLYLINE)
+    return is_line & open_hit & ~inside_all
+
+
+# ---------------------------------------------------------------------------
+# DWithin — Euclidean distance between the window and the geometry at most d
+# (distance-buffered Intersects; the ROADMAP's knn-radius relation). For a
+# disjoint segment/rect pair the minimum distance is attained either at a
+# segment endpoint (point-to-rect) or at a rect corner (point-to-segment),
+# so the vectorized minimum over both families is exact.
+# ---------------------------------------------------------------------------
+def rect_dwithin_geoms(rect, verts, nverts, kinds, dist, xp=np):
+    """(4,), (N,V,2), (N,), (N,), float -> (N,) bool: min Euclidean distance
+    between the closed window and the geometry is at most ``dist``."""
+    inter = rect_intersects_geoms(rect, verts, nverts, kinds, xp=xp)
+
+    x, y = verts[..., 0], verts[..., 1]
+    valid = _valid_mask(verts, nverts, xp)
+    big = xp.asarray(1e30, verts.dtype)
+    zero = xp.asarray(0.0, verts.dtype)
+
+    # vertex -> rect distance (covers closest-point-at-segment-endpoint)
+    ddx = xp.maximum(xp.maximum(rect[0] - x, x - rect[2]), zero)
+    ddy = xp.maximum(xp.maximum(rect[1] - y, y - rect[3]), zero)
+    vd2 = xp.min(xp.where(valid, ddx * ddx + ddy * ddy, big), axis=-1)
+
+    # rect corner -> edge-segment distance (covers closest-point-at-corner)
+    _, nxt, _ = _seg_next_idx(verts, nverts, kinds, xp)
+    bx = xp.take_along_axis(x, nxt, axis=-1)
+    by = xp.take_along_axis(y, nxt, axis=-1)
+    ex, ey = bx - x, by - y                              # (N, V)
+    cx, cy = _rect_corners(rect, xp)                     # (4,)
+    px = cx[None, None, :] - x[:, :, None]               # (N, V, 4)
+    py = cy[None, None, :] - y[:, :, None]
+    ll = ex * ex + ey * ey
+    ll_safe = xp.where(ll == 0, xp.asarray(1.0, ll.dtype), ll)[:, :, None]
+    t = (px * ex[:, :, None] + py * ey[:, :, None]) / ll_safe
+    t = xp.clip(t, 0.0, 1.0)
+    qx = px - t * ex[:, :, None]
+    qy = py - t * ey[:, :, None]
+    sd2 = qx * qx + qy * qy                              # (N, V, 4)
+    sd2 = xp.min(xp.where(valid[:, :, None], sd2, big), axis=(1, 2))
+
+    d2 = xp.minimum(vd2, sd2)
+    return inter | (d2 <= xp.asarray(float(dist) ** 2, d2.dtype))

@@ -105,8 +105,13 @@ class GLIN:
                 # probe's work, but the hit count must be the complement's
                 stats.results = int(res.shape[0])
             return res
+        # dwithin-style relations probe (and prune leaves with) the window
+        # expanded by the relation's pad; the exact predicate still sees the
+        # caller's window.
+        probe_win = rel.probe_window(window)
         zmin_q, zmax_q = (int(v[0]) for v in
-                          mbr_to_zinterval_np(window[None, :], self.gs.grid))
+                          mbr_to_zinterval_np(probe_win[None, :],
+                                              self.gs.grid))
         if rel.augment:
             if self.pw is None:
                 raise ValueError(f"{relation} requires the piecewise function "
@@ -129,7 +134,7 @@ class GLIN:
             cand = leaf.recs[slot:end]
             st.candidates += int(cand.shape[0])
             # Leaf-MBR pruning (§V-C): skip the node wholesale.
-            if not bool(geom.mbr_intersects(leaf.mbr, window)):
+            if not bool(geom.mbr_intersects(leaf.mbr, probe_win)):
                 st.leaves_skipped += 1
             else:
                 st.leaves_visited += 1

@@ -14,9 +14,15 @@ rule* for the probe key. This module makes that pairing explicit: a
   window) need it; relations whose hits start inside the window do not;
 * ``mbr_prefilter``  — a conservative record-MBR test (never drops a true hit)
   used by both the host refinement loop and the batched device kernel;
+* ``probe_pad``      — margin added to every window side before the probe and
+  the leaf-MBR pruning (``dwithin`` hits can lie entirely outside the window,
+  up to the query distance away; the L∞ expansion is a conservative superset
+  of the Euclidean dilation, so probing stays lossless);
 * ``device_native``  — whether the batched device path evaluates it directly;
 * ``complement_of``  — relations answered as the complement of another
-  (``disjoint`` = live records minus ``intersects``); these are host-finished.
+  (``disjoint`` = live records minus ``intersects``); these are host-finished;
+* ``parametric``/``bind`` — template relations instantiated per parameter by
+  name (``dwithin:0.05``); bound relations are cached by their full name.
 
 Every query layer — host ``GLIN.query``, the jitted ``core.device`` batch
 path, the sharded ``core.distributed`` step, the baselines' refinement, and
@@ -26,6 +32,7 @@ relation is one ``register_relation`` call, not five string branches.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
@@ -33,12 +40,22 @@ import numpy as np
 from . import geometry as geom
 
 __all__ = ["Relation", "RELATIONS", "register_relation", "get_relation",
-           "relation_names"]
+           "relation_names", "check_registry"]
 
 # predicate(window(4,), verts(N,V,2), nverts(N,), kinds(N,), xp) -> (N,) bool
 Predicate = Callable[..., np.ndarray]
 # prefilter(rec_mbr(...,4), window(...,4), xp) -> bool mask (broadcasting)
 MbrPrefilter = Callable[..., np.ndarray]
+
+
+def _pad_window(window, pad: float, xp=np):
+    """Window expanded by ``pad`` on every side (L∞ dilation). The single
+    source of the expansion used by probing, leaf pruning and the dwithin
+    MBR prefilter."""
+    if not pad:
+        return window
+    delta = xp.asarray([-pad, -pad, pad, pad], dtype=window.dtype)
+    return window + delta
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,36 +69,111 @@ class Relation:
     mbr_prefilter: MbrPrefilter
     device_native: bool = True    # batched device path evaluates it directly
     complement_of: Optional[str] = None
+    probe_pad: float = 0.0        # widen the probe / leaf-prune window
+    parametric: bool = False      # template: requires "name:<param>" lookup
+    bind: Optional[Callable[[float, str], "Relation"]] = None
     doc: str = ""
 
     def base_name(self) -> str:
         """Relation whose candidate interval is actually probed."""
         return self.complement_of if self.complement_of else self.name
 
+    def probe_window(self, window, xp=np):
+        """The window used for probing and MBR-level pruning: the query
+        window itself, expanded by ``probe_pad`` on every side for relations
+        whose hits may lie outside it. ``probe_pad`` is a trace-time
+        constant, so jitted callers fold the expansion away when zero."""
+        return _pad_window(window, self.probe_pad, xp=xp)
+
 
 RELATIONS: Dict[str, Relation] = {}
+_BOUND: Dict[str, Relation] = {}   # "name:param" -> bound Relation cache
 
 
-def register_relation(rel: Relation) -> Relation:
-    if rel.complement_of is not None and rel.complement_of not in RELATIONS:
-        raise ValueError(f"complement_of {rel.complement_of!r} is unknown")
+def register_relation(rel: Relation, replace: bool = False) -> Relation:
+    """Add ``rel`` to the registry. Duplicate names raise (a silent overwrite
+    would re-route every query layer at a distance) unless ``replace=True``
+    is passed explicitly."""
+    if rel.name in RELATIONS and not replace:
+        raise ValueError(
+            f"relation {rel.name!r} is already registered; pass replace=True "
+            "to overwrite it deliberately")
+    if rel.complement_of is not None:
+        base = RELATIONS.get(rel.complement_of)
+        if base is None:
+            raise ValueError(f"complement_of {rel.complement_of!r} is unknown "
+                             "(register the base relation first)")
+        if base.complement_of is not None:
+            raise ValueError(
+                f"complement_of {rel.complement_of!r} is itself a complement; "
+                "chain complements are not supported")
+    if rel.parametric and rel.bind is None:
+        raise ValueError(f"parametric relation {rel.name!r} needs a bind "
+                         "factory")
     RELATIONS[rel.name] = rel
+    _BOUND.clear()   # bound relations may shadow a replaced template
     return rel
 
 
 def get_relation(name: str) -> Relation:
-    try:
-        return RELATIONS[name]
-    except KeyError:
+    rel = RELATIONS.get(name) or _BOUND.get(name)
+    if rel is None and ":" in name:
+        base, _, arg = name.partition(":")
+        tmpl = RELATIONS.get(base)
+        if tmpl is not None and tmpl.parametric:
+            try:
+                param = float(arg)
+            except ValueError:
+                raise ValueError(
+                    f"bad parameter {arg!r} in relation {name!r}") from None
+            rel = _BOUND.setdefault(name, tmpl.bind(param, name))
+    if rel is None:
         raise ValueError(
-            f"unknown relation {name!r}; registered: {sorted(RELATIONS)}"
-        ) from None
+            f"unknown relation {name!r}; registered: {sorted(RELATIONS)}")
+    if rel.parametric:
+        raise ValueError(
+            f"relation {name!r} requires a parameter: query it as "
+            f"'{name}:<value>' (e.g. '{name}:0.05')")
+    return rel
 
 
 def relation_names(device_native: Optional[bool] = None) -> Tuple[str, ...]:
     names = (n for n, r in RELATIONS.items()
              if device_native is None or r.device_native == device_native)
     return tuple(sorted(names))
+
+
+def check_registry() -> Tuple[str, ...]:
+    """Validate registry invariants (used by the self-check test and safe to
+    call at any time): complements resolve to registered, non-complement,
+    device-native bases; parametric templates carry a bind factory; bound
+    cache entries agree with their template family. Returns the names."""
+    for name, rel in RELATIONS.items():
+        if rel.name != name:
+            raise AssertionError(f"registry key {name!r} != Relation.name "
+                                 f"{rel.name!r}")
+        if rel.complement_of is not None:
+            base = RELATIONS.get(rel.complement_of)
+            if base is None:
+                raise AssertionError(f"{name!r}: complement base "
+                                     f"{rel.complement_of!r} not registered")
+            if base.complement_of is not None:
+                raise AssertionError(f"{name!r}: complement of a complement")
+            # (a host-only base is fine: the planner routes such relations
+            # to the host backend)
+        if rel.parametric and rel.bind is None:
+            raise AssertionError(f"{name!r}: parametric without bind")
+        if rel.probe_pad < 0:
+            raise AssertionError(f"{name!r}: negative probe_pad")
+    for name, rel in _BOUND.items():
+        family = name.partition(":")[0]
+        if family not in RELATIONS or not RELATIONS[family].parametric:
+            raise AssertionError(f"bound relation {name!r} has no parametric "
+                                 "template")
+        if rel.parametric:
+            raise AssertionError(f"bound relation {name!r} is still "
+                                 "parametric")
+    return relation_names()
 
 
 # ---------------------------------------------------------------------------
@@ -126,7 +218,8 @@ register_relation(Relation(
     predicate=geom.geoms_cover_rect,
     augment=True,   # covering geometries start before W: Zmin_GM <= Zmin_Q
     mbr_prefilter=_pf_rec_mbr_covers_window,
-    doc="W lies entirely inside G (window within geometry).",
+    doc="W lies entirely inside G (window within geometry; exact for simple "
+        "polygons, convex or concave).",
 ))
 
 register_relation(Relation(
@@ -137,4 +230,57 @@ register_relation(Relation(
     device_native=False,
     complement_of="intersects",
     doc="W and G share no point: complement of Intersects over live records.",
+))
+
+register_relation(Relation(
+    name="touches",
+    predicate=geom.rect_touches_geoms,
+    augment=True,   # touching geometries overlap W's boundary: Zmin may precede
+    mbr_prefilter=_pf_intersects,
+    doc="W and G share points but their interiors are disjoint (DE-9IM "
+        "Touches: boundary contact only).",
+))
+
+register_relation(Relation(
+    name="crosses",
+    predicate=geom.rect_crosses_geoms,
+    augment=True,
+    mbr_prefilter=_pf_intersects,
+    doc="G's interior passes through W's interior and exits W (DE-9IM "
+        "Crosses; polylines only — area/area crosses is undefined and "
+        "returns False for polygons).",
+))
+
+
+def _bind_dwithin(dist: float, name: str) -> Relation:
+    """Instantiate ``dwithin:<d>``: Euclidean distance(W, G) <= d."""
+    if not (math.isfinite(dist) and dist >= 0.0):
+        raise ValueError(
+            f"dwithin distance must be finite and >= 0, got {dist!r}")
+
+    def pred(rect, verts, nverts, kinds, xp=np):
+        return geom.rect_dwithin_geoms(rect, verts, nverts, kinds, dist,
+                                       xp=xp)
+
+    def prefilter(rec_mbr, window, xp=np):
+        return geom.mbr_intersects(rec_mbr, _pad_window(window, dist, xp=xp),
+                                   xp=xp)
+
+    return dataclasses.replace(
+        RELATIONS["dwithin"], name=name, predicate=pred,
+        mbr_prefilter=prefilter, probe_pad=dist, parametric=False, bind=None,
+        doc=f"Euclidean distance between W and G is at most {dist!r} "
+            "(distance-buffered Intersects).")
+
+
+register_relation(Relation(
+    name="dwithin",
+    predicate=lambda rect, verts, nverts, kinds, xp=np:
+        geom.rect_dwithin_geoms(rect, verts, nverts, kinds, 0.0, xp=xp),
+    augment=True,   # buffered hits may start before the expanded window
+    mbr_prefilter=_pf_intersects,
+    parametric=True,
+    bind=_bind_dwithin,
+    doc="Euclidean distance between W and G is at most d; parametric — "
+        "query as 'dwithin:<d>' (the ROADMAP's knn-radius relation).",
 ))

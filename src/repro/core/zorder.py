@@ -60,12 +60,15 @@ class ZGrid:
 
     def quantize_np(self, x: np.ndarray, y: np.ndarray
                     ) -> Tuple[np.ndarray, np.ndarray]:
-        qx = np.floor((np.asarray(x, np.float64) - self.x0)
-                      / self.cell_size).astype(np.int64)
-        qy = np.floor((np.asarray(y, np.float64) - self.y0)
-                      / self.cell_size).astype(np.int64)
+        # clip as floats BEFORE the int cast: far-out-of-domain coordinates
+        # (padded dwithin probe windows) would overflow the cast and wrap to
+        # a bogus cell instead of saturating at the domain boundary
         lim = (1 << BITS_PER_DIM) - 1
-        return np.clip(qx, 0, lim), np.clip(qy, 0, lim)
+        qx = np.clip(np.floor((np.asarray(x, np.float64) - self.x0)
+                              / self.cell_size), 0, lim).astype(np.int64)
+        qy = np.clip(np.floor((np.asarray(y, np.float64) - self.y0)
+                              / self.cell_size), 0, lim).astype(np.int64)
+        return qx, qy
 
     # fp32 coordinates carry ~2^-24 relative error: tens of cells at
     # centimetre resolution. Device-side window quantization therefore takes
@@ -78,17 +81,23 @@ class ZGrid:
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         # float32 has 24 bits of mantissa; a 30-bit grid index would lose
         # precision, so quantize in two stages: coarse cell-of-2^15 then fine.
+        # The coarse cell is clipped into the domain BEFORE the fine stage
+        # (and the fine offset is clipped as a float, before any int cast):
+        # out-of-domain coordinates — which padded dwithin probe windows
+        # legitimately produce at the domain edge — then clamp to the
+        # boundary cell exactly like the host-side quantize_np, instead of
+        # wrapping to a bogus fine offset within an out-of-range coarse cell.
         coarse_size = self.cell_size * (1 << _LO_BITS)
-        cx = jnp.floor((x - self.x0) / coarse_size)
-        cy = jnp.floor((y - self.y0) / coarse_size)
-        fx = jnp.floor((x - (self.x0 + cx * coarse_size)) / self.cell_size)
-        fy = jnp.floor((y - (self.y0 + cy * coarse_size)) / self.cell_size)
         lim = (1 << BITS_PER_DIM) - 1
         lim_hi = (1 << _LO_BITS) - 1
-        qx_hi = jnp.clip(cx.astype(jnp.int32), 0, lim_hi)
-        qy_hi = jnp.clip(cy.astype(jnp.int32), 0, lim_hi)
-        qx_lo = jnp.clip(fx.astype(jnp.int32), 0, lim_hi)
-        qy_lo = jnp.clip(fy.astype(jnp.int32), 0, lim_hi)
+        cx = jnp.clip(jnp.floor((x - self.x0) / coarse_size), 0.0, lim_hi)
+        cy = jnp.clip(jnp.floor((y - self.y0) / coarse_size), 0.0, lim_hi)
+        fx = jnp.floor((x - (self.x0 + cx * coarse_size)) / self.cell_size)
+        fy = jnp.floor((y - (self.y0 + cy * coarse_size)) / self.cell_size)
+        qx_hi = cx.astype(jnp.int32)
+        qy_hi = cy.astype(jnp.int32)
+        qx_lo = jnp.clip(fx, 0.0, lim_hi).astype(jnp.int32)
+        qy_lo = jnp.clip(fy, 0.0, lim_hi).astype(jnp.int32)
         qx = (qx_hi << _LO_BITS) | qx_lo
         qy = (qy_hi << _LO_BITS) | qy_lo
         if guard:

@@ -1,0 +1,299 @@
+"""Brute-force reference oracle for every registered relation.
+
+Scalar, O(N·V) pure-NumPy/Python loops over records, vertices and window
+corners — deliberately written as straight-line textbook geometry (orientation
+tests, per-edge point-in-polygon, per-corner distances) rather than the
+vectorized array-namespace code in ``repro.core.geometry``, so the two can
+check each other. The parity tests assert that the host, device, and
+device+delta query paths all reproduce this oracle on mixed
+convex/concave/polyline stores.
+
+``oracle_query(window, gs_arrays, relation)`` mirrors the public relation
+semantics, including ``disjoint`` as a complement over live records and the
+parametric ``dwithin:<d>`` family.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.geometry import GeomKind
+
+__all__ = ["oracle_record", "oracle_query", "mixed_store"]
+
+
+# ---------------------------------------------------------------------------
+# Scalar primitives
+# ---------------------------------------------------------------------------
+def _edges(ring, kind):
+    """Edge list of one record: closed ring for polygons, open chain for
+    polylines (single-vertex records have no edges)."""
+    n = len(ring)
+    if kind == int(GeomKind.POLYGON):
+        return [(ring[i], ring[(i + 1) % n]) for i in range(n)]
+    return [(ring[i], ring[i + 1]) for i in range(n - 1)]
+
+
+def _pt_in_rect(p, rect, strict=False):
+    if strict:
+        return rect[0] < p[0] < rect[2] and rect[1] < p[1] < rect[3]
+    return rect[0] <= p[0] <= rect[2] and rect[1] <= p[1] <= rect[3]
+
+
+def _orient(a, b, c):
+    return (b[0] - a[0]) * (c[1] - a[1]) - (b[1] - a[1]) * (c[0] - a[0])
+
+
+def _on_segment(a, b, c):
+    """c collinear with a-b assumed; is c within the segment's bbox?"""
+    return (min(a[0], b[0]) <= c[0] <= max(a[0], b[0])
+            and min(a[1], b[1]) <= c[1] <= max(a[1], b[1]))
+
+
+def _segments_intersect(a, b, c, d):
+    """Closed segment intersection via orientation tests."""
+    o1, o2 = _orient(a, b, c), _orient(a, b, d)
+    o3, o4 = _orient(c, d, a), _orient(c, d, b)
+    if o1 == 0 and _on_segment(a, b, c):
+        return True
+    if o2 == 0 and _on_segment(a, b, d):
+        return True
+    if o3 == 0 and _on_segment(c, d, a):
+        return True
+    if o4 == 0 and _on_segment(c, d, b):
+        return True
+    return ((o1 > 0) != (o2 > 0)) and ((o3 > 0) != (o4 > 0)) \
+        and o1 != 0 and o2 != 0 and o3 != 0 and o4 != 0
+
+
+def _rect_edges(rect):
+    c = [(rect[0], rect[1]), (rect[2], rect[1]),
+         (rect[2], rect[3]), (rect[0], rect[3])]
+    return [(c[i], c[(i + 1) % 4]) for i in range(4)]
+
+
+def _seg_meets_rect(a, b, rect):
+    """Closed segment vs closed rect."""
+    if _pt_in_rect(a, rect) or _pt_in_rect(b, rect):
+        return True
+    return any(_segments_intersect(a, b, c, d) for c, d in _rect_edges(rect))
+
+
+def _seg_meets_open_rect(a, b, rect):
+    """Does the segment meet the rect's OPEN interior? Clip the parameter
+    interval against the closed rect and test the midpoint strictly (a chord
+    of a convex set that is not contained in the boundary has a strictly
+    interior midpoint)."""
+    t0, t1 = 0.0, 1.0
+    dx, dy = b[0] - a[0], b[1] - a[1]
+    for p, q in ((-dx, a[0] - rect[0]), (dx, rect[2] - a[0]),
+                 (-dy, a[1] - rect[1]), (dy, rect[3] - a[1])):
+        if p == 0:
+            if q < 0:
+                return False
+        else:
+            r = q / p
+            if p < 0:
+                t0 = max(t0, r)
+            else:
+                t1 = min(t1, r)
+    if t0 > t1:
+        return False
+    t = (t0 + t1) * 0.5
+    return _pt_in_rect((a[0] + t * dx, a[1] + t * dy), rect, strict=True)
+
+
+def _pt_in_ring(p, ring):
+    """Even-odd ray cast -> (odd_crossings, on_boundary)."""
+    odd = on = False
+    px, py = p
+    n = len(ring)
+    for i in range(n):
+        x1, y1 = ring[i]
+        x2, y2 = ring[(i + 1) % n]
+        if (min(x1, x2) <= px <= max(x1, x2)
+                and min(y1, y2) <= py <= max(y1, y2)
+                and _orient((x1, y1), (x2, y2), p) == 0):
+            on = True
+        if (y1 > py) != (y2 > py):
+            xint = x1 + (py - y1) * (x2 - x1) / (y2 - y1)
+            if px < xint:
+                odd = not odd
+    return odd, on
+
+
+def _pt_rect_dist(p, rect):
+    dx = max(rect[0] - p[0], p[0] - rect[2], 0.0)
+    dy = max(rect[1] - p[1], p[1] - rect[3], 0.0)
+    return math.hypot(dx, dy)
+
+
+def _pt_seg_dist(p, a, b):
+    dx, dy = b[0] - a[0], b[1] - a[1]
+    ll = dx * dx + dy * dy
+    if ll == 0:
+        return math.hypot(p[0] - a[0], p[1] - a[1])
+    t = ((p[0] - a[0]) * dx + (p[1] - a[1]) * dy) / ll
+    t = min(1.0, max(0.0, t))
+    return math.hypot(p[0] - (a[0] + t * dx), p[1] - (a[1] + t * dy))
+
+
+def _corners(rect, center=False):
+    pts = [(rect[0], rect[1]), (rect[2], rect[1]),
+           (rect[2], rect[3]), (rect[0], rect[3])]
+    if center:
+        pts.append(((rect[0] + rect[2]) * 0.5, (rect[1] + rect[3]) * 0.5))
+    return pts
+
+
+# ---------------------------------------------------------------------------
+# Per-record relation semantics
+# ---------------------------------------------------------------------------
+def _intersects(rect, ring, kind):
+    for a, b in _edges(ring, kind):
+        if _seg_meets_rect(a, b, rect):
+            return True
+    if any(_pt_in_rect(v, rect) for v in ring):   # single-vertex records
+        return True
+    if kind == int(GeomKind.POLYGON):
+        for c in _corners(rect):
+            odd, on = _pt_in_ring(c, ring)
+            if odd or on:
+                return True
+    return False
+
+
+def _covers(rect, ring, kind):
+    return all(_pt_in_rect(v, rect) for v in ring)
+
+
+def _contains(rect, ring, kind):
+    if not _covers(rect, ring, kind):
+        return False
+    if any(_pt_in_rect(v, rect, strict=True) for v in ring):
+        return True
+    for a, b in _edges(ring, kind):
+        m = ((a[0] + b[0]) * 0.5, (a[1] + b[1]) * 0.5)
+        if _pt_in_rect(m, rect, strict=True):
+            return True
+    if kind == int(GeomKind.POLYGON):
+        mean = (sum(v[0] for v in ring) / len(ring),
+                sum(v[1] for v in ring) / len(ring))
+        if _pt_in_rect(mean, rect, strict=True):
+            return True
+    return False
+
+
+def _within(rect, ring, kind):
+    if kind != int(GeomKind.POLYGON):
+        return False
+    for c in _corners(rect, center=True):
+        odd, on = _pt_in_ring(c, ring)
+        if not (odd or on):
+            return False
+    return not any(_seg_meets_open_rect(a, b, rect)
+                   for a, b in _edges(ring, kind))
+
+
+def _interior_intersects(rect, ring, kind):
+    for a, b in _edges(ring, kind):
+        if _seg_meets_open_rect(a, b, rect):
+            return True
+    if len(ring) == 1 and _pt_in_rect(ring[0], rect, strict=True):
+        return True   # point-like record: its interior is itself
+    if kind == int(GeomKind.POLYGON):
+        cc = ((rect[0] + rect[2]) * 0.5, (rect[1] + rect[3]) * 0.5)
+        odd, on = _pt_in_ring(cc, ring)
+        if odd and not on:
+            return True
+    return False
+
+
+def _touches(rect, ring, kind):
+    return _intersects(rect, ring, kind) \
+        and not _interior_intersects(rect, ring, kind)
+
+
+def _crosses(rect, ring, kind):
+    if kind != int(GeomKind.POLYLINE):
+        return False
+    return _interior_intersects(rect, ring, kind) \
+        and not _covers(rect, ring, kind)
+
+
+def _dwithin(rect, ring, kind, dist):
+    if _intersects(rect, ring, kind):
+        return True
+    d = min(_pt_rect_dist(v, rect) for v in ring)
+    for a, b in _edges(ring, kind):
+        for c in _corners(rect):
+            d = min(d, _pt_seg_dist(c, a, b))
+    return d <= dist
+
+
+_ORACLES = {
+    "intersects": _intersects,
+    "covers": _covers,
+    "contains": _contains,
+    "within": _within,
+    "touches": _touches,
+    "crosses": _crosses,
+}
+
+
+def oracle_record(relation, rect, ring, kind):
+    """One record against one window; ``relation`` may be ``dwithin:<d>``."""
+    if relation == "disjoint":
+        return not _intersects(rect, ring, kind)
+    if relation.startswith("dwithin:"):
+        return _dwithin(rect, ring, kind, float(relation.partition(":")[2]))
+    return _ORACLES[relation](rect, ring, kind)
+
+
+def oracle_query(window, verts, nverts, kinds, relation, live=None):
+    """Sorted record ids whose geometry satisfies ``relation`` with
+    ``window``. All arithmetic is scalar float64 over the given arrays (cast
+    them to float32 and back for fp32-contract comparisons)."""
+    rect = tuple(float(v) for v in np.asarray(window))
+    out = []
+    n = len(nverts)
+    for rec in range(n):
+        if live is not None and not live[rec]:
+            continue
+        nv = int(nverts[rec])
+        ring = [(float(verts[rec, i, 0]), float(verts[rec, i, 1]))
+                for i in range(nv)]
+        if oracle_record(relation, rect, ring, int(kinds[rec])):
+            out.append(rec)
+    return np.asarray(out, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Mixed store builder (convex polygons + concave rings + polylines + points)
+# ---------------------------------------------------------------------------
+def mixed_store(n, seed=0, fp32_exact=True):
+    """A GeometrySet mixing every generator family, with fp32-representable
+    coordinates by default so the fp64 host and fp32 device paths decide the
+    same geometric configurations."""
+    from repro.core.datasets import GeometrySet, generate
+    from repro.core.geometry import mbrs_of_verts
+
+    kinds_n = {"uniform": n // 4, "concave": n // 4, "roads": n // 4,
+               "points": n - 3 * (n // 4)}
+    parts = [generate(name, cnt, seed=seed + i)
+             for i, (name, cnt) in enumerate(kinds_n.items()) if cnt]
+    vmax = max(p.verts.shape[1] for p in parts)
+    for p in parts:
+        p.grow_vertex_capacity(vmax)
+    verts = np.concatenate([p.verts for p in parts])
+    nverts = np.concatenate([p.nverts for p in parts])
+    kinds = np.concatenate([p.kinds for p in parts])
+    if fp32_exact:
+        verts = verts.astype(np.float32).astype(np.float64)
+    gs = GeometrySet(verts=verts, nverts=nverts, kinds=kinds,
+                     mbrs=mbrs_of_verts(verts, nverts), grid=parts[0].grid,
+                     name="mixed")
+    # shuffle so families interleave in Zmin order too
+    rng = np.random.default_rng(seed + 99)
+    return gs.take(rng.permutation(len(gs)))

@@ -55,6 +55,60 @@ def test_distributed_glin_query():
     assert "DIST-GLIN-OK" in out
 
 
+def test_distributed_glin_query_registry_relations():
+    """The sharded step serves registry relations generically — including the
+    concave-exact touches and the padded-probe dwithin — on a CONCAVE store."""
+    out = run_py("""
+        import numpy as np, jax
+        from repro.utils.compat import make_auto_mesh
+        mesh = make_auto_mesh((4,2), ("data","model"))
+        from repro.core.datasets import generate, make_query_windows
+        from repro.core.index import GLIN, GLINConfig
+        from repro.core.engine import EngineConfig, SpatialIndex
+        from repro.core.distributed import (shard_glin_arrays,
+                                            build_glin_query_step)
+        from repro.core.relations import get_relation
+
+        gs = generate("concave", 4000, seed=4)
+        g = GLIN.build(gs, GLINConfig(piece_limitation=300))
+        snap = SpatialIndex(g, EngineConfig(pad_quantum=0)).snapshot()
+        table_np = shard_glin_arrays(g, 4)
+        rand_wins = make_query_windows(gs, 0.003, 8, seed=5).astype(np.float32)
+        # windows flush against record MBR left edges: guaranteed touch
+        # contact (the leftmost vertex lies ON the window's right edge, the
+        # rest of the ring strictly right of it)
+        m = gs.mbrs[::517][:8].astype(np.float32)
+        touch_wins = np.stack([m[:, 0] - np.float32(0.002), m[:, 1],
+                               m[:, 0], m[:, 3]], axis=1)
+        verts32 = gs.verts.astype(np.float32)
+        for relation, wins in (("touches", touch_wins),
+                               ("dwithin:0.002", rand_wins)):
+            step, in_sh, out_sh = build_glin_query_step(mesh, relation,
+                                                        cap=4096)
+            with mesh:
+                table = {k: jax.device_put(v, in_sh[2][k])
+                         for k, v in table_np.items()}
+                sd = jax.tree_util.tree_map(
+                    lambda x: jax.device_put(x, in_sh[0]), snap)
+                w = jax.device_put(wins, in_sh[1])
+                hits, counts = jax.jit(step, in_shardings=in_sh,
+                                       out_shardings=out_sh)(sd, w, table)
+            hits, counts = np.asarray(hits), np.asarray(counts)
+            assert (counts >= 0).all()
+            pred = get_relation(relation).predicate
+            total = 0
+            for qi in range(len(wins)):
+                got = np.sort(hits[qi][hits[qi] >= 0])
+                ref = np.nonzero(pred(wins[qi], verts32, gs.nverts,
+                                      gs.kinds))[0]
+                assert np.array_equal(got, ref), (relation, qi)
+                total += len(ref)
+            assert total > 0, relation   # the windows actually hit something
+        print("DIST-REL-OK")
+    """)
+    assert "DIST-REL-OK" in out
+
+
 def test_sharded_train_step_runs_and_matches_single():
     """FSDP+TP train step on a (4,2) mesh == single-device step (loss)."""
     out = run_py("""

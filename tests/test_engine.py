@@ -14,7 +14,8 @@ from repro.core.relations import RELATIONS as RELATION_REGISTRY
 from repro.core.relations import (Relation, get_relation, register_relation,
                                   relation_names)
 
-RELATIONS = ("contains", "intersects", "within", "covers", "disjoint")
+RELATIONS = ("contains", "intersects", "within", "covers", "disjoint",
+             "touches", "crosses", "dwithin:0.003")
 
 
 def _build(name="cluster", n=4000, pl=200, seed=1, config=None, **kw):
@@ -49,7 +50,8 @@ def test_all_relations_host_match_bruteforce(relation):
 
 
 @pytest.mark.parametrize("relation", ["contains", "intersects", "covers",
-                                      "disjoint"])
+                                      "disjoint", "touches", "crosses",
+                                      "dwithin:0.003"])
 def test_all_relations_device_match_fp32_oracle(relation):
     idx = _build()
     wins = make_query_windows(idx.gs, 0.01, 4, seed=3)
@@ -73,6 +75,47 @@ def test_within_finds_covering_polygons_on_both_backends():
             assert recs[qi] in res[qi]
             np.testing.assert_array_equal(
                 res[qi], _oracle(idx, w.astype(dtype), "within", dtype))
+
+
+def test_touches_finds_boundary_contact_on_both_backends():
+    """Windows flush against a record's MBR left edge: the leftmost vertex
+    lies ON the window's right edge, the rest of the ring strictly right of
+    it — guaranteed Touches hits (random windows never touch exactly)."""
+    idx = _build("concave", n=3000, seed=4)
+    # fp64 MBRs verbatim: the leftmost vertex sits exactly on the window's
+    # right edge in fp64, and fp32 rounds window edge and vertex to the SAME
+    # value, so the contact survives the device precision contract too
+    m = idx.gs.mbrs[::379][:6]
+    wins = np.stack([m[:, 0] - 2e-3, m[:, 1] - 1e-3,
+                     m[:, 0], m[:, 3] + 1e-3], axis=1)
+    for backend, dtype in (("host", np.float64), ("device", np.float32)):
+        res = idx.query(wins, "touches", backend=backend)
+        assert res.total_hits > 0
+        for qi, w in enumerate(wins):
+            np.testing.assert_array_equal(
+                res[qi], _oracle(idx, w.astype(dtype), "touches", dtype))
+
+
+def test_dwithin_padded_probe_at_domain_edge_device_parity():
+    """REGRESSION: the dwithin probe window pads past the Z-grid domain edge
+    near (1,1); device-side two-stage quantization used to compute the fine
+    limb inside an out-of-range coarse cell, collapsing the probe interval
+    and silently dropping every corner record on the device path."""
+    rng = np.random.default_rng(8)
+    gs = generate("uniform", 2000, seed=1)
+    idx = SpatialIndex.build(gs, GLINConfig(piece_limitation=200),
+                             EngineConfig(device_min_batch=1))
+    recs = []
+    for _ in range(20):   # tiny squares hugging the (1, 1) corner
+        c = 1.0 - rng.uniform(1e-5, 2.5e-5, 2)
+        v = np.array([[c[0], c[1]], [c[0] + 5e-6, c[1]],
+                      [c[0] + 5e-6, c[1] + 5e-6], [c[0], c[1] + 5e-6]])
+        recs.append(idx.insert(np.clip(v, 0, 1 - 1e-9), 4, 0))
+    w = np.tile([0.998, 0.998, 0.999, 0.999], (2, 1))
+    host = idx.query(w, "dwithin:0.005", backend="host")
+    dev = idx.query(w, "dwithin:0.005", backend="device")
+    assert set(recs) <= set(host[0].tolist())
+    np.testing.assert_array_equal(host[0], dev[0])
 
 
 def test_contains_is_proper_covers_is_closed():
@@ -112,8 +155,15 @@ def test_knn_is_a_query_kind():
 def test_unknown_relation_rejected():
     idx = _build(n=500, pl=50)
     with pytest.raises(ValueError, match="unknown relation"):
-        idx.query(np.array([0, 0, 1, 1.0]), "touches")
-    assert set(RELATIONS) == set(relation_names())
+        idx.query(np.array([0, 0, 1, 1.0]), "overlaps")
+    # parametric families must be queried with a bound parameter
+    with pytest.raises(ValueError, match="requires a parameter"):
+        idx.query(np.array([0, 0, 1, 1.0]), "dwithin")
+    with pytest.raises(ValueError, match="bad parameter"):
+        idx.query(np.array([0, 0, 1, 1.0]), "dwithin:huge")
+    assert {"contains", "intersects", "within", "covers", "disjoint",
+            "touches", "crosses", "dwithin"} <= set(relation_names())
+    assert set(RELATION_REGISTRY) == set(relation_names())
 
 
 # ------------------------------------------------------------------ planner --
@@ -502,12 +552,14 @@ def test_spatial_query_server_mixed_relations():
     server = SpatialQueryServer(idx)
     wins = make_query_windows(idx.gs, 0.01, 4, seed=31)
     tickets = [server.submit(w, rel)
-               for w, rel in zip(wins, ("intersects", "contains",
-                                        "intersects", "covers"))]
+               for w, rel in zip(wins, ("intersects", "touches",
+                                        "dwithin:0.004", "covers"))]
     out = server.flush()
     assert set(out) == set(tickets)
-    np.testing.assert_array_equal(out[tickets[1]],
-                                  idx.query(wins[1], "contains")[0])
+    np.testing.assert_array_equal(out[tickets[2]],
+                                  idx.query(wins[2], "dwithin:0.004")[0])
+    with pytest.raises(ValueError, match="requires a parameter"):
+        server.submit(wins[0], "dwithin")   # fail fast at submit time
     assert server.flush() == {}
     # writes go through the facade: epoch moves, next flush is fresh
     rng = np.random.default_rng(37)

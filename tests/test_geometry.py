@@ -1,9 +1,90 @@
-"""Exact-predicate correctness via Monte-Carlo oracles (SAT vs sampling)."""
+"""Exact-predicate correctness: concave regression cases, Monte-Carlo
+sampling oracles, and Liang–Barsky clip edge cases in fp32 and fp64."""
+import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import geometry as geom
 from repro.core.datasets import generate
+
+
+def _geom(pts, vmax=8, kind=geom.GeomKind.POLYGON):
+    """One padded record from a vertex list."""
+    pts = np.asarray(pts, np.float64)
+    verts = np.zeros((1, vmax, 2))
+    verts[0, :len(pts)] = pts
+    verts[0, len(pts):] = pts[-1]
+    return (verts, np.array([len(pts)], np.int32),
+            np.array([int(kind)], np.int8))
+
+
+# L occupying {x <= 0.3} ∪ {y <= 0.3} of the unit square, reflex at (.3,.3)
+_L_RING = [[0, 0], [1, 0], [1, 0.3], [0.3, 0.3], [0.3, 1], [0, 1]]
+
+
+@pytest.mark.parametrize("xp,dtype", [(np, np.float64), (np, np.float32),
+                                      (jnp, np.float32)])
+def test_concave_notch_regression_intersects(xp, dtype):
+    """REGRESSION (pre-fix failure): the SAT-based intersects reported a
+    window tucked into an L-shape's notch as intersecting — no axis of a
+    CONCAVE ring separates them, yet they are disjoint. The exact edge-clip +
+    ray-cast rebuild must report disjoint on every backend precision."""
+    verts, nv, kinds = _geom(_L_RING)
+    rect = np.array([0.6, 0.6, 0.9, 0.9])
+    v = xp.asarray(verts.astype(dtype))
+    r = xp.asarray(rect.astype(dtype))
+    assert not bool(geom.rect_intersects_polygons(r, v, nv, xp=xp)[0])
+    assert bool(geom.rect_disjoint_geoms(r, v, nv, xp.asarray(kinds),
+                                         xp=xp)[0])
+    # ... while a window overlapping the L's arm does intersect
+    r2 = xp.asarray(np.array([0.2, 0.2, 0.5, 0.5], dtype))
+    assert bool(geom.rect_intersects_polygons(r2, v, nv, xp=xp)[0])
+
+
+@pytest.mark.parametrize("xp,dtype", [(np, np.float64), (np, np.float32),
+                                      (jnp, np.float32)])
+def test_concave_within_regression(xp, dtype):
+    """REGRESSION (pre-fix failure): the same-side corner test used by
+    ``within`` never holds for concave rings, so a window genuinely inside
+    the L-shape's fat corner was reported not-within."""
+    verts, nv, kinds = _geom(_L_RING)
+    v = xp.asarray(verts.astype(dtype))
+    k = xp.asarray(kinds)
+    inside = xp.asarray(np.array([0.05, 0.05, 0.25, 0.25], dtype))
+    assert bool(geom.geoms_cover_rect(inside, v, nv, k, xp=xp)[0])
+    # window poking out of the notch: all 4 corners inside would be a false
+    # positive — the notch edges clip the window interior
+    poking = xp.asarray(np.array([0.1, 0.1, 0.5, 0.5], dtype))
+    assert not bool(geom.geoms_cover_rect(poking, v, nv, k, xp=xp)[0])
+
+
+def test_concave_corner_inside_false_positive_within():
+    """All four window corners (and centre) inside a concave ring whose
+    spike dips into the window: corners-inside alone would claim within."""
+    # square with a triangular notch cut from the top edge to the centre
+    pac = [[0, 0], [1, 0], [1, 1], [0.6, 1], [0.5, 0.5], [0.4, 1], [0, 1]]
+    verts, nv, kinds = _geom(pac)
+    w = np.array([0.3, 0.2, 0.7, 0.6])
+    corners = np.array([[0.3, 0.2], [0.7, 0.2], [0.7, 0.6], [0.3, 0.6],
+                        [0.5, 0.4]])
+    inside = geom.points_in_polygons(corners[:, 0], corners[:, 1], verts, nv)
+    assert bool(inside.all())                     # the trap
+    assert not bool(geom.geoms_cover_rect(w, verts, nv, kinds)[0])
+    assert bool(geom.rect_intersects_polygons(w, verts, nv)[0])
+
+
+def test_point_in_polygon_concave_star():
+    star = [[0.5, 0.9], [0.45, 0.55], [0.1, 0.5], [0.45, 0.45], [0.5, 0.1],
+            [0.55, 0.45], [0.9, 0.5], [0.55, 0.55]]
+    verts, nv, _ = _geom(star)
+    px = np.array([0.5, 0.2, 0.5, 0.75, 0.8])
+    py = np.array([0.5, 0.2, 0.9, 0.75, 0.8])
+    got = geom.points_in_polygons(px, py, verts, nv)[0]
+    # centre in, corner-region out, spike tip on boundary, between spikes ~
+    assert got.tolist() == [True, False, True, False, False]
+    strict = geom.points_strictly_in_polygons(px, py, verts, nv)[0]
+    assert strict.tolist() == [True, False, False, False, False]
 
 
 def _sample_poly_points(verts, nv, rng, n=64):
@@ -66,6 +147,78 @@ def test_polyline_intersects_segment_cases():
     verts3 = np.zeros((1, 4, 2))
     verts3[0, :, :] = (0.5, 0.5)
     assert bool(geom.rect_intersects_polylines(rect, verts3, nv)[0])
+
+
+@pytest.mark.parametrize("xp,dtype", [(np, np.float64), (np, np.float32),
+                                      (jnp, np.float32)])
+def test_liang_barsky_zero_length_and_axis_parallel(xp, dtype):
+    """REGRESSION for the dead ``xp.where(p > 0, t0n, t0n)`` branch: the clip
+    must handle zero-length segments (pure point tests) and axis-parallel
+    segments (p == 0 half-planes) identically in fp32 and fp64."""
+    rect = np.array([0.4, 0.4, 0.6, 0.6], dtype)
+    cases = [
+        # (a, b, hits_closed_rect)
+        ((0.5, 0.5), (0.5, 0.5), True),     # zero-length inside
+        ((0.4, 0.4), (0.4, 0.4), True),     # zero-length on the corner
+        ((0.3, 0.5), (0.3, 0.5), False),    # zero-length outside
+        ((0.3, 0.5), (0.7, 0.5), True),     # horizontal straight through
+        ((0.3, 0.4), (0.7, 0.4), True),     # horizontal ALONG the boundary
+        ((0.3, 0.39), (0.7, 0.39), False),  # horizontal just outside
+        ((0.5, 0.3), (0.5, 0.7), True),     # vertical straight through
+        ((0.6, 0.3), (0.6, 0.7), True),     # vertical along the boundary
+        ((0.61, 0.3), (0.61, 0.7), False),  # vertical just outside
+        ((0.45, 0.45), (0.55, 0.55), True),  # fully inside
+        ((0.0, 0.0), (0.39, 0.39), False),   # stops short of the corner
+        ((0.0, 0.0), (1.0, 1.0), True),      # diagonal through
+    ]
+    n = len(cases)
+    verts = np.zeros((n, 2, 2), dtype)
+    for i, (a, b, _) in enumerate(cases):
+        verts[i, 0], verts[i, 1] = a, b
+    nv = np.full(n, 2, np.int32)
+    got = geom.rect_intersects_polylines(xp.asarray(rect), xp.asarray(verts),
+                                         nv, xp=xp)
+    want = [hit for _, _, hit in cases]
+    assert np.asarray(got).tolist() == want
+
+
+def test_touches_crosses_dwithin_examples():
+    rect = np.array([0.4, 0.4, 0.6, 0.6])
+    # polygon sharing exactly one edge with the window
+    vp, np_, kp = _geom([[0.6, 0.4], [0.8, 0.4], [0.8, 0.6], [0.6, 0.6]])
+    assert bool(geom.rect_touches_geoms(rect, vp, np_, kp)[0])
+    # polygon overlapping the window interior: intersects but not touches
+    vo, no, ko = _geom([[0.55, 0.45], [0.8, 0.45], [0.8, 0.55], [0.55, 0.55]])
+    assert not bool(geom.rect_touches_geoms(rect, vo, no, ko)[0])
+    # window fully inside a polygon: interiors overlap, not touches
+    vb, nb, kb = _geom([[0.2, 0.2], [0.8, 0.2], [0.8, 0.8], [0.2, 0.8]])
+    assert not bool(geom.rect_touches_geoms(rect, vb, nb, kb)[0])
+    assert bool(geom.geoms_cover_rect(rect, vb, nb, kb)[0])
+
+    line = geom.GeomKind.POLYLINE
+    # polyline crossing straight through: crosses, not touches
+    vl, nl, kl = _geom([[0.3, 0.5], [0.7, 0.5]], kind=line)
+    assert bool(geom.rect_crosses_geoms(rect, vl, nl, kl)[0])
+    assert not bool(geom.rect_touches_geoms(rect, vl, nl, kl)[0])
+    # polyline along the window boundary: touches, not crosses
+    vt, nt, kt = _geom([[0.3, 0.4], [0.7, 0.4]], kind=line)
+    assert bool(geom.rect_touches_geoms(rect, vt, nt, kt)[0])
+    assert not bool(geom.rect_crosses_geoms(rect, vt, nt, kt)[0])
+    # polyline fully inside: neither (contained, interiors overlap)
+    vi, ni, ki = _geom([[0.45, 0.5], [0.55, 0.5]], kind=line)
+    assert not bool(geom.rect_crosses_geoms(rect, vi, ni, ki)[0])
+    assert not bool(geom.rect_touches_geoms(rect, vi, ni, ki)[0])
+    # polygons never cross
+    assert not bool(geom.rect_crosses_geoms(rect, vo, no, ko)[0])
+
+    # dwithin: nearest approach of this segment to the rect is exactly
+    # the corner gap hypot(0.1, 0.1)
+    vd, nd, kd = _geom([[0.7, 0.7], [0.9, 0.7]], kind=line)
+    gap = float(np.hypot(0.1, 0.1))
+    assert bool(geom.rect_dwithin_geoms(rect, vd, nd, kd, gap + 1e-9)[0])
+    assert not bool(geom.rect_dwithin_geoms(rect, vd, nd, kd, gap - 1e-9)[0])
+    # intersecting geometry is dwithin at distance 0
+    assert bool(geom.rect_dwithin_geoms(rect, vl, nl, kl, 0.0)[0])
 
 
 def test_mbr_algebra():

@@ -1,0 +1,128 @@
+"""Oracle parity suite: host, device, and device+delta query paths against
+the scalar brute-force oracle (tests/_oracle.py) on a MIXED store — convex
+polygons, concave star/L rings, polylines and point records interleaved.
+
+Example-based parity always runs; the randomized hypothesis sweep is marked
+``property`` (tier-2: ``pytest -q -m property``) and skips itself gracefully
+when hypothesis is absent (tests/_hyp.py).
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+from _oracle import mixed_store, oracle_query
+
+from repro.core.datasets import make_query_windows
+from repro.core.engine import EngineConfig, SpatialIndex
+from repro.core.index import GLINConfig
+
+PARITY_RELATIONS = ("intersects", "contains", "covers", "within", "disjoint",
+                    "touches", "crosses", "dwithin:0.004")
+
+_N = 400
+_CACHE = {}
+
+
+def _fp32(w):
+    return np.asarray(w, np.float32).astype(np.float64)
+
+
+def _index(key="base"):
+    """Module-cached indexes (hypothesis-safe: no function-scoped fixture)."""
+    if key in _CACHE:
+        return _CACHE[key]
+    gs = mixed_store(_N, seed=3)
+    idx = SpatialIndex.build(
+        gs, GLINConfig(piece_limitation=500),
+        EngineConfig(device_min_batch=1, stale_rebuild_min_batch=1))
+    if key == "delta":
+        idx.snapshot()   # publish, then build a delta on top
+        rng = np.random.default_rng(11)
+        star = _star(rng, (0.4, 0.4), 0.05)
+        idx.insert(star, star.shape[0], 0)
+        ell = _fp32([[0.6, 0.6], [0.7, 0.6], [0.7, 0.66], [0.64, 0.66],
+                     [0.64, 0.7], [0.6, 0.7]])
+        idx.insert(ell, 6, 0)
+        line = _fp32([[0.35, 0.45], [0.55, 0.38], [0.6, 0.5]])
+        idx.insert(line, 3, 1)
+        for rec in (5, 17, 40):
+            assert idx.delete(rec)
+        assert idx.snapshot_is_stale() and idx.delta_size() == 6
+    _CACHE[key] = idx
+    return idx
+
+
+def _star(rng, c, r, spikes=5):
+    ang = np.sort(rng.uniform(0, 2 * np.pi, 2 * spikes))
+    rad = np.where(np.arange(2 * spikes) % 2 == 0, r, 0.35 * r)
+    return _fp32(np.stack([c[0] + rad * np.cos(ang),
+                           c[1] + rad * np.sin(ang)], -1))
+
+
+def _windows(idx, sel, k, seed):
+    return _fp32(make_query_windows(idx.gs, sel, k, seed=seed))
+
+
+def _assert_parity(idx, wins, relation, backend):
+    res = idx.query(wins, relation, backend=backend)
+    assert res.plan.backend == backend
+    gs = idx.gs
+    live = idx.glin._live_mask()
+    fp32 = backend != "host"
+    verts = gs.verts.astype(np.float32) if fp32 else gs.verts
+    for qi, w in enumerate(wins):
+        want = oracle_query(w.astype(np.float32) if fp32 else w, verts,
+                            gs.nverts, gs.kinds, relation, live)
+        np.testing.assert_array_equal(res[qi], want, err_msg=(
+            f"{backend}/{relation} window {qi} {w}"))
+
+
+# ------------------------------------------------------------ example-based --
+@pytest.mark.parametrize("relation", PARITY_RELATIONS)
+def test_host_matches_oracle(relation):
+    idx = _index()
+    _assert_parity(idx, _windows(idx, 0.02, 6, seed=5), relation, "host")
+
+
+@pytest.mark.parametrize("relation", PARITY_RELATIONS)
+def test_device_matches_fp32_oracle(relation):
+    idx = _index()
+    _assert_parity(idx, _windows(idx, 0.02, 6, seed=7), relation, "device")
+
+
+@pytest.mark.parametrize("relation", PARITY_RELATIONS)
+def test_device_delta_matches_fp32_oracle(relation):
+    idx = _index("delta")
+    # windows over the delta region so added/tombstoned records participate
+    wins = np.concatenate([
+        _windows(idx, 0.02, 4, seed=9),
+        _fp32([[0.3, 0.3, 0.5, 0.5], [0.58, 0.58, 0.72, 0.72]]),
+    ])
+    _assert_parity(idx, wins, relation, "device+delta")
+    assert idx.snapshot_is_stale()   # parity did NOT come from a republish
+
+
+# ----------------------------------------------------- hypothesis sweep -----
+@pytest.mark.property
+@given(seed=st.integers(0, 10_000), sel=st.sampled_from([0.002, 0.02, 0.1]),
+       relation=st.sampled_from(PARITY_RELATIONS))
+@settings(max_examples=60, deadline=None, derandomize=True)
+def test_property_host_matches_oracle(seed, sel, relation):
+    idx = _index()
+    _assert_parity(idx, _windows(idx, sel, 2, seed=seed), relation, "host")
+
+
+@pytest.mark.property
+@given(seed=st.integers(0, 10_000), relation=st.sampled_from(PARITY_RELATIONS))
+@settings(max_examples=30, deadline=None, derandomize=True)
+def test_property_device_matches_fp32_oracle(seed, relation):
+    idx = _index()
+    _assert_parity(idx, _windows(idx, 0.02, 2, seed=seed), relation, "device")
+
+
+@pytest.mark.property
+@given(seed=st.integers(0, 10_000), relation=st.sampled_from(PARITY_RELATIONS))
+@settings(max_examples=30, deadline=None, derandomize=True)
+def test_property_device_delta_matches_fp32_oracle(seed, relation):
+    idx = _index("delta")
+    _assert_parity(idx, _windows(idx, 0.02, 2, seed=seed), relation,
+                   "device+delta")

@@ -1,0 +1,98 @@
+"""Relation registry invariants: duplicate protection, complement rules,
+parametric (dwithin) binding, probe-window expansion, and the self-check."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import geometry as geom
+from repro.core.relations import (RELATIONS, check_registry, get_relation,
+                                  register_relation, relation_names)
+
+
+def test_registry_self_check_passes():
+    names = check_registry()
+    assert {"contains", "covers", "intersects", "within", "disjoint",
+            "touches", "crosses", "dwithin"} <= set(names)
+    assert set(names) == set(RELATIONS)
+
+
+def test_duplicate_registration_raises_and_replace_escapes():
+    original = RELATIONS["intersects"]
+    with pytest.raises(ValueError, match="already registered"):
+        register_relation(dataclasses.replace(original, doc="shadow"))
+    assert RELATIONS["intersects"] is original   # rejected atomically
+    try:
+        shadow = register_relation(
+            dataclasses.replace(original, doc="shadow"), replace=True)
+        assert RELATIONS["intersects"] is shadow
+        check_registry()
+    finally:
+        register_relation(original, replace=True)
+    assert RELATIONS["intersects"] is original
+
+
+def test_complement_must_be_registered_first_and_not_chain():
+    with pytest.raises(ValueError, match="unknown"):
+        register_relation(dataclasses.replace(
+            RELATIONS["disjoint"], name="co_nothing", complement_of="nope"))
+    with pytest.raises(ValueError, match="itself a complement"):
+        register_relation(dataclasses.replace(
+            RELATIONS["disjoint"], name="co_disjoint",
+            complement_of="disjoint"))
+    assert "co_nothing" not in RELATIONS and "co_disjoint" not in RELATIONS
+
+
+def test_parametric_dwithin_binding():
+    with pytest.raises(ValueError, match="requires a parameter"):
+        get_relation("dwithin")
+    with pytest.raises(ValueError, match="bad parameter"):
+        get_relation("dwithin:far")
+    with pytest.raises(ValueError, match=">= 0"):
+        get_relation("dwithin:-1")
+    # REGRESSION: inf passed the old `not dist >= 0` guard and collapsed the
+    # probe interval to empty (0 hits instead of every record)
+    with pytest.raises(ValueError, match="finite"):
+        get_relation("dwithin:inf")
+    with pytest.raises(ValueError, match="finite"):
+        get_relation("dwithin:nan")
+    rel = get_relation("dwithin:0.25")
+    assert rel.name == "dwithin:0.25" and rel.probe_pad == 0.25
+    assert not rel.parametric and rel.base_name() == "dwithin:0.25"
+    assert get_relation("dwithin:0.25") is rel   # bound cache
+    check_registry()
+
+    w = np.array([0.4, 0.4, 0.6, 0.6])
+    np.testing.assert_allclose(rel.probe_window(w),
+                               [0.15, 0.15, 0.85, 0.85])
+    # prefilter is the L∞-expanded window (conservative for Euclidean)
+    near = np.array([0.0, 0.0, 0.2, 0.2])
+    far = np.array([0.0, 0.0, 0.1, 0.1])
+    assert bool(rel.mbr_prefilter(near, w))
+    assert not bool(rel.mbr_prefilter(far, w))
+    # unpadded relations return the window unchanged
+    assert get_relation("intersects").probe_window(w) is w
+
+
+def test_dwithin_prefilter_never_drops_a_true_hit():
+    """Conservative contract: every record the exact predicate accepts must
+    survive the MBR prefilter (the corner regions where L∞ admits more than
+    Euclidean are pruned by the predicate, never the other way round)."""
+    rng = np.random.default_rng(0)
+    rel = get_relation("dwithin:0.07")
+    w = np.array([0.45, 0.45, 0.55, 0.55])
+    centers = rng.uniform(0.3, 0.7, size=(200, 2))
+    verts = centers[:, None, :] + rng.uniform(-0.02, 0.02, size=(200, 6, 2))
+    nverts = np.full(200, 6, np.int32)
+    kinds = np.zeros(200, np.int8)
+    mbrs = geom.mbrs_of_verts(verts, nverts)
+    hit = rel.predicate(w, verts, nverts, kinds)
+    kept = rel.mbr_prefilter(mbrs, w[None, :])
+    assert not np.any(hit & ~kept)
+    assert hit.any() and not hit.all()
+
+
+def test_relation_names_filters_device_native():
+    assert "disjoint" in relation_names()
+    assert "disjoint" not in relation_names(device_native=True)
+    assert relation_names(device_native=False) == ("disjoint",)

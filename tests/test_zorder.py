@@ -86,3 +86,26 @@ def test_mbr_interval():
     mbrs = np.array([[0.1, 0.2, 0.3, 0.4], [0.0, 0.0, 1.0, 1.0]])
     zmin, zmax = z.mbr_to_zinterval_np(mbrs, z.UNIT)
     assert (zmin <= zmax).all()
+
+
+def test_quantize_jnp_clamps_out_of_domain_like_host():
+    """REGRESSION: padded dwithin probe windows can reach past the grid
+    domain. The two-stage device quantization used to compute the fine limb
+    inside an out-of-range coarse cell, landing ~32k cells below the true
+    boundary; it must clamp to the domain edge exactly like quantize_np."""
+    lim = (1 << 30) - 1
+    grid = z.UNIT
+    xs = np.array([-0.5, -1e-6, 0.0, 0.5, 1.0 - 1e-9, 1.0, 1.003, 2.0, 1e20])
+    qx_np, qy_np = grid.quantize_np(xs, xs)
+    qx_j, qy_j = grid.quantize_jnp(jnp.asarray(xs, jnp.float32),
+                                   jnp.asarray(xs, jnp.float32))
+    assert int(np.asarray(qx_j)[0]) == 0 and int(qx_np[0]) == 0
+    for big in (5, 6, 7, 8):           # every >= domain-max input saturates
+        assert int(np.asarray(qx_j)[big]) == lim, xs[big]
+        assert int(qx_np[big]) == lim
+    # in-domain values still agree with the host quantizer up to fp32 error
+    mid = slice(2, 5)
+    assert np.max(np.abs(np.asarray(qx_j)[mid] - qx_np[mid])) \
+        <= z.ZGrid.FP32_GUARD_CELLS
+    assert np.max(np.abs(np.asarray(qy_j)[mid] - qy_np[mid])) \
+        <= z.ZGrid.FP32_GUARD_CELLS
