@@ -1,0 +1,105 @@
+"""Perf-trajectory gate: compare a fresh ``--quick`` bench run against the
+committed BENCH_*.json baselines at the repo root.
+
+Fails (exit 1) when a tracked *speedup ratio* (machine-relative, robust
+across runner hardware) collapsed below its floor. Absolute latencies
+exceeding ``--factor`` x the committed baseline (default 2x) are reported as
+warnings — they compare across machines (baselines come from a dev box, CI
+runs on shared runners) — and gate only under ``--strict-latency``
+(same-machine runs, e.g. refreshing the baselines locally):
+
+* ``BENCH_device.json``   — per dataset×relation ``refine_scan_us`` vs the
+  baseline, plus ``speedup_cluster`` (fused refinement vs the legacy argsort
+  pipeline at cap=4096 / budget=256) staying >= ``--min-refine-speedup``.
+* ``BENCH_maintenance.json`` — ``speedup_vs_republish`` (delta patching vs
+  republish-per-epoch) staying >= ``--min-maint-speedup``.
+
+Usage (CI bench-smoke job)::
+
+    python -m benchmarks.run --quick --bench-dir /tmp/bench_fresh
+    python -m benchmarks.check_bench /tmp/bench_fresh
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _load(path: pathlib.Path) -> dict:
+    if not path.exists():
+        sys.exit(f"check_bench: missing {path}")
+    return json.loads(path.read_text())
+
+
+def check(fresh_dir: pathlib.Path, committed_dir: pathlib.Path,
+          factor: float, min_refine_speedup: float,
+          min_maint_speedup: float, strict_latency: bool = False) -> list:
+    errors = []
+
+    dev_new = _load(fresh_dir / "BENCH_device.json")
+    dev_old = _load(committed_dir / "BENCH_device.json")
+    for ds, rels in dev_old.get("datasets", {}).items():
+        for rel, row in rels.items():
+            new_row = dev_new.get("datasets", {}).get(ds, {}).get(rel)
+            if new_row is None:
+                errors.append(f"device: {ds}/{rel} missing from fresh run")
+                continue
+            old_us, new_us = row["refine_scan_us"], new_row["refine_scan_us"]
+            if new_us > factor * old_us:
+                # absolute wall-clock comparisons cross machines (baselines
+                # are committed from a dev box, CI runs on shared runners):
+                # advisory by default, a hard gate only under
+                # --strict-latency. The machine-relative speedup floors
+                # below are always hard.
+                msg = (f"device: {ds}/{rel} refine {new_us:.0f}us > "
+                       f"{factor:g}x baseline {old_us:.0f}us")
+                if strict_latency:
+                    errors.append(msg)
+                else:
+                    print(f"WARNING {msg} (cross-machine; not gating — "
+                          "pass --strict-latency to enforce)")
+    sc = dev_new.get("speedup_cluster", 0.0)
+    if sc < min_refine_speedup:
+        errors.append(
+            f"device: fused-refine speedup on cluster x{sc:.2f} < floor "
+            f"x{min_refine_speedup:g} (committed x"
+            f"{dev_old.get('speedup_cluster', 0):.2f})")
+
+    mnt_new = _load(fresh_dir / "BENCH_maintenance.json")
+    sv = mnt_new.get("speedup_vs_republish", 0.0)
+    if sv < min_maint_speedup:
+        errors.append(
+            f"maintenance: delta-patch speedup x{sv:.2f} < floor "
+            f"x{min_maint_speedup:g}")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh_dir", type=pathlib.Path,
+                    help="directory holding the fresh --quick BENCH_*.json")
+    ap.add_argument("--committed", type=pathlib.Path, default=REPO_ROOT,
+                    help="directory holding the committed baselines")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max tolerated latency regression factor")
+    ap.add_argument("--min-refine-speedup", type=float, default=1.2)
+    ap.add_argument("--min-maint-speedup", type=float, default=1.5)
+    ap.add_argument("--strict-latency", action="store_true",
+                    help="gate on absolute latency too (same-machine runs)")
+    args = ap.parse_args()
+    errors = check(args.fresh_dir, args.committed, args.factor,
+                   args.min_refine_speedup, args.min_maint_speedup,
+                   strict_latency=args.strict_latency)
+    for e in errors:
+        print(f"REGRESSION {e}")
+    if errors:
+        sys.exit(1)
+    print("check_bench: perf trajectory OK")
+
+
+if __name__ == "__main__":
+    main()

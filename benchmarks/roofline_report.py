@@ -1,6 +1,8 @@
-"""Render the roofline table from dry-run artifacts (EXPERIMENTS.md source).
+"""Render the roofline table from dry-run artifacts (EXPERIMENTS.md source),
+plus the analytic roofline of the GLIN refinement kernels (``--kernels``).
 
 Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+       PYTHONPATH=src python -m benchmarks.roofline_report --kernels
 """
 from __future__ import annotations
 
@@ -9,6 +11,47 @@ import json
 import pathlib
 
 ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+# Representative refinement shapes: (queries, slots, exact budget, ring width)
+KERNEL_SHAPES = [
+    (512, 1 << 17, 256, 12),
+    (4096, 1 << 20, 256, 12),
+    (4096, 1 << 24, 512, 12),
+]
+
+
+def kernel_rows(shapes=None):
+    """Roofline terms of the refinement pipeline from the analytic bytes/flops
+    model in ``repro.kernels.refine.refine_cost`` — covering the fused
+    compact kernel AND the downstream exact-shape stage over the compacted
+    survivors, not just candidate counting."""
+    from repro.kernels.refine import refine_cost
+    from repro.utils import roofline
+
+    out = []
+    for q, n, budget, verts in (shapes or KERNEL_SHAPES):
+        shape = f"Q={q}/N={n}/budget={budget}"
+        stages = {
+            "count": refine_cost("count", q, n),
+            "compact": refine_cost("compact", q, n, budget),
+            "exact": refine_cost("exact", q, n, budget, verts=verts),
+        }
+        pipeline = {
+            "flops": (stages["compact"]["flops"] + stages["exact"]["flops"]),
+            "bytes_accessed": (stages["compact"]["bytes_accessed"]
+                               + stages["exact"]["bytes_accessed"]),
+        }
+        stages["compact+refine"] = pipeline
+        for stage, cost in stages.items():
+            terms = roofline.roofline_terms(
+                cost["flops"], cost["bytes_accessed"], 0.0, chips=1)
+            out.append((
+                f"refine/{stage}/{shape}",
+                f"flops={cost['flops']:.3g} bytes={cost['bytes_accessed']:.3g} "
+                f"compute={terms['compute_s']*1e6:.3g}us "
+                f"memory={terms['memory_s']*1e6:.3g}us "
+                f"dom={terms['dominant']}"))
+    return out
 
 
 def fmt(v, digits=3):
@@ -41,7 +84,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--kernels", action="store_true",
+                    help="analytic roofline of the GLIN refinement kernels "
+                         "(count / compact / exact / compact+refine)")
     args = ap.parse_args()
+    if args.kernels:
+        for name, detail in kernel_rows():
+            print(f"{name:44s} {detail}")
+        return
     if args.markdown:
         print(markdown(args.mesh))
         return

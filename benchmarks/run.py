@@ -4,10 +4,20 @@ Prints ``name,us_per_call,derived`` CSV (see common.Csv). GLIN benchmarks
 mirror the paper's experiment suite (§IX); device/kernel benchmarks cover the
 beyond-paper TPU-native path. Roofline artifacts are produced separately by
 launch/dryrun.py and rendered by benchmarks/roofline_report.py.
+
+``--quick`` is the CI bench-smoke mode: reduced scale, device + maintenance
+only, and the machine-readable ``BENCH`` dicts are written to
+``BENCH_device.json`` / ``BENCH_maintenance.json`` in ``--bench-dir``
+(default: the repo root — the committed perf trajectory;
+``benchmarks.check_bench`` compares a fresh run against it).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def main() -> None:
@@ -16,21 +26,40 @@ def main() -> None:
                     help="paper-scale datasets (slow on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma list: glin,device,maintenance")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI bench-smoke: reduced scale, write BENCH_*.json")
+    ap.add_argument("--bench-dir", default=str(REPO_ROOT),
+                    help="where --quick writes BENCH_*.json")
     args = ap.parse_args()
 
     from .common import Csv
     csv = Csv()
-    which = set((args.only or "glin,device,maintenance").split(","))
+    default = "device,maintenance" if args.quick else "glin,device,maintenance"
+    which = set((args.only or default).split(","))
+    bench_jsons = {}
     print("name,us_per_call,derived")
     if "glin" in which:
         from . import bench_glin
         bench_glin.run(csv, large=args.large)
     if "device" in which:
         from . import bench_device
-        bench_device.run(csv, large=args.large)
+        bench_jsons["device"] = bench_device.run(csv, large=args.large,
+                                                 quick=args.quick)
     if "maintenance" in which:
         from . import bench_maintenance
-        bench_maintenance.run(csv, large=args.large)
+        if args.quick:
+            bench_jsons["maintenance"] = bench_maintenance.run(
+                csv, n=20_000, rounds=8)
+        else:
+            bench_jsons["maintenance"] = bench_maintenance.run(
+                csv, large=args.large)
+    if args.quick:
+        out_dir = pathlib.Path(args.bench_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        for name, payload in bench_jsons.items():
+            path = out_dir / f"BENCH_{name}.json"
+            path.write_text(json.dumps(payload, indent=1) + "\n")
+            print(f"# wrote {path}")
     print(f"# {len(csv.rows)} measurements")
 
 

@@ -34,7 +34,8 @@ from .zorder import (LO_LIMB_SIZE, mbr_to_zinterval_hilo, split_hilo_np,
                      z_less_hilo)
 
 __all__ = ["GLINSnapshot", "snapshot_from_host", "batch_probe",
-           "batch_query_bounds", "batch_query", "input_specs_like"]
+           "batch_query_bounds", "batch_query", "DeltaTable",
+           "delta_table_from_host", "batch_check_added", "input_specs_like"]
 
 _I32 = jnp.int32
 _INF_HI = np.int32(2**30)  # > any valid 30-bit limb
@@ -50,6 +51,11 @@ class GLINSnapshot:
     keys_lo: jax.Array      # (N,) int32
     recs: jax.Array         # (N,) int32 record ids
     rec_leaf: jax.Array     # (N,) int32 leaf id of each slot
+    # slot-aligned fp32 MBR tables (built once per publish): the refinement
+    # mask streams/loads these directly instead of chaining
+    # leaf_mbr[rec_leaf[slot]] / mbrs[recs[slot]] gathers per query
+    slot_lmbr: jax.Array    # (N, 4) float32 leaf MBR of each slot
+    slot_rmbr: jax.Array    # (N, 4) float32 record MBR of each slot
     # leaf tables (L leaves; +1 sentinel on boundaries)
     leaf_start: jax.Array   # (L+1,) int32 slot offsets
     leaf_dlo_hi: jax.Array  # (L+1,) int32 leaf domain lower bounds
@@ -174,10 +180,14 @@ def snapshot_from_host(glin) -> GLINSnapshot:
         pz_hi = pz_lo = ps_hi = ps_lo = np.empty(0, np.int32)
 
     grid = glin.gs.grid
+    mbrs32 = mbrs.astype(np.float32)
     return GLINSnapshot(
         keys_hi=jnp.asarray(k_hi), keys_lo=jnp.asarray(k_lo),
         recs=jnp.asarray(recs.astype(np.int32)),
         rec_leaf=jnp.asarray(rec_leaf),
+        slot_lmbr=jnp.asarray(mbrs32[rec_leaf] if L else
+                              np.empty((0, 4), np.float32)),
+        slot_rmbr=jnp.asarray(glin.gs.mbrs[recs].astype(np.float32)),
         leaf_start=jnp.asarray(starts.astype(np.int32)),
         leaf_dlo_hi=jnp.asarray(dlo_hi), leaf_dlo_lo=jnp.asarray(dlo_lo),
         leaf_mbr=jnp.asarray(mbrs.astype(np.float32)),
@@ -341,11 +351,13 @@ def batch_query_bounds(s: GLINSnapshot, windows: jax.Array,
     return start, end
 
 
-@partial(jax.jit, static_argnames=("relation", "cap", "exact_budget"))
+@partial(jax.jit, static_argnames=("relation", "cap", "exact_budget",
+                                   "compaction"))
 def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
                 nverts: jax.Array, kinds: jax.Array, mbrs: jax.Array,
                 relation: str = "contains", cap: int = 4096,
-                exact_budget: int = 0) -> Tuple[jax.Array, jax.Array]:
+                exact_budget: int = 0, compaction: str = "scan"
+                ) -> Tuple[jax.Array, jax.Array]:
     """Full two-step batched query.
 
     Returns ``(hits, counts)`` where ``hits`` is (Q, K) int32 record ids
@@ -353,37 +365,98 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
     via negative counts (callers re-issue with a bigger cap).
 
     ``exact_budget`` > 0 enables TWO-STAGE refinement (beyond-paper, §Perf):
-    stage 1 evaluates only the cheap interval + leaf-MBR + record-MBR masks
-    over the full run; stage 2 compacts the survivors per query (stable sort
-    on the mask) and runs exact-shape checks + vertex gathers on at most
-    ``exact_budget`` candidates — the expensive (Q·cap·V) gather shrinks to
-    (Q·budget·V). Budget overflow is signalled like cap overflow.
+    stage 1 evaluates only the cheap interval + leaf-MBR + record-MBR masks;
+    stage 2 compacts the survivors per query and runs exact-shape checks +
+    vertex gathers on at most ``exact_budget`` candidates — the expensive
+    (Q·cap·V) gather shrinks to (Q·budget·V). Budget overflow is signalled
+    like cap overflow. ``compaction`` picks the stage-1 implementation:
+
+    * ``"pallas"`` — the fused ``refine_compact`` kernel: interval + leaf-MBR
+      + record-MBR mask with in-VMEM prefix-sum compaction over the whole
+      slot table; only (Q, budget) slot ids reach HBM, no ``cap``-sized
+      intermediate exists at all (``cap`` only bounds the dense fallback).
+    * ``"scan"``   — jnp reference semantics: (Q, cap) candidate window from
+      the probe run, masked via the slot-aligned MBR tables, compacted with
+      a stable cumsum + scatter (no sort). The CPU/interpret parity path.
+    * ``"sort"``   — the legacy stable-argsort compaction over chained
+      ``leaf_mbr[rec_leaf[slot]]`` / ``mbrs[recs[slot]]`` gathers (kept for
+      the old-vs-new refinement benchmark).
     """
+    if compaction not in ("pallas", "scan", "sort"):
+        raise ValueError(f"unknown compaction {compaction!r}")
     rel = _device_relation(relation)
     start, end = batch_query_bounds(s, windows, relation)
     q = windows.shape[0]
-    pos = start[:, None] + jnp.arange(cap, dtype=_I32)[None, :]  # (Q, cap)
-    valid = pos < jnp.minimum(end, start + cap)[:, None]
-    posc = jnp.minimum(pos, s.num_slots - 1)
-
-    leaf = s.rec_leaf[posc]                      # (Q, cap)
-    lmbr = s.leaf_mbr[leaf]                      # (Q, cap, 4)
-    wq = windows[:, None, :]                     # (Q, 1, 4)
-    # leaf-MBR pruning against the padded probe window (a dwithin hit's leaf
-    # may not overlap the raw window); the record prefilter pads internally
-    leaf_ok = geom.mbr_intersects(
-        lmbr, rel.probe_window(windows, xp=jnp)[:, None, :], xp=jnp)
-    rec = s.recs[posc]
-    rmbr = mbrs[rec]
-    rec_ok = rel.mbr_prefilter(rmbr, wq, xp=jnp)
-    mask = valid & leaf_ok & rec_ok
 
     def exact_for(w, vv, nn, kk):
         return rel.predicate(w, vv, nn, kk, xp=jnp)
 
+    def exact_refine_compacted(slots, kb):
+        """Exact-shape stage over compacted survivor slots (Q, kb)."""
+        taken = slots >= 0
+        slotc = jnp.maximum(slots, 0)
+        rec = jnp.where(taken, s.recs[slotc], 0)
+        v = verts[rec.reshape(-1)]
+        nv = nverts[rec.reshape(-1)]
+        kd = kinds[rec.reshape(-1)]
+        exact = jax.vmap(exact_for)(windows,
+                                    v.reshape(q, kb, *v.shape[1:]),
+                                    nv.reshape(q, kb), kd.reshape(q, kb))
+        fmask = taken & exact
+        hits = jnp.where(fmask, rec, -1)
+        counts = fmask.sum(axis=1).astype(_I32)
+        return hits, counts
+
     if exact_budget and exact_budget < cap:
         kb = exact_budget
-        # stable-compact the MBR survivors to the front of each row
+        probe_w = rel.probe_window(windows, xp=jnp)
+        if compaction == "pallas":
+            from repro.kernels import ops
+
+            if rel.prefilter_kind == "custom":
+                raise ValueError(
+                    f"relation {relation!r} has a custom MBR prefilter; the "
+                    "fused kernel cannot evaluate it — use compaction='scan'")
+            bounds = jnp.stack([start, end], axis=1)
+            slots, mbr_counts = ops.refine_compact(
+                probe_w, bounds, s.slot_lmbr, s.slot_rmbr, budget=kb,
+                prefilter=rel.prefilter_kind)
+            hits, counts = exact_refine_compacted(slots, kb)
+            overflow = mbr_counts > kb
+            return hits, jnp.where(overflow, -counts - 1, counts)
+
+        pos = start[:, None] + jnp.arange(cap, dtype=_I32)[None, :]
+        valid = pos < jnp.minimum(end, start + cap)[:, None]
+        posc = jnp.minimum(pos, s.num_slots - 1)
+        if compaction == "scan":
+            # no leaf-MBR gather: every record MBR lies inside its leaf's
+            # aggregate MBR (grow-only maintenance), so the record prefilter
+            # implies the leaf test — the streaming kernel keeps the leaf
+            # stage because there it prunes for free, but a second (Q, cap,
+            # 4) gather here would only re-derive a weaker mask
+            rmbr = s.slot_rmbr[posc]
+            rec_ok = rel.mbr_prefilter(rmbr, windows[:, None, :], xp=jnp)
+            mask = valid & rec_ok
+            # stable cumsum + scatter compaction (no argsort): survivor j of
+            # row q lands in column (exclusive prefix of mask)[q, j]
+            m32 = mask.astype(_I32)
+            excl = jnp.cumsum(m32, axis=1) - m32
+            col = jnp.where(mask & (excl < kb), excl, kb)
+            slots = jnp.full((q, kb), -1, _I32).at[
+                jnp.arange(q, dtype=_I32)[:, None], col
+            ].set(posc, mode="drop")
+            hits, counts = exact_refine_compacted(slots, kb)
+            overflow = ((end - start) > cap) | (m32.sum(axis=1) > kb)
+            return hits, jnp.where(overflow, -counts - 1, counts)
+
+        # "sort": legacy argsort compaction over chained gathers
+        leaf = s.rec_leaf[posc]
+        lmbr = s.leaf_mbr[leaf]
+        leaf_ok = geom.mbr_intersects(lmbr, probe_w[:, None, :], xp=jnp)
+        rec = s.recs[posc]
+        rmbr = mbrs[rec]
+        rec_ok = rel.mbr_prefilter(rmbr, windows[:, None, :], xp=jnp)
+        mask = valid & leaf_ok & rec_ok
         order = jnp.argsort(~mask, axis=1, stable=True)[:, :kb]  # (Q, kb)
         sub_rec = jnp.take_along_axis(rec, order, axis=1)
         sub_mask = jnp.take_along_axis(mask, order, axis=1)
@@ -397,8 +470,22 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
         hits = jnp.where(fmask, sub_rec, -1)
         counts = fmask.sum(axis=1).astype(_I32)
         overflow = ((end - start) > cap) | (mask.sum(axis=1) > kb)
-        counts = jnp.where(overflow, -counts - 1, counts)
-        return hits, counts
+        return hits, jnp.where(overflow, -counts - 1, counts)
+
+    # single-stage dense path (exact_budget disabled or >= cap)
+    pos = start[:, None] + jnp.arange(cap, dtype=_I32)[None, :]  # (Q, cap)
+    valid = pos < jnp.minimum(end, start + cap)[:, None]
+    posc = jnp.minimum(pos, s.num_slots - 1)
+    lmbr = s.slot_lmbr[posc]                     # (Q, cap, 4)
+    wq = windows[:, None, :]                     # (Q, 1, 4)
+    # leaf-MBR pruning against the padded probe window (a dwithin hit's leaf
+    # may not overlap the raw window); the record prefilter pads internally
+    leaf_ok = geom.mbr_intersects(
+        lmbr, rel.probe_window(windows, xp=jnp)[:, None, :], xp=jnp)
+    rec = s.recs[posc]
+    rmbr = s.slot_rmbr[posc]
+    rec_ok = rel.mbr_prefilter(rmbr, wq, xp=jnp)
+    mask = valid & leaf_ok & rec_ok
 
     v = verts[rec.reshape(-1)]                   # (Q*cap, V, 2)
     nv = nverts[rec.reshape(-1)]
@@ -412,6 +499,108 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
     overflow = (end - start) > cap
     counts = jnp.where(overflow, -counts - 1, counts)  # signal truncation
     return hits, counts
+
+
+# ---------------------------------------------------------------------------
+# Delta side table: device-resident secondary index over the added set
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeltaTable:
+    """Small device-resident secondary index over the added-set delta (the
+    records inserted since the last snapshot publish), sorted by Zmin key.
+
+    ``SpatialIndex`` builds one lazily per mutation epoch so ``device+delta``
+    queries stop round-tripping to the host per batch: the added-set check
+    becomes one vectorized (Q × A) z-interval + MBR + exact-predicate pass on
+    device (``batch_check_added``). Rows are padded to a size bucket with
+    inert entries (``ids == -1``, +inf keys, far-away MBRs) so the jitted
+    check compiles once per bucket, not once per insert."""
+
+    ids: jax.Array       # (A,) int32 record ids (-1 = padding), Zmin-sorted
+    zmin_hi: jax.Array   # (A,) int32 z-interval lower key
+    zmin_lo: jax.Array   # (A,) int32
+    zmax_hi: jax.Array   # (A,) int32 z-interval upper key
+    zmax_lo: jax.Array   # (A,) int32
+    mbrs: jax.Array      # (A, 4) float32
+    verts: jax.Array     # (A, V, 2) float32
+    nverts: jax.Array    # (A,) int32
+    kinds: jax.Array     # (A,) int32
+
+    @property
+    def size(self) -> int:
+        return self.ids.shape[0]
+
+
+def delta_table_from_host(glin, added_ids, pad_to: int = 0) -> DeltaTable:
+    """Build the added-set side table from the host index (one upload per
+    publish epoch). ``added_ids`` is any iterable of record ids; rows are
+    sorted by Zmin and padded to ``pad_to`` with inert entries."""
+    ids = np.asarray(sorted(added_ids), np.int64)
+    zmin = glin.zmin[ids] if ids.shape[0] else np.empty(0, np.int64)
+    zmax = glin.zmax[ids] if ids.shape[0] else np.empty(0, np.int64)
+    order = np.argsort(zmin, kind="stable")
+    ids, zmin, zmax = ids[order], zmin[order], zmax[order]
+    gs = glin.gs
+    a = ids.shape[0]
+    m = max(a, int(pad_to))
+    pad = m - a
+    zmin_hi, zmin_lo = split_hilo_np(zmin)
+    zmax_hi, zmax_lo = split_hilo_np(zmax)
+    out_ids = np.full(m, -1, np.int32)
+    out_ids[:a] = ids
+    mbrs = np.full((m, 4), 2e30, np.float32)      # intersects nothing
+    verts = np.full((m, *gs.verts.shape[1:]), 2e30, np.float32)
+    nverts = np.ones(m, np.int32)
+    kinds = np.zeros(m, np.int32)
+    if a:
+        mbrs[:a] = gs.mbrs[ids]
+        verts[:a] = gs.verts[ids]
+        nverts[:a] = gs.nverts[ids]
+        kinds[:a] = gs.kinds[ids]
+
+    def _padk(x, fill):
+        return jnp.asarray(np.concatenate([x, np.full(pad, fill, np.int32)]))
+
+    return DeltaTable(
+        ids=jnp.asarray(out_ids),
+        zmin_hi=_padk(zmin_hi, _INF_HI), zmin_lo=_padk(zmin_lo, 0),
+        zmax_hi=_padk(zmax_hi, _INF_HI), zmax_lo=_padk(zmax_lo, 0),
+        mbrs=jnp.asarray(mbrs), verts=jnp.asarray(verts),
+        nverts=jnp.asarray(nverts), kinds=jnp.asarray(kinds))
+
+
+@partial(jax.jit, static_argnames=("relation", "grid_x0", "grid_y0",
+                                   "grid_cell"))
+def batch_check_added(t: DeltaTable, windows: jax.Array, relation: str,
+                      grid_x0: float, grid_y0: float, grid_cell: float
+                      ) -> jax.Array:
+    """Windows (Q,4) f32 × added-set table -> (Q, A) bool hit matrix.
+
+    The z-interval prune mirrors the index mechanism: a window and a record
+    whose MBRs intersect always have overlapping z-intervals (any shared
+    cell's code lies inside both corner-code intervals), so pruning on
+    ``[zmin_g, zmax_g] ∩ [zmin_q, zmax_q] != ∅`` never loses a hit and needs
+    no piecewise augmentation over the (unpublished) added set."""
+    from .zorder import ZGrid
+
+    rel = _device_relation(relation)
+    grid = ZGrid(grid_x0, grid_y0, grid_cell)
+    probe = rel.probe_window(windows, xp=jnp)
+    (qmin_hi, qmin_lo), (qmax_hi, qmax_lo) = mbr_to_zinterval_hilo(
+        probe, grid, guard=ZGrid.FP32_GUARD_CELLS)
+    lo_ok = ~z_less_hilo(t.zmax_hi[None, :], t.zmax_lo[None, :],
+                         qmin_hi[:, None], qmin_lo[:, None])
+    hi_ok = ~z_less_hilo(qmax_hi[:, None], qmax_lo[:, None],
+                         t.zmin_hi[None, :], t.zmin_lo[None, :])
+    cand = lo_ok & hi_ok & (t.ids[None, :] >= 0)
+    pre = rel.mbr_prefilter(t.mbrs[None, :, :], windows[:, None, :], xp=jnp)
+
+    def exact_for(w):
+        return rel.predicate(w, t.verts, t.nverts, t.kinds, xp=jnp)
+
+    exact = jax.vmap(exact_for)(windows)
+    return cand & pre & exact
 
 
 def input_specs_like(num_queries: int):

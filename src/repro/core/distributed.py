@@ -207,6 +207,8 @@ def glin_input_specs(num_records: int, num_queries: int, mesh: Mesh,
         keys_lo=jax.ShapeDtypeStruct((1,), i32),
         recs=jax.ShapeDtypeStruct((1,), i32),
         rec_leaf=jax.ShapeDtypeStruct((1,), i32),
+        slot_lmbr=jax.ShapeDtypeStruct((1, 4), f32),
+        slot_rmbr=jax.ShapeDtypeStruct((1, 4), f32),
         leaf_start=jax.ShapeDtypeStruct((num_leaves + 1,), i32),
         leaf_dlo_hi=jax.ShapeDtypeStruct((num_leaves + 1,), i32),
         leaf_dlo_lo=jax.ShapeDtypeStruct((num_leaves + 1,), i32),

@@ -54,10 +54,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import geometry as geom
 from .datasets import GeometrySet
-from .device import (GLINSnapshot, batch_query, batch_query_bounds,
+from .device import (DeltaTable, GLINSnapshot, batch_check_added, batch_query,
+                     batch_query_bounds, delta_table_from_host,
                      snapshot_from_host)
 from .index import GLIN, GLINConfig, QueryStats
+from .index import initial_knn_radius
 from .index import knn as _host_knn
 from .relations import get_relation
 
@@ -74,7 +77,20 @@ class EngineConfig:
                                        # for batches this big, else host
     initial_cap: int = 4096           # device candidate capacity per query
     max_cap: int = 1 << 20            # give up (OverflowError) past this
-    exact_budget: int = 0             # two-stage refinement budget (0 = off)
+    exact_budget: int = 256           # two-stage refinement budget (0 = off):
+                                      # stage 1 masks + compacts, stage 2
+                                      # exact-checks at most this many
+                                      # candidates per query
+    compaction: Optional[str] = None  # stage-1 impl: "pallas" (fused kernel),
+                                      # "scan" (jnp reference), "sort"
+                                      # (legacy argsort); None = pallas on
+                                      # TPU, scan elsewhere
+    delta_device_min: int = 64        # added-set size at which device+delta
+                                      # patching moves from the host loop to
+                                      # the device-resident DeltaTable
+    knn_device_min_batch: int = 16    # knn point batches this big run as
+                                      # batched dwithin probes at doubling
+                                      # radii; smaller ones loop on the host
     pad_quantum: int = 4096           # bucket-pad record/slot array lengths so
                                       # insert-driven growth does not change
                                       # jitted shapes (0 disables padding)
@@ -182,6 +198,8 @@ class SpatialIndex:
         # delta vs the last published snapshot (LSM-style patch-not-rebuild)
         self._added: Set[int] = set()   # record ids inserted since publish
         self._tombstones: Set[int] = set()  # published records deleted since
+        self._dtable: Optional[DeltaTable] = None  # device added-set index
+        self._dtable_epoch = -1
         self._payload = None
         self._payload_key: Optional[Tuple[int, int]] = None  # (real rows, V)
         # adaptive candidate capacity: remembered across queries so the
@@ -271,6 +289,7 @@ class SpatialIndex:
             pad = self._padded(n) - n
             if pad:
                 big = np.full(pad, (1 << 30) - 1, np.int32)
+                far = jnp.full((pad, 4), 2e30, jnp.float32)  # hits nothing
                 snap = dataclasses.replace(
                     snap,
                     keys_hi=jnp.concatenate([snap.keys_hi, jnp.asarray(big)]),
@@ -280,6 +299,8 @@ class SpatialIndex:
                     rec_leaf=jnp.concatenate(
                         [snap.rec_leaf,
                          jnp.full(pad, snap.num_leaves - 1, jnp.int32)]),
+                    slot_lmbr=jnp.concatenate([snap.slot_lmbr, far]),
+                    slot_rmbr=jnp.concatenate([snap.slot_rmbr, far]),
                 )
             self._snapshot = snap
             self._snapshot_epoch = self._epoch
@@ -287,6 +308,8 @@ class SpatialIndex:
             self._publishes += 1
             self._added.clear()
             self._tombstones.clear()
+            self._dtable = None
+            self._dtable_epoch = -1
         return self._snapshot
 
     def _published_snapshot(self) -> GLINSnapshot:
@@ -327,6 +350,26 @@ class SpatialIndex:
             self._payload_key = (n, width)
         return self._payload
 
+    def _compaction(self, base_relation: str) -> str:
+        """Stage-1 refinement implementation for ``batch_query``: the fused
+        Pallas kernel on TPU, the jnp reference elsewhere (interpret-mode
+        Pallas is a correctness tool, not a CPU execution path), and the jnp
+        reference whenever the relation's MBR prefilter has no static kernel
+        shape (``prefilter_kind == "custom"``)."""
+        mode = self.config.compaction
+        if mode is None:
+            mode = "pallas" if jax.default_backend() == "tpu" else "scan"
+        if mode == "pallas":
+            from repro.kernels.refine import MAX_COMPACT_BUDGET
+
+            if (get_relation(base_relation).prefilter_kind == "custom"
+                    or self.config.exact_budget > MAX_COMPACT_BUDGET):
+                # custom MBR prefilters have no static kernel shape, and
+                # budgets past the VMEM bound cannot host the one-hot
+                # scatter block — both take the jnp reference
+                mode = "scan"
+        return mode
+
     def _check_augmentable(self, relation: str, base) -> None:
         """Fail loudly when a relation needs the piecewise augmentation and
         the index was built without it — the device ``_augment()`` would
@@ -342,6 +385,13 @@ class SpatialIndex:
             batch = QueryBatch.window(batch, relation or "intersects")
         cfg = self.config
         if batch.kind == "knn":
+            q = len(batch)
+            if q >= cfg.knn_device_min_batch and self.glin.pw is not None:
+                return QueryPlan(
+                    "device", "knn", None, None, False,
+                    f"knn as batched dwithin probes at doubling radii "
+                    f"({q} points >= knn_device_min_batch="
+                    f"{cfg.knn_device_min_batch})")
             return QueryPlan("host", "knn", None, None, False,
                              "knn executes on the host index")
         rel = get_relation(batch.relation)
@@ -443,12 +493,12 @@ class SpatialIndex:
         wj = jnp.asarray(np.atleast_2d(np.asarray(windows)).astype(np.float32))
         start, end = batch_query_bounds(snap, wj, base)
         bounds = jnp.stack([start, end], axis=1).astype(jnp.int32)
-        slot_mbrs = jnp.asarray(
-            self.glin.gs.mbrs[np.asarray(snap.recs)].astype(np.float32))
         # MBR-level counting uses the padded probe window so dwithin-style
-        # relations count the candidates their refine step will actually see
+        # relations count the candidates their refine step will actually see;
+        # the slot-aligned record-MBR table lives on the snapshot (no per-call
+        # host gather + upload)
         counts = ops.refine_count(base_rel.probe_window(wj, xp=jnp), bounds,
-                                  slot_mbrs,
+                                  snap.slot_rmbr,
                                   use_pallas=jax.default_backend() == "tpu")
         return np.asarray(counts)
 
@@ -473,11 +523,12 @@ class SpatialIndex:
         verts, nv, kd, mb = self._device_payload(self._snapshot_recs)
         wj = jnp.asarray(batch.windows.astype(np.float32))
         cap, budget = self._cap, cfg.exact_budget
+        compaction = self._compaction(rel.base_name())
         while True:
             use_budget = budget if 0 < budget < cap else 0
             hits, counts = batch_query(
                 snap, wj, verts, nv, kd, mb, relation=rel.base_name(),
-                cap=cap, exact_budget=use_budget)
+                cap=cap, exact_budget=use_budget, compaction=compaction)
             counts = np.asarray(counts)
             if (counts >= 0).all():
                 self._cap = cap
@@ -511,38 +562,70 @@ class SpatialIndex:
             ids = [np.setdiff1d(live, r) for r in ids]
         return ids
 
+    def _delta_table(self) -> DeltaTable:
+        """The device-resident added-set side table at the current epoch,
+        rebuilt lazily after a write burst (one upload per epoch served, not
+        one host round-trip per query batch). Rows are padded to a power-of-
+        two bucket so the jitted check compiles per bucket, not per insert."""
+        if self._dtable is None or self._dtable_epoch != self._epoch:
+            a = len(self._added)
+            pad = max(self.config.delta_device_min,
+                      1 << max(a - 1, 0).bit_length())
+            self._dtable = delta_table_from_host(self.glin, self._added,
+                                                 pad_to=pad)
+            self._dtable_epoch = self._epoch
+        return self._dtable
+
     def _patch_delta(self, batch: QueryBatch, ids: List[np.ndarray]
                      ) -> List[np.ndarray]:
         """Restore exactness of snapshot results at the current epoch: mask
-        out tombstoned records and brute-force check the added set (fp32, to
-        match the device precision contract) against the *base* relation —
-        complement finishing happens after, on top of the patched ids."""
+        out tombstoned records and check the added set (fp32, to match the
+        device precision contract) against the *base* relation — complement
+        finishing happens after, on top of the patched ids.
+
+        Small added sets are brute-force checked in a host loop; past
+        ``EngineConfig.delta_device_min`` the check runs on device through
+        the Zmin-sorted :class:`DeltaTable` (one vectorized (Q × A) pass,
+        no per-batch host round-trip)."""
         if not (self._tombstones or self._added):
             return ids
         gs = self.glin.gs
         base = get_relation(batch.relation).base_name()
-        pred = get_relation(base).predicate
         tombs = (np.fromiter(self._tombstones, np.int64,
                              len(self._tombstones))
                  if self._tombstones else None)
         added = np.asarray(sorted(self._added), np.int64)
-        if added.shape[0]:
+        added_hits: Optional[List[np.ndarray]] = None
+        if added.shape[0] >= self.config.delta_device_min:
+            t = self._delta_table()
+            snap = self._published_snapshot()
+            wj = jnp.asarray(batch.windows.astype(np.float32))
+            ok = np.asarray(batch_check_added(
+                t, wj, base, snap.grid_x0, snap.grid_y0, snap.grid_cell))
+            tbl_ids = np.asarray(t.ids, np.int64)
+            added_hits = [np.sort(tbl_ids[row]) for row in ok]
+        elif added.shape[0]:
+            pred = get_relation(base).predicate
             av = gs.verts[added].astype(np.float32)
             an, ak = gs.nverts[added], gs.kinds[added]
+            added_hits = []
+            for qi in range(len(ids)):
+                w32 = batch.windows[qi].astype(np.float32)
+                added_hits.append(added[np.asarray(pred(w32, av, an, ak))])
         out: List[np.ndarray] = []
         for qi, h in enumerate(ids):
             if tombs is not None:
                 h = h[~np.isin(h, tombs)]
-            if added.shape[0]:
-                w32 = batch.windows[qi].astype(np.float32)
-                ok = np.asarray(pred(w32, av, an, ak))
+            if added_hits is not None:
                 # added ids all postdate (exceed) every snapshot id, so the
                 # concatenation stays ascending
-                h = np.concatenate([h, added[ok]])
+                h = np.concatenate([h, added_hits[qi]])
             out.append(h)
         return out
 
     def _run_knn(self, batch: QueryBatch, plan: QueryPlan) -> QueryResult:
+        if plan.backend == "device":
+            return self._run_knn_device(batch, plan)
         ids, dists = [], []
         for p in batch.points:
             i, d = _host_knn(self.glin, p, batch.k)
@@ -550,3 +633,66 @@ class SpatialIndex:
             dists.append(np.asarray(d))
         return QueryResult(ids=ids, plan=plan, epoch=self._epoch,
                            distances=dists)
+
+    def _run_knn_device(self, batch: QueryBatch, plan: QueryPlan
+                        ) -> QueryResult:
+        """knn through ``dwithin`` (cf. LISA): every point becomes a
+        degenerate window probed with ``dwithin:<r>`` at doubling radii —
+        ONE batched facade query per radius rung, so the planner takes the
+        device path instead of Q sequential host walks. A point is done once
+        it has >= k candidates whose k-th exact distance fits inside r (the
+        dwithin candidate set is exactly {distance <= r}, so no closer
+        geometry can be missing). Radii are snapped to powers of two: each
+        rung compiles once and is shared by every knn call."""
+        gs = self.glin.gs
+        pts = batch.points
+        q, k = len(batch), batch.k
+        wins = np.concatenate([pts, pts], axis=1)       # degenerate windows
+        r = initial_knn_radius(self.glin, k)
+        r = float(2.0 ** np.ceil(np.log2(max(r, 1e-9))))
+        done = np.zeros(q, bool)
+        out_ids: List[Optional[np.ndarray]] = [None] * q
+        out_d: List[Optional[np.ndarray]] = [None] * q
+        for _ in range(64):
+            # only the still-undone points ride the next rung: finished
+            # points must not re-probe at (exponentially) wider radii, which
+            # would also inflate the shared adaptive candidate cap. The
+            # shrinking batch is padded to a power-of-two bucket (repeating
+            # the last window) so each (bucket, radius) pair compiles once,
+            # not each distinct todo-count
+            todo = np.nonzero(~done)[0]
+            sub = wins[todo]
+            bucket = 1 << max(len(sub) - 1, 0).bit_length()
+            if bucket > len(sub):
+                sub = np.concatenate(
+                    [sub, np.repeat(sub[-1:], bucket - len(sub), axis=0)])
+            try:
+                res = self.query(
+                    QueryBatch.window(sub, f"dwithin:{r:.17g}"))
+            except OverflowError:
+                # a straggler's radius outgrew max_cap: the host loop has no
+                # cap — finish the stragglers there instead of failing the
+                # whole batch
+                for i in todo:
+                    hi, hd = _host_knn(self.glin, pts[int(i)], k)
+                    out_ids[int(i)] = np.asarray(hi, np.int64)
+                    out_d[int(i)] = np.asarray(hd)
+                return QueryResult(ids=out_ids, plan=plan, epoch=self._epoch,
+                                   distances=out_d)
+            for ti, i in enumerate(todo):
+                cand = res[ti]
+                if cand.shape[0] < k:
+                    continue
+                d = np.sqrt(geom.rect_geom_sqdist(
+                    wins[i], gs.verts[cand], gs.nverts[cand], gs.kinds[cand]))
+                order = np.lexsort((cand, d))
+                if d[order[k - 1]] <= r:
+                    sel = order[:k]
+                    out_ids[int(i)] = cand[sel].astype(np.int64)
+                    out_d[int(i)] = d[sel]
+                    done[i] = True
+            if done.all():
+                return QueryResult(ids=out_ids, plan=plan, epoch=self._epoch,
+                                   distances=out_d)
+            r *= 2.0
+        raise RuntimeError("knn did not converge")

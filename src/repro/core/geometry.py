@@ -42,6 +42,7 @@ __all__ = [
     "rect_touches_geoms",
     "rect_crosses_geoms",
     "rect_dwithin_geoms",
+    "rect_geom_sqdist",
     "geoms_cover_rect",
 ]
 
@@ -406,9 +407,10 @@ def rect_crosses_geoms(rect, verts, nverts, kinds, xp=np):
 # segment endpoint (point-to-rect) or at a rect corner (point-to-segment),
 # so the vectorized minimum over both families is exact.
 # ---------------------------------------------------------------------------
-def rect_dwithin_geoms(rect, verts, nverts, kinds, dist, xp=np):
-    """(4,), (N,V,2), (N,), (N,), float -> (N,) bool: min Euclidean distance
-    between the closed window and the geometry is at most ``dist``."""
+def rect_geom_sqdist(rect, verts, nverts, kinds, xp=np):
+    """(4,), (N,V,2), (N,), (N,) -> (N,) squared min Euclidean distance
+    between the closed window and each geometry (0 where they intersect).
+    Shared by ``rect_dwithin_geoms`` and the exact-distance knn ranking."""
     inter = rect_intersects_geoms(rect, verts, nverts, kinds, xp=xp)
 
     x, y = verts[..., 0], verts[..., 1]
@@ -439,4 +441,11 @@ def rect_dwithin_geoms(rect, verts, nverts, kinds, dist, xp=np):
     sd2 = xp.min(xp.where(valid[:, :, None], sd2, big), axis=(1, 2))
 
     d2 = xp.minimum(vd2, sd2)
-    return inter | (d2 <= xp.asarray(float(dist) ** 2, d2.dtype))
+    return xp.where(inter, xp.asarray(0.0, d2.dtype), d2)
+
+
+def rect_dwithin_geoms(rect, verts, nverts, kinds, dist, xp=np):
+    """(4,), (N,V,2), (N,), (N,), float -> (N,) bool: min Euclidean distance
+    between the closed window and the geometry is at most ``dist``."""
+    d2 = rect_geom_sqdist(rect, verts, nverts, kinds, xp=xp)
+    return d2 <= xp.asarray(float(dist) ** 2, d2.dtype)

@@ -331,31 +331,44 @@ class GLIN:
         return keys, recs, starts, mbrs
 
 
+def initial_knn_radius(glin: GLIN, k: int) -> float:
+    """First search radius from global density: expect ~k hits inside it."""
+    gs = glin.gs
+    n = max(glin.num_records, 1)
+    span_x = float(gs.mbrs[:, 2].max() - gs.mbrs[:, 0].min()) or 1.0
+    span_y = float(gs.mbrs[:, 3].max() - gs.mbrs[:, 1].min()) or 1.0
+    return max(1e-9, float(np.sqrt(span_x * span_y * k / n)))
+
+
 def knn(glin: GLIN, point, k: int):
     """K-nearest-neighbour query — the paper's stated future work (§XI).
 
-    Expanding-window search on the learned index: query an Intersects window
-    around the point, growing it geometrically until the k-th candidate's
-    point-to-MBR distance fits inside the window radius (which guarantees no
-    closer geometry can be outside). Returns (ids, distances) sorted by
-    distance, ties broken by id.
+    knn through ``dwithin`` (cf. LISA): the point becomes a degenerate window
+    probed with ``dwithin:<r>`` at doubling radii. The candidate set at
+    radius r is exactly {geometries with Euclidean distance <= r}, so once k
+    candidates exist and the k-th exact distance fits inside r, no closer
+    geometry can be missing. Candidates are ranked by exact point-to-geometry
+    distance (``geometry.rect_geom_sqdist``; 0 inside a polygon), ties broken
+    by record id. Indexes built without the piecewise function fall back to
+    an Intersects probe over the square window of half-side r — a superset of
+    the dwithin candidates, so the same termination rule holds.
+
+    Returns (ids, distances) sorted by (distance, id).
     """
     gs = glin.gs
     px, py = float(point[0]), float(point[1])
-    n = max(glin.num_records, 1)
-    # initial radius from global density: expect ~k hits in the first window
-    span_x = float(gs.mbrs[:, 2].max() - gs.mbrs[:, 0].min()) or 1.0
-    span_y = float(gs.mbrs[:, 3].max() - gs.mbrs[:, 1].min()) or 1.0
-    r = max(1e-9, float(np.sqrt(span_x * span_y * k / n)))
+    rect = np.array([px, py, px, py])
+    r = initial_knn_radius(glin, k)
 
     for _ in range(64):
-        window = np.array([px - r, py - r, px + r, py + r])
-        cand = glin.query(window, "intersects")
+        if glin.pw is not None:
+            cand = glin.query(rect, f"dwithin:{r:.17g}")
+        else:
+            cand = glin.query(np.array([px - r, py - r, px + r, py + r]),
+                              "intersects")
         if cand.shape[0] >= k:
-            m = gs.mbrs[cand]
-            dx = np.maximum(np.maximum(m[:, 0] - px, px - m[:, 2]), 0.0)
-            dy = np.maximum(np.maximum(m[:, 1] - py, py - m[:, 3]), 0.0)
-            d = np.hypot(dx, dy)
+            d = np.sqrt(geom.rect_geom_sqdist(
+                rect, gs.verts[cand], gs.nverts[cand], gs.kinds[cand]))
             order = np.lexsort((cand, d))
             kth = d[order[k - 1]]
             if kth <= r:

@@ -70,6 +70,13 @@ class Relation:
     device_native: bool = True    # batched device path evaluates it directly
     complement_of: Optional[str] = None
     probe_pad: float = 0.0        # widen the probe / leaf-prune window
+    prefilter_kind: str = "intersects"  # static shape of mbr_prefilter for
+                                  # fused kernels: "intersects" (record MBR
+                                  # meets the PROBE window — covers dwithin,
+                                  # whose prefilter pads by the same amount),
+                                  # "contains" (record MBR covers the raw
+                                  # window, e.g. within), or "custom"
+                                  # (kernel unusable; jnp prefilter only)
     parametric: bool = False      # template: requires "name:<param>" lookup
     bind: Optional[Callable[[float, str], "Relation"]] = None
     doc: str = ""
@@ -165,6 +172,9 @@ def check_registry() -> Tuple[str, ...]:
             raise AssertionError(f"{name!r}: parametric without bind")
         if rel.probe_pad < 0:
             raise AssertionError(f"{name!r}: negative probe_pad")
+        if rel.prefilter_kind not in ("intersects", "contains", "custom"):
+            raise AssertionError(f"{name!r}: unknown prefilter_kind "
+                                 f"{rel.prefilter_kind!r}")
     for name, rel in _BOUND.items():
         family = name.partition(":")[0]
         if family not in RELATIONS or not RELATIONS[family].parametric:
@@ -218,6 +228,7 @@ register_relation(Relation(
     predicate=geom.geoms_cover_rect,
     augment=True,   # covering geometries start before W: Zmin_GM <= Zmin_Q
     mbr_prefilter=_pf_rec_mbr_covers_window,
+    prefilter_kind="contains",
     doc="W lies entirely inside G (window within geometry; exact for simple "
         "polygons, convex or concave).",
 ))

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention_pallas
 from .morton import LANES, morton_encode_pallas
-from .refine import refine_count_pallas, refine_mask_pallas
+from .refine import (refine_compact_pallas, refine_count_pallas,
+                     refine_mask_pallas)
 from .ssd_scan import ssd_scan_pallas
 
 
@@ -43,17 +44,11 @@ def morton_encode(qx: jax.Array, qy: jax.Array, use_pallas: bool = True):
 @partial(jax.jit, static_argnames=("use_pallas",))
 def refine_mask(windows: jax.Array, bounds: jax.Array, mbrs: jax.Array,
                 use_pallas: bool = True):
-    """(Q,4) f32, (Q,2) i32, (N,4) f32 -> (Q,N) int8 candidate mask."""
+    """(Q,4) f32, (Q,2) i32, (N,4) f32 -> (Q,N) int8 candidate mask.
+    The kernels pad internally — any Q and N work."""
     if not use_pallas:
         return ref.refine_mask_ref(windows, bounds, mbrs)
-    q, n = windows.shape[0], mbrs.shape[0]
-    bq, bn = 8, 512
-    qp, np_ = (-q) % bq, (-n) % bn
-    w = jnp.pad(windows, ((0, qp), (0, 0)))
-    b = jnp.pad(bounds, ((0, qp), (0, 0)))
-    m = jnp.pad(mbrs, ((0, np_), (0, 0)), constant_values=2e30)  # never hit
-    out = refine_mask_pallas(w, b, m, bq=bq, bn=bn, interpret=not _on_tpu())
-    return out[:q, :n]
+    return refine_mask_pallas(windows, bounds, mbrs, interpret=not _on_tpu())
 
 
 @partial(jax.jit, static_argnames=("use_pallas",))
@@ -61,14 +56,23 @@ def refine_count(windows: jax.Array, bounds: jax.Array, mbrs: jax.Array,
                  use_pallas: bool = True):
     if not use_pallas:
         return ref.refine_count_ref(windows, bounds, mbrs)
-    q, n = windows.shape[0], mbrs.shape[0]
-    bq, bn = 8, 512
-    qp, np_ = (-q) % bq, (-n) % bn
-    w = jnp.pad(windows, ((0, qp), (0, 0)))
-    b = jnp.pad(bounds, ((0, qp), (0, 0)))
-    m = jnp.pad(mbrs, ((0, np_), (0, 0)), constant_values=2e30)
-    out = refine_count_pallas(w, b, m, bq=bq, bn=bn, interpret=not _on_tpu())
-    return out[:q]
+    return refine_count_pallas(windows, bounds, mbrs, interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("budget", "prefilter", "use_pallas"))
+def refine_compact(windows: jax.Array, bounds: jax.Array,
+                   leaf_mbrs: jax.Array, rec_mbrs: jax.Array, *,
+                   budget: int, prefilter: str = "intersects",
+                   use_pallas: bool = True):
+    """Fused mask + compaction: (Q,4) probe windows, (Q,2) i32 slot runs,
+    slot-aligned (N,4) leaf/record MBR tables -> (slots (Q, budget) i32
+    [-1 padded], counts (Q,) i32 total survivors; ``counts > budget``
+    signals truncation)."""
+    if not use_pallas:
+        return ref.refine_compact_ref(windows, bounds, leaf_mbrs, rec_mbrs,
+                                      budget, prefilter)
+    return refine_compact_pallas(windows, bounds, leaf_mbrs, rec_mbrs,
+                                 budget, prefilter, interpret=not _on_tpu())
 
 
 # ------------------------------------------------------------- attention ----

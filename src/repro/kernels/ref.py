@@ -33,6 +33,48 @@ def refine_count_ref(windows: jax.Array, bounds: jax.Array, mbrs: jax.Array):
     return refine_mask_ref(windows, bounds, mbrs).astype(jnp.int32).sum(axis=1)
 
 
+def compact_mask_ref(slot_mask: jax.Array, budget: int):
+    """(Q, N) bool -> (slots (Q, budget) int32 [-1 padded, ascending slot
+    order], counts (Q,) int32 total survivors). Pure-jnp oracle of the fused
+    kernel's compaction step: a stable cumsum + scatter, no sort."""
+    q, n = slot_mask.shape
+    m32 = slot_mask.astype(jnp.int32)
+    excl = jnp.cumsum(m32, axis=1) - m32
+    pos = jnp.where(slot_mask & (excl < budget), excl, budget)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, n), 1)
+    slots = jnp.full((q, budget), -1, jnp.int32).at[
+        jnp.arange(q, dtype=jnp.int32)[:, None], pos
+    ].set(cols, mode="drop")
+    return slots, m32.sum(axis=1)
+
+
+def refine_compact_ref(windows: jax.Array, bounds: jax.Array,
+                       leaf_mbrs: jax.Array, rec_mbrs: jax.Array,
+                       budget: int, prefilter: str = "intersects"):
+    """Oracle of ``refine_compact_pallas``: fused interval + leaf-MBR +
+    record-MBR mask, then stable compaction to (Q, budget) slots."""
+    w = windows[:, None, :]
+    lm = leaf_mbrs[None, :, :]
+    rm = rec_mbrs[None, :, :]
+    leaf_ok = (
+        (w[..., 0] <= lm[..., 2]) & (lm[..., 0] <= w[..., 2])
+        & (w[..., 1] <= lm[..., 3]) & (lm[..., 1] <= w[..., 3])
+    )
+    if prefilter == "contains":
+        rec_ok = (
+            (rm[..., 0] <= w[..., 0]) & (rm[..., 1] <= w[..., 1])
+            & (w[..., 2] <= rm[..., 2]) & (w[..., 3] <= rm[..., 3])
+        )
+    else:
+        rec_ok = (
+            (w[..., 0] <= rm[..., 2]) & (rm[..., 0] <= w[..., 2])
+            & (w[..., 1] <= rm[..., 3]) & (rm[..., 1] <= w[..., 3])
+        )
+    slot = jnp.arange(rec_mbrs.shape[0], dtype=jnp.int32)[None, :]
+    in_run = (slot >= bounds[:, 0:1]) & (slot < bounds[:, 1:2])
+    return compact_mask_ref(leaf_ok & rec_ok & in_run, budget)
+
+
 # ------------------------------------------------------------- attention ----
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   window: int = 0) -> jax.Array:

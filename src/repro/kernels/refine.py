@@ -1,16 +1,27 @@
-"""Pallas TPU kernel: tiled GLIN refinement (candidate masking + counting).
+"""Pallas TPU kernels: tiled GLIN refinement (mask / count / fused compact).
 
-The paper's profile (§IX-D) shows refinement dominates query time. This
-kernel evaluates the (query-window × record) MBR-intersection matrix in VMEM
-tiles, fused with the Z-interval slot test (``start <= slot < end``) and the
-leaf-MBR skip, so a (BQ × BN) tile of candidates is disposed of per grid step
-without materializing gathers in HBM.
+The paper's profile (§IX-D) shows refinement dominates query time. These
+kernels evaluate the (query-window × record) MBR tests in VMEM tiles, fused
+with the Z-interval slot test (``start <= slot < end``), so a (BQ × BN) tile
+of candidates is disposed of per grid step without materializing gathers in
+HBM.
 
-Two entry points:
+Three entry points (all pad internally — arbitrary Q and N just work):
 
-* ``refine_mask_pallas``  — full (Q, N) int8 mask (drives compaction).
-* ``refine_count_pallas`` — (Q,) match counts via grid-axis accumulation
-  (selectivity estimation / Table III instrumentation at device speed).
+* ``refine_mask_pallas``    — full (Q, N) int8 mask.
+* ``refine_count_pallas``   — (Q,) int32 match counts via grid-axis
+  accumulation (selectivity estimation at device speed).
+* ``refine_compact_pallas`` — THE refinement front-end: fused interval +
+  leaf-MBR + record-MBR mask with in-VMEM prefix-sum compaction. Emits the
+  per-query compacted candidate slots ``(Q, budget)`` plus survivor counts,
+  replacing both the dense ``(Q, cap)`` mask materialization and the
+  ``O(Q·cap·log cap)`` argsort compaction in ``core.device.batch_query``:
+  only ``Q·budget`` slot ids ever reach HBM, and the expensive exact-shape
+  vertex gathers downstream shrink from ``(Q·cap·V)`` to ``(Q·budget·V)``.
+
+``refine_cost`` is the analytic bytes/flops model of each kernel (used both
+as the ``pl.CostEstimate`` handed to the compiler and by
+``benchmarks/roofline_report.py --kernels``).
 """
 from __future__ import annotations
 
@@ -22,6 +33,13 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BQ = 8
 DEFAULT_BN = 512
+COMPACT_BN = 256      # smaller record tiles: the one-hot scatter tensor is
+                      # (BQ, BN, budget) in VMEM
+MAX_COMPACT_BUDGET = 1024   # (bq=8, bn=256, budget=1024) int32 = 8 MB — the
+                            # scatter tensor must fit ~16 MB TPU VMEM next to
+                            # the streamed tiles; larger budgets must take
+                            # the jnp "scan" path (no VMEM constraint)
+_NEVER = 2e30         # padding MBR coordinate: intersects nothing
 
 
 def _tile_mask(win_ref, mbr_ref, bounds_ref, nb, bn):
@@ -57,9 +75,97 @@ def _count_kernel(win_ref, bounds_ref, mbr_ref, out_ref, *, bn):
     out_ref[...] += partial_counts
 
 
+def _compact_tile_mask(win_ref, lmbr_ref, rmbr_ref, bounds_ref, nb, bn,
+                       prefilter):
+    """Fused interval + leaf-MBR + record-MBR tests -> (BQ, BN) bool.
+
+    ``win_ref`` holds the PROBE window (already padded for dwithin-style
+    relations); ``prefilter`` selects the record-MBR test shape:
+    "intersects" (record MBR meets the probe window) or "contains" (record
+    MBR covers the window — the ``within`` prefilter)."""
+    w = win_ref[...]          # (BQ, 4) probe windows
+    lm = lmbr_ref[...]        # (BN, 4) per-slot leaf MBRs
+    rm = rmbr_ref[...]        # (BN, 4) per-slot record MBRs
+    b = bounds_ref[...]       # (BQ, 2) int32 [start, end)
+    leaf_ok = (
+        (w[:, None, 0] <= lm[None, :, 2])
+        & (lm[None, :, 0] <= w[:, None, 2])
+        & (w[:, None, 1] <= lm[None, :, 3])
+        & (lm[None, :, 1] <= w[:, None, 3])
+    )
+    if prefilter == "contains":
+        rec_ok = (
+            (rm[None, :, 0] <= w[:, None, 0])
+            & (rm[None, :, 1] <= w[:, None, 1])
+            & (w[:, None, 2] <= rm[None, :, 2])
+            & (w[:, None, 3] <= rm[None, :, 3])
+        )
+    else:
+        rec_ok = (
+            (w[:, None, 0] <= rm[None, :, 2])
+            & (rm[None, :, 0] <= w[:, None, 2])
+            & (w[:, None, 1] <= rm[None, :, 3])
+            & (rm[None, :, 1] <= w[:, None, 3])
+        )
+    slot = nb * bn + jax.lax.broadcasted_iota(jnp.int32, leaf_ok.shape, 1)
+    in_run = (slot >= b[:, 0:1]) & (slot < b[:, 1:2])
+    return leaf_ok & rec_ok & in_run
+
+
+def _compact_kernel(win_ref, bounds_ref, lmbr_ref, rmbr_ref,
+                    slots_ref, count_ref, *, bn, budget, prefilter):
+    """Grid step (i, j): mask the (BQ, BN) tile, then prefix-sum compact the
+    survivors into the revisited (BQ, budget) output block.
+
+    ``count_ref`` carries the running per-query survivor count across the
+    record axis; a survivor's output column is that running count plus its
+    exclusive within-tile prefix sum. The scatter itself is a one-hot
+    reduction over the tile (TPU vector units have no scatter): survivors
+    past ``budget`` only advance the count — overflow is ``count > budget``,
+    signalled to the caller, never silent truncation."""
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        slots_ref[...] = jnp.full_like(slots_ref, -1)
+        count_ref[...] = jnp.zeros_like(count_ref)
+
+    mask = _compact_tile_mask(win_ref, lmbr_ref, rmbr_ref, bounds_ref, nb, bn,
+                              prefilter)
+    m32 = mask.astype(jnp.int32)
+    base = count_ref[...]                            # (BQ,)
+    excl = jnp.cumsum(m32, axis=1) - m32             # exclusive prefix
+    pos = base[:, None] + excl                       # output column per slot
+    sel = mask & (pos < budget)
+    slot = nb * bn + jax.lax.broadcasted_iota(jnp.int32, mask.shape, 1)
+    # one-hot scatter: out[q, k] = slot of the survivor whose pos == k
+    cols = jax.lax.broadcasted_iota(jnp.int32, (mask.shape[0], bn, budget), 2)
+    hot = (pos[:, :, None] == cols) & sel[:, :, None]
+    written = (hot * (slot + 1)[:, :, None]).sum(axis=1)   # 0 where no write
+    slots_ref[...] = jnp.where(written > 0, written - 1, slots_ref[...])
+    count_ref[...] = base + m32.sum(axis=1)
+
+
 def _grids(q, n, bq, bn):
-    assert q % bq == 0 and n % bn == 0, (q, n, bq, bn)
-    return (q // bq, n // bn)
+    """Grid over internally padded operand shapes (no divisibility demands)."""
+    return (pl.cdiv(q, bq), pl.cdiv(n, bn))
+
+
+def _pad_inputs(windows, bounds, bq, bn, *mbr_tables):
+    """Pad Q to a multiple of bq and N to a multiple of bn. Padded MBR rows
+    sit at ``_NEVER`` (intersect nothing, contain nothing); padded query rows
+    get empty [0, 0) runs. Callers slice outputs back to (q, n)."""
+    q, n = windows.shape[0], mbr_tables[0].shape[0]
+    qp, np_ = (-q) % bq, (-n) % bn
+    if qp:
+        windows = jnp.pad(windows, ((0, qp), (0, 0)))
+        bounds = jnp.pad(bounds, ((0, qp), (0, 0)))
+    padded = []
+    for m in mbr_tables:
+        if np_:
+            m = jnp.pad(m, ((0, np_), (0, 0)), constant_values=_NEVER)
+        padded.append(m)
+    return windows, bounds, padded
 
 
 def refine_mask_pallas(windows: jax.Array, bounds: jax.Array, mbrs: jax.Array,
@@ -67,19 +173,22 @@ def refine_mask_pallas(windows: jax.Array, bounds: jax.Array, mbrs: jax.Array,
                        interpret: bool = False) -> jax.Array:
     """windows (Q,4) f32, bounds (Q,2) i32, mbrs (N,4) f32 -> (Q,N) int8."""
     q, n = windows.shape[0], mbrs.shape[0]
-    grid = _grids(q, n, bq, bn)
-    return pl.pallas_call(
+    windows, bounds, (mbrs,) = _pad_inputs(windows, bounds, bq, bn, mbrs)
+    qp, np_ = windows.shape[0], mbrs.shape[0]
+    out = pl.pallas_call(
         partial(_mask_kernel, bn=bn),
-        grid=grid,
+        grid=_grids(qp, np_, bq, bn),
         in_specs=[
             pl.BlockSpec((bq, 4), lambda i, j: (i, 0)),
             pl.BlockSpec((bq, 2), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, 4), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((q, n), jnp.int8),
+        out_shape=jax.ShapeDtypeStruct((qp, np_), jnp.int8),
+        cost_estimate=_cost_estimate("mask", qp, np_),
         interpret=interpret,
     )(windows, bounds, mbrs)
+    return out[:q, :n]
 
 
 def refine_count_pallas(windows: jax.Array, bounds: jax.Array, mbrs: jax.Array,
@@ -87,17 +196,117 @@ def refine_count_pallas(windows: jax.Array, bounds: jax.Array, mbrs: jax.Array,
                         interpret: bool = False) -> jax.Array:
     """Same inputs -> (Q,) int32 match counts (reduction over the N grid axis,
     accumulated in the revisited output block)."""
-    q, n = windows.shape[0], mbrs.shape[0]
-    grid = _grids(q, n, bq, bn)
-    return pl.pallas_call(
+    q = windows.shape[0]
+    windows, bounds, (mbrs,) = _pad_inputs(windows, bounds, bq, bn, mbrs)
+    qp, np_ = windows.shape[0], mbrs.shape[0]
+    out = pl.pallas_call(
         partial(_count_kernel, bn=bn),
-        grid=grid,
+        grid=_grids(qp, np_, bq, bn),
         in_specs=[
             pl.BlockSpec((bq, 4), lambda i, j: (i, 0)),
             pl.BlockSpec((bq, 2), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, 4), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((qp,), jnp.int32),
+        cost_estimate=_cost_estimate("count", qp, np_),
         interpret=interpret,
     )(windows, bounds, mbrs)
+    return out[:q]
+
+
+def refine_compact_pallas(windows: jax.Array, bounds: jax.Array,
+                          leaf_mbrs: jax.Array, rec_mbrs: jax.Array,
+                          budget: int, prefilter: str = "intersects",
+                          bq: int = DEFAULT_BQ, bn: int = COMPACT_BN,
+                          interpret: bool = False):
+    """Fused mask + in-VMEM compaction.
+
+    windows (Q,4) f32 PROBE windows, bounds (Q,2) i32 slot runs,
+    leaf_mbrs/rec_mbrs (N,4) f32 slot-aligned MBR tables ->
+    (slots (Q, budget) int32 [-1 padded, ascending slot order],
+     counts (Q,) int32 TOTAL mask survivors — ``counts > budget`` means the
+     compacted list is truncated and the caller must re-issue).
+    """
+    if prefilter not in ("intersects", "contains"):
+        raise ValueError(f"unsupported prefilter {prefilter!r}")
+    if budget > MAX_COMPACT_BUDGET:
+        raise ValueError(
+            f"budget {budget} exceeds MAX_COMPACT_BUDGET="
+            f"{MAX_COMPACT_BUDGET}: the (bq, bn, budget) one-hot scatter "
+            "block would not fit VMEM — use the jnp reference "
+            "(use_pallas=False / compaction='scan') for larger budgets")
+    q = windows.shape[0]
+    # the one-hot scatter block is (bq, bn, budget) int32 in VMEM: keep the
+    # budget axis lane-aligned
+    bud = max(128, -(-budget // 128) * 128)
+    windows, bounds, (leaf_mbrs, rec_mbrs) = _pad_inputs(
+        windows, bounds, bq, bn, leaf_mbrs, rec_mbrs)
+    qp, np_ = windows.shape[0], leaf_mbrs.shape[0]
+    slots, counts = pl.pallas_call(
+        partial(_compact_kernel, bn=bn, budget=bud, prefilter=prefilter),
+        grid=_grids(qp, np_, bq, bn),
+        in_specs=[
+            pl.BlockSpec((bq, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 4), lambda i, j: (j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bq, bud), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((qp, bud), jnp.int32),
+            jax.ShapeDtypeStruct((qp,), jnp.int32),
+        ),
+        cost_estimate=_cost_estimate("compact", qp, np_, bud),
+        interpret=interpret,
+    )(windows, bounds, leaf_mbrs, rec_mbrs)
+    return slots[:q, :budget], counts[:q]
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost model (compiler CostEstimate + roofline_report --kernels)
+# ---------------------------------------------------------------------------
+def refine_cost(kind: str, q: int, n: int, budget: int = 0,
+                verts: int = 0, bq: int = DEFAULT_BQ,
+                bn: int = DEFAULT_BN) -> dict:
+    """Bytes/flops model of one kernel invocation.
+
+    ``kind``: "mask" | "count" | "compact" | "exact" — "exact" models the
+    downstream exact-shape refinement stage over the compacted (Q, budget)
+    survivors (``verts`` = padded ring width), so the roofline report covers
+    the full compact+refine pipeline, not just candidate counting.
+    """
+    tiles_q = -(-q // bq)
+    if kind == "exact":
+        # gather + predicate over compacted survivors: verts (V,2) f32 per
+        # candidate, ~40 flops per vertex (edge clip + ray cast)
+        bytes_accessed = q * budget * (verts * 8 + 16) + q * budget * 4
+        flops = q * budget * verts * 40
+        return {"flops": float(flops), "bytes_accessed": float(bytes_accessed),
+                "transcendentals": 0}
+    # streaming kernels: each query row-tile streams the full MBR table(s)
+    streams = 2 if kind == "compact" else 1
+    bytes_accessed = tiles_q * n * 16 * streams + q * 24
+    flops = q * n * 10.0          # interval + MBR comparisons per pair
+    if kind == "mask":
+        bytes_accessed += q * n   # int8 mask writeback
+    elif kind == "count":
+        bytes_accessed += tiles_q * bq * 4
+    elif kind == "compact":
+        flops += q * n * 6.0      # prefix sums
+        flops += q * n * float(max(budget, 1)) * 2.0   # one-hot scatter
+        bytes_accessed += q * (max(budget, 1) + 1) * 4
+    else:
+        raise ValueError(f"unknown kernel kind {kind!r}")
+    return {"flops": float(flops), "bytes_accessed": float(bytes_accessed),
+            "transcendentals": 0}
+
+
+def _cost_estimate(kind: str, q: int, n: int, budget: int = 0):
+    c = refine_cost(kind, q, n, budget)
+    return pl.CostEstimate(flops=int(c["flops"]),
+                           bytes_accessed=int(c["bytes_accessed"]),
+                           transcendentals=0)

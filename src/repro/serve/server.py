@@ -78,7 +78,18 @@ class SpatialQueryServer:
     stale results, and under a write-heavy stream the planner serves the
     ``device+delta`` backend (snapshot + tombstone/added patch) instead of
     republishing the snapshot per write (``backend_counts`` records the mix).
+
+    **Result cache.** Flushed results are cached per window, keyed on
+    ``(index epoch, window bytes, relation)``: repeated windows (hot map
+    tiles, dashboard refreshes) are served from the cache without touching
+    the facade. The epoch in the key makes every write an implicit
+    invalidation — a stale entry can never hit — and entries from dead
+    epochs are dropped eagerly. ``backend_counts["cache"]`` counts
+    cache-served queries next to the facade backends; ``cache_hits`` /
+    ``cache_misses`` give the raw telemetry.
     """
+
+    CACHE_MAX_ENTRIES = 4096
 
     def __init__(self, index: SpatialIndex):
         self.index = index
@@ -88,10 +99,38 @@ class SpatialQueryServer:
         self.served_batches = 0
         self.write_ops = 0
         self.backend_counts: Dict[str, int] = {}  # plan.backend -> batches
+        self._cache: Dict[Tuple[int, bytes, str], np.ndarray] = {}
+        self._cache_epoch = -1
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     def _record_plan(self, res) -> None:
         b = res.plan.backend
         self.backend_counts[b] = self.backend_counts.get(b, 0) + 1
+
+    def _cache_lookup(self, epoch: int, w: np.ndarray, relation: str):
+        """Return a writable copy of the cached hit ids for a window, or
+        None. A write bumps the facade epoch, so stale entries never match;
+        the whole cache is dropped when the epoch moves (dead keys can never
+        hit again). Hits are copies so callers get the same mutable-array
+        contract on hits and misses alike."""
+        if self._cache_epoch != epoch:
+            self._cache.clear()
+            self._cache_epoch = epoch
+        hit = self._cache.get((epoch, w.tobytes(), relation))
+        return None if hit is None else hit.copy()
+
+    def _cache_store(self, epoch: int, w: np.ndarray, relation: str,
+                     ids: np.ndarray) -> None:
+        if epoch != self._cache_epoch:
+            return                            # a write landed mid-flush
+        if len(self._cache) >= self.CACHE_MAX_ENTRIES:
+            self._cache.pop(next(iter(self._cache)))   # FIFO eviction
+        # cache a frozen copy, not the array handed to the caller: an
+        # in-place mutation by one caller must not poison later hits
+        frozen = ids.copy()
+        frozen.setflags(write=False)
+        self._cache[(epoch, w.tobytes(), relation)] = frozen
 
     # ------------------------------------------------------------------ reads
     def submit(self, window: np.ndarray, relation: str = "intersects") -> int:
@@ -105,18 +144,35 @@ class SpatialQueryServer:
     def flush(self) -> Dict[int, np.ndarray]:
         if not self._queue:
             return {}
-        by_rel: Dict[str, List[Tuple[int, np.ndarray]]] = {}
-        for ticket, rel, w in self._queue:
-            by_rel.setdefault(rel, []).append((ticket, w))
+        epoch = self.index.epoch
         out: Dict[int, np.ndarray] = {}
+        by_rel: Dict[str, List[Tuple[int, np.ndarray]]] = {}
+        cached = 0
+        for ticket, rel, w in self._queue:
+            hit = self._cache_lookup(epoch, w, rel)
+            if hit is not None:
+                out[ticket] = hit
+                cached += 1
+            else:
+                by_rel.setdefault(rel, []).append((ticket, w))
+        plans = []
         for rel, items in by_rel.items():
             windows = np.stack([w for _, w in items])
             res = self.index.query(windows, rel)
-            self._record_plan(res)
-            for (ticket, _), ids in zip(items, res):
+            plans.append(res)
+            for (ticket, w), ids in zip(items, res):
                 out[ticket] = ids
-        # only drop the queue once every group succeeded — an exception above
-        # (e.g. device OverflowError) leaves all tickets retryable
+                self._cache_store(epoch, w, rel, ids)
+        # commit counters and drop the queue only once every group succeeded
+        # — an exception above (e.g. device OverflowError) leaves all tickets
+        # retryable WITHOUT having skewed the telemetry
+        for res in plans:
+            self._record_plan(res)
+        self.cache_hits += cached
+        self.cache_misses += sum(len(v) for v in by_rel.values())
+        if cached:
+            self.backend_counts["cache"] = (
+                self.backend_counts.get("cache", 0) + cached)
         self._queue.clear()
         self.served_queries += len(out)
         self.served_batches += len(by_rel)

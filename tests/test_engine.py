@@ -2,6 +2,7 @@
 backend selection (host / device / device+delta), epoch-invalidated snapshots
 and LSM-style delta patching under interleaved maintenance (split and merge
 both exercised), and the GLIN.insert vertex-capacity fix."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -143,13 +144,37 @@ def test_knn_is_a_query_kind():
     pts = np.array([[0.3, 0.4], [0.7, 0.2]])
     res = idx.query(QueryBatch.knn(pts, k=7))
     assert res.plan.backend == "host" and res.plan.kind == "knn"
-    m = idx.gs.mbrs
+    gs = idx.gs
     for qi, p in enumerate(pts):
         assert res.ids[qi].shape == (7,) and res.distances[qi].shape == (7,)
-        dx = np.maximum(np.maximum(m[:, 0] - p[0], p[0] - m[:, 2]), 0.0)
-        dy = np.maximum(np.maximum(m[:, 1] - p[1], p[1] - m[:, 3]), 0.0)
-        d = np.hypot(dx, dy)
-        assert res.distances[qi][-1] <= np.sort(d)[6] + 1e-12
+        rect = np.array([p[0], p[1], p[0], p[1]])
+        d = np.sqrt(geom.rect_geom_sqdist(rect, gs.verts, gs.nverts,
+                                          gs.kinds))
+        np.testing.assert_allclose(res.distances[qi], np.sort(d)[:7],
+                                   atol=1e-12)
+
+
+def test_knn_device_batch_matches_host_loop():
+    """A point batch >= knn_device_min_batch plans the batched dwithin
+    doubling-radius path; results must equal the host loop point-for-point
+    (fp32-representable grid keeps both refinement precisions identical)."""
+    from repro.core.index import knn as host_knn
+
+    gs = _fp32_grid(generate("cluster", 3000, seed=7))
+    idx = SpatialIndex.build(gs, GLINConfig(piece_limitation=200),
+                             EngineConfig(knn_device_min_batch=8))
+    pts = np.random.default_rng(11).uniform(0.15, 0.85, (24, 2))
+    res = idx.query(QueryBatch.knn(pts, k=6))
+    assert res.plan.backend == "device" and "doubling radii" in res.plan.reason
+    for qi, p in enumerate(pts):
+        hi, hd = host_knn(idx.glin, p, 6)
+        np.testing.assert_array_equal(res.ids[qi], hi)
+        np.testing.assert_allclose(res.distances[qi], hd, rtol=1e-6)
+    # below the threshold (or without the piecewise function) it stays host
+    small = idx.query(QueryBatch.knn(pts[:2], k=6))
+    assert small.plan.backend == "host"
+    for qi in range(2):
+        np.testing.assert_array_equal(small.ids[qi], res.ids[qi])
 
 
 def test_unknown_relation_rejected():
@@ -432,6 +457,88 @@ def test_delta_path_serves_every_registry_relation(relation):
             res[qi], _oracle(idx, w.astype(np.float32), relation, np.float32))
 
 
+def test_delta_side_table_matches_host_loop_patching():
+    """Past delta_device_min the added-set patch runs through the device
+    DeltaTable; below it, through the host loop. Both must produce identical
+    results, and the table must be rebuilt lazily (once per epoch served),
+    not per query batch."""
+    def mk(dmin):
+        # each index owns its GeometrySet copy: inserts mutate the store
+        gs = _fp32_grid(generate("cluster", 2500, seed=61))
+        return SpatialIndex.build(
+            gs, GLINConfig(piece_limitation=100),
+            EngineConfig(device_min_batch=1, delta_patch_max=4096,
+                         refresh_threshold=100_000, delta_device_min=dmin))
+
+    idx_dev, idx_host = mk(4), mk(10**9)
+    gs = idx_dev.gs
+    rng = np.random.default_rng(67)
+    for idx in (idx_dev, idx_host):
+        idx.snapshot()
+    for _ in range(150):
+        v = _big_polygon(rng, rng.uniform(0.25, 0.75, 2), r=3e-4, nv=6)
+        v = v.astype(np.float32).astype(np.float64)
+        for idx in (idx_dev, idx_host):
+            idx.insert(v, 6, 0)
+    live = np.nonzero(idx_dev.glin._live_mask())[0]
+    for victim in live[:4]:
+        for idx in (idx_dev, idx_host):
+            idx.delete(int(victim))
+    wins = make_query_windows(gs, 0.01, 8, seed=5)
+    wins = wins.astype(np.float32).astype(np.float64)
+    for rel in RELATIONS:
+        a = idx_dev.query(wins, rel)
+        b = idx_host.query(wins, rel)
+        assert a.plan.backend == b.plan.backend == "device+delta"
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+    assert idx_dev._dtable is not None and idx_host._dtable is None
+    table = idx_dev._dtable
+    idx_dev.query(wins, "intersects")        # same epoch: table reused
+    assert idx_dev._dtable is table
+    idx_dev.insert(_big_polygon(rng, np.array([0.5, 0.5]), r=3e-4), 10, 0)
+    idx_dev.query(wins, "intersects")        # epoch moved: table rebuilt
+    assert idx_dev._dtable is not table
+    idx_dev.snapshot()                       # publish clears the delta/table
+    assert idx_dev._dtable is None
+
+
+def test_compaction_modes_bit_identical():
+    """sort (legacy argsort), scan (jnp reference) and pallas (fused kernel,
+    interpret mode off-TPU) must return bit-identical hits/counts through
+    batch_query, including on odd batch sizes."""
+    from repro.core.device import batch_query
+
+    idx = _build(n=2500, pl=200)
+    snap = idx.snapshot()
+    payload = idx._device_payload(idx._snapshot_recs)
+    wins = make_query_windows(idx.gs, 0.005, 13, seed=9)   # odd Q
+    wj = jnp.asarray(wins.astype(np.float32))
+    for rel in ("intersects", "contains", "within", "dwithin:0.003"):
+        base = get_relation(rel).base_name()
+        outs = {}
+        for mode in ("sort", "scan", "pallas"):
+            h, c = batch_query(snap, wj, *payload, relation=base,
+                               cap=1 << 15, exact_budget=64, compaction=mode)
+            outs[mode] = (np.asarray(h), np.asarray(c))
+        for mode in ("scan", "pallas"):
+            np.testing.assert_array_equal(outs["sort"][0], outs[mode][0])
+            np.testing.assert_array_equal(outs["sort"][1], outs[mode][1])
+
+
+def test_forced_compaction_config_parity():
+    """EngineConfig.compaction forces the stage-1 implementation end to end
+    through the facade; results must not depend on it."""
+    idx_auto = _build(n=2000)
+    wins = make_query_windows(idx_auto.gs, 0.01, 20, seed=13)
+    ref = idx_auto.query(wins, "intersects", backend="device")
+    for mode in ("sort", "scan", "pallas"):
+        idx = SpatialIndex(idx_auto.glin, EngineConfig(compaction=mode))
+        res = idx.query(wins, "intersects", backend="device")
+        for a, b in zip(res, ref):
+            np.testing.assert_array_equal(a, b)
+
+
 def test_plan_reason_every_branch():
     """Every QueryPlan.reason branch of the three-backend planner."""
     cfg = EngineConfig(device_min_batch=4, stale_rebuild_min_batch=8,
@@ -443,6 +550,8 @@ def test_plan_reason_every_branch():
 
     # knn / forced backends / stats / validation
     assert "knn" in idx.plan(QueryBatch.knn([[0.5, 0.5]], k=3)).reason
+    p = idx.plan(QueryBatch.knn(np.tile([0.5, 0.5], (20, 1)), k=3))
+    assert p.backend == "device" and "doubling radii" in p.reason
     for be in ("host", "device", "device+delta"):
         p = idx.plan(QueryBatch.window(big, "intersects", backend=be))
         assert p.backend == be and p.reason == "forced by caller"
@@ -567,6 +676,41 @@ def test_spatial_query_server_mixed_relations():
     t = server.submit(np.array([0.49, 0.49, 0.51, 0.51]), "intersects")
     assert rec in server.flush()[t]
     assert server.write_ops == 1 and server.served_queries >= 5
+
+
+def test_server_result_cache_hits_and_epoch_invalidation():
+    """Repeated windows are served from the (epoch, window-bytes, relation)
+    cache without touching the facade; a write bumps the epoch and every
+    cached entry stops matching — results stay exact."""
+    from repro.serve.server import SpatialQueryServer
+
+    idx = _build(n=2000)
+    server = SpatialQueryServer(idx)
+    wins = make_query_windows(idx.gs, 0.01, 4, seed=31)
+    t1 = [server.submit(w, "intersects") for w in wins]
+    out1 = server.flush()
+    assert server.cache_hits == 0 and server.cache_misses == 4
+    batches0 = server.served_batches
+    # identical resubmission: pure cache, no facade query
+    t2 = [server.submit(w, "intersects") for w in wins]
+    out2 = server.flush()
+    assert server.cache_hits == 4 and server.served_batches == batches0
+    assert server.backend_counts.get("cache") == 4
+    for a, b in zip(t1, t2):
+        np.testing.assert_array_equal(out1[a], out2[b])
+    # same window under a different relation is a different key
+    t3 = server.submit(wins[0], "covers")
+    assert server.flush()[t3] is not None and server.cache_hits == 4
+    # a write invalidates: next flush recomputes and sees the new record
+    rng = np.random.default_rng(41)
+    c = np.array([np.mean(wins[0][[0, 2]]), np.mean(wins[0][[1, 3]])])
+    rec = server.insert(_big_polygon(rng, c, r=1e-3), 10, 0)
+    t4 = server.submit(wins[0], "intersects")
+    out4 = server.flush()
+    assert rec in out4[t4]
+    assert server.cache_hits == 4      # no stale hit happened
+    np.testing.assert_array_equal(
+        out4[t4], idx.query(wins[0], "intersects", backend="host")[0])
 
 
 def test_server_write_flush_stream_takes_delta_plan():

@@ -124,22 +124,23 @@ def test_contains_subset_of_intersects():
 
 
 def test_knn_matches_bruteforce():
-    """Beyond-paper: KNN via expanding-window search (paper §XI future work)."""
+    """Beyond-paper: KNN through dwithin probes at doubling radii (paper §XI
+    future work; exact point-to-geometry distances, ties broken by id)."""
+    from repro.core import geometry as geom
     from repro.core.index import knn
     g = _build("cluster", n=4000, pl=200, seed=2)
     gs = g.gs
     rng = np.random.default_rng(3)
     for _ in range(6):
         p = rng.uniform(0.1, 0.9, 2)
+        rect = np.array([p[0], p[1], p[0], p[1]])
+        dd = np.sqrt(geom.rect_geom_sqdist(rect, gs.verts, gs.nverts,
+                                           gs.kinds))
         for k in (1, 5, 20):
             ids, d = knn(g, p, k)
-            # brute force point-to-MBR distances
-            m = gs.mbrs
-            dx = np.maximum(np.maximum(m[:, 0] - p[0], p[0] - m[:, 2]), 0.0)
-            dy = np.maximum(np.maximum(m[:, 1] - p[1], p[1] - m[:, 3]), 0.0)
-            dd = np.hypot(dx, dy)
             ref = np.lexsort((np.arange(len(gs)), dd))[:k]
             np.testing.assert_array_equal(np.sort(ids), np.sort(ref))
+            np.testing.assert_allclose(d, np.sort(dd)[:k], atol=1e-12)
             assert np.all(np.diff(d) >= -1e-12)
 
 

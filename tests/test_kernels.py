@@ -38,6 +38,89 @@ def test_refine_sweep(q, n):
     np.testing.assert_array_equal(np.asarray(c), np.asarray(m).sum(1))
 
 
+def _compact_case(q, n, seed=0):
+    rng = np.random.default_rng(seed)
+    wins = rng.uniform(0, 1, (q, 4)).astype(np.float32)
+    wins[:, 2:] = wins[:, :2] + rng.uniform(0.01, 0.3, (q, 2)).astype(np.float32)
+    rmbrs = rng.uniform(0, 1, (n, 4)).astype(np.float32)
+    rmbrs[:, 2:] = rmbrs[:, :2] + 0.01
+    lmbrs = rmbrs + np.array([-0.02, -0.02, 0.02, 0.02], np.float32)
+    lo = rng.integers(0, max(n // 2, 1), q).astype(np.int32)
+    hi = rng.integers(n // 2, n + 1, q).astype(np.int32)
+    bounds = jnp.asarray(np.stack([lo, hi], 1))
+    return jnp.asarray(wins), bounds, jnp.asarray(lmbrs), jnp.asarray(rmbrs)
+
+
+# odd shapes: Q and N not multiples of the tile sizes (internal padding)
+@pytest.mark.parametrize("q,n", [(1, 37), (5, 256), (13, 1000), (32, 2049)])
+@pytest.mark.parametrize("prefilter", ["intersects", "contains"])
+def test_refine_compact_sweep(q, n, prefilter):
+    wins, bounds, lmbrs, rmbrs = _compact_case(q, n)
+    for budget in (8, 64):
+        s, c = ops.refine_compact(wins, bounds, lmbrs, rmbrs, budget=budget,
+                                  prefilter=prefilter)
+        sr, cr = ref.refine_compact_ref(wins, bounds, lmbrs, rmbrs, budget,
+                                        prefilter)
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+
+
+def test_refine_compact_empty_runs_and_extremes():
+    """Empty probe runs, zero-survivor and all-survivor rows."""
+    q, n = 9, 700
+    wins, bounds, lmbrs, rmbrs = _compact_case(q, n, seed=3)
+    b = np.asarray(bounds).copy()
+    b[0] = (50, 50)                      # empty run
+    b[1] = (60, 40)                      # inverted (empty) run
+    wins = np.asarray(wins).copy()
+    wins[2] = (2.0, 2.0, 3.0, 3.0)       # intersects nothing: zero survivors
+    wins[3] = (-1.0, -1.0, 2.0, 2.0)     # covers everything: all survive
+    b[3] = (0, n)
+    wins_j, b_j = jnp.asarray(wins), jnp.asarray(b)
+    budget = 1024                        # >= n: nothing truncated
+    s, c = ops.refine_compact(wins_j, b_j, lmbrs, rmbrs, budget=budget)
+    sr, cr = ref.refine_compact_ref(wins_j, b_j, lmbrs, rmbrs, budget)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    c = np.asarray(c)
+    s = np.asarray(s)
+    assert c[0] == 0 and c[1] == 0 and c[2] == 0
+    assert c[3] == n and (s[3] >= 0).sum() == n
+    np.testing.assert_array_equal(s[3][:n], np.arange(n))
+
+
+def test_refine_compact_budget_overflow_signalling():
+    """counts carries TOTAL survivors even past the budget: the caller's
+    overflow test (counts > budget) must fire, and the kept slots must be
+    the first `budget` survivors in slot order."""
+    q, n = 4, 300
+    wins = np.tile(np.array([[-1, -1, 2, 2]], np.float32), (q, 1))
+    rng = np.random.default_rng(5)
+    rmbrs = rng.uniform(0, 1, (n, 4)).astype(np.float32)
+    rmbrs[:, 2:] = rmbrs[:, :2] + 0.01
+    lmbrs = rmbrs
+    bounds = jnp.asarray(np.tile([0, n], (q, 1)).astype(np.int32))
+    budget = 16
+    s, c = ops.refine_compact(jnp.asarray(wins), bounds, jnp.asarray(lmbrs),
+                              jnp.asarray(rmbrs), budget=budget)
+    s, c = np.asarray(s), np.asarray(c)
+    assert (c == n).all() and (c > budget).all()
+    for row in s:
+        np.testing.assert_array_equal(row, np.arange(budget))
+
+
+@pytest.mark.parametrize("q,n", [(3, 100), (13, 999), (30, 2047)])
+def test_refine_mask_count_internal_padding(q, n):
+    """mask/count accept shapes that are NOT tile multiples (the kernels pad
+    internally; callers stopped pre-padding)."""
+    wins, bounds, _, mbrs = _compact_case(q, n, seed=7)
+    m = ops.refine_mask(wins, bounds, mbrs)
+    mr = ref.refine_mask_ref(wins, bounds, mbrs)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+    c = ops.refine_count(wins, bounds, mbrs)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(m).sum(1))
+
+
 # ------------------------------------------------------------- attention ----
 @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 3e-2)])
 @pytest.mark.parametrize("s,d,hq,hkv,window,bq",

@@ -31,10 +31,12 @@ def _index(key="base"):
     if key in _CACHE:
         return _CACHE[key]
     gs = mixed_store(_N, seed=3)
-    idx = SpatialIndex.build(
-        gs, GLINConfig(piece_limitation=500),
-        EngineConfig(device_min_batch=1, stale_rebuild_min_batch=1))
-    if key == "delta":
+    # "delta-table" forces the added-set patch through the device-resident
+    # Zmin-sorted DeltaTable (delta_device_min=1) instead of the host loop
+    cfg = EngineConfig(device_min_batch=1, stale_rebuild_min_batch=1,
+                       delta_device_min=1 if key == "delta-table" else 64)
+    idx = SpatialIndex.build(gs, GLINConfig(piece_limitation=500), cfg)
+    if key in ("delta", "delta-table"):
         idx.snapshot()   # publish, then build a delta on top
         rng = np.random.default_rng(11)
         star = _star(rng, (0.4, 0.4), 0.05)
@@ -99,6 +101,21 @@ def test_device_delta_matches_fp32_oracle(relation):
     ])
     _assert_parity(idx, wins, relation, "device+delta")
     assert idx.snapshot_is_stale()   # parity did NOT come from a republish
+
+
+@pytest.mark.parametrize("relation", PARITY_RELATIONS)
+def test_device_delta_side_table_matches_fp32_oracle(relation):
+    """Same parity, but the added-set patch runs through the device-resident
+    DeltaTable (z-interval prune + MBR prefilter + exact predicate on
+    device) rather than the per-batch host loop."""
+    idx = _index("delta-table")
+    wins = np.concatenate([
+        _windows(idx, 0.02, 4, seed=9),
+        _fp32([[0.3, 0.3, 0.5, 0.5], [0.58, 0.58, 0.72, 0.72]]),
+    ])
+    _assert_parity(idx, wins, relation, "device+delta")
+    assert idx.snapshot_is_stale()
+    assert idx._dtable is not None and idx._dtable_epoch == idx.epoch
 
 
 # ----------------------------------------------------- hypothesis sweep -----
