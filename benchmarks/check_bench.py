@@ -12,7 +12,13 @@ runs on shared runners) — and gate only under ``--strict-latency``
   baseline, plus ``speedup_cluster`` (fused refinement vs the legacy argsort
   pipeline at cap=4096 / budget=256) staying >= ``--min-refine-speedup``.
 * ``BENCH_maintenance.json`` — ``speedup_vs_republish`` (delta patching vs
-  republish-per-epoch) staying >= ``--min-maint-speedup``.
+  republish-per-epoch) staying >= ``--min-maint-speedup``, and the async
+  double-buffering gate: query p50 WHILE a snapshot republish is in flight
+  must stay within ``--max-republish-p50-ratio`` of steady-state p50
+  (``republish.p50_ratio`` — the stream used to block for the full rebuild).
+* ``BENCH_sharded.json``  — fused-vs-dense per-shard refinement speedup on
+  the host-device CPU mesh staying >= ``--min-sharded-speedup`` on EVERY
+  tracked dataset x relation x mesh cell (``min_speedup``).
 
 Usage (CI bench-smoke job)::
 
@@ -37,7 +43,9 @@ def _load(path: pathlib.Path) -> dict:
 
 def check(fresh_dir: pathlib.Path, committed_dir: pathlib.Path,
           factor: float, min_refine_speedup: float,
-          min_maint_speedup: float, strict_latency: bool = False) -> list:
+          min_maint_speedup: float, strict_latency: bool = False,
+          min_sharded_speedup: float = 1.2,
+          max_republish_p50_ratio: float = 4.0) -> list:
     errors = []
 
     dev_new = _load(fresh_dir / "BENCH_device.json")
@@ -75,6 +83,49 @@ def check(fresh_dir: pathlib.Path, committed_dir: pathlib.Path,
         errors.append(
             f"maintenance: delta-patch speedup x{sv:.2f} < floor "
             f"x{min_maint_speedup:g}")
+    rep = mnt_new.get("republish")
+    if rep is None:
+        errors.append("maintenance: republish section missing from fresh run")
+    else:
+        ratio = rep.get("p50_ratio", float("inf"))
+        if ratio > max_republish_p50_ratio:
+            errors.append(
+                f"maintenance: query p50 during async republish x"
+                f"{ratio:.2f} of steady-state > ceiling x"
+                f"{max_republish_p50_ratio:g} (double-buffering regressed; "
+                f"sync rebuild blocks {rep.get('sync_blocked_ms', 0):.0f}ms)")
+
+    sh_new = _load(fresh_dir / "BENCH_sharded.json")
+    sh_old = _load(committed_dir / "BENCH_sharded.json")
+    for mesh, old_payload in sh_old.get("meshes", {}).items():
+        new_payload = sh_new.get("meshes", {}).get(mesh)
+        if new_payload is None:
+            errors.append(f"sharded: {mesh}-way mesh missing from fresh run")
+            continue
+        for ds, rels in old_payload.get("datasets", {}).items():
+            for rel, row in rels.items():
+                new_row = new_payload.get("datasets", {}).get(ds, {}).get(rel)
+                if new_row is None:
+                    errors.append(
+                        f"sharded: {mesh}-way {ds}/{rel} missing from "
+                        "fresh run")
+                    continue
+                sp = new_row.get("speedup", 0.0)
+                if sp < min_sharded_speedup:
+                    errors.append(
+                        f"sharded: {mesh}-way {ds}/{rel} fused-vs-dense "
+                        f"x{sp:.2f} < floor x{min_sharded_speedup:g} "
+                        f"(committed x{row.get('speedup', 0):.2f})")
+                old_us, new_us = row.get("fused_us"), new_row.get("fused_us")
+                if old_us and new_us and new_us > factor * old_us:
+                    msg = (f"sharded: {mesh}-way {ds}/{rel} fused "
+                           f"{new_us:.0f}us > {factor:g}x baseline "
+                           f"{old_us:.0f}us")
+                    if strict_latency:
+                        errors.append(msg)
+                    else:
+                        print(f"WARNING {msg} (cross-machine; not gating — "
+                              "pass --strict-latency to enforce)")
     return errors
 
 
@@ -88,12 +139,26 @@ def main() -> None:
                     help="max tolerated latency regression factor")
     ap.add_argument("--min-refine-speedup", type=float, default=1.2)
     ap.add_argument("--min-maint-speedup", type=float, default=1.5)
+    ap.add_argument("--min-sharded-speedup", type=float, default=1.2,
+                    help="floor for fused-vs-dense sharded refinement on "
+                         "every dataset x relation x mesh cell")
+    ap.add_argument("--max-republish-p50-ratio", type=float, default=4.0,
+                    help="ceiling for query p50 during an async republish "
+                         "relative to steady-state p50. The design target "
+                         "is 2x — measured ~1.2-1.7x on idle multi-core "
+                         "hardware, but ~2-3x on a saturated 2-core host "
+                         "(one core is all that is left for serving while "
+                         "the niced builder crunches). The regression this "
+                         "ceiling guards — the rebuild blocking the stream "
+                         "again — shows up as a 10-30x spike, far above it.")
     ap.add_argument("--strict-latency", action="store_true",
                     help="gate on absolute latency too (same-machine runs)")
     args = ap.parse_args()
     errors = check(args.fresh_dir, args.committed, args.factor,
                    args.min_refine_speedup, args.min_maint_speedup,
-                   strict_latency=args.strict_latency)
+                   strict_latency=args.strict_latency,
+                   min_sharded_speedup=args.min_sharded_speedup,
+                   max_republish_p50_ratio=args.max_republish_p50_ratio)
     for e in errors:
         print(f"REGRESSION {e}")
     if errors:

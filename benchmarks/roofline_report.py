@@ -18,14 +18,18 @@ KERNEL_SHAPES = [
     (4096, 1 << 20, 256, 12),
     (4096, 1 << 24, 512, 12),
 ]
+# Mesh sizes for the sharded compact+refine variant (record shards)
+KERNEL_SHARDS = (4, 16)
 
 
-def kernel_rows(shapes=None):
+def kernel_rows(shapes=None, shards=KERNEL_SHARDS):
     """Roofline terms of the refinement pipeline from the analytic bytes/flops
     model in ``repro.kernels.refine.refine_cost`` — covering the fused
-    compact kernel AND the downstream exact-shape stage over the compacted
-    survivors, not just candidate counting."""
-    from repro.kernels.refine import refine_cost
+    compact kernel, the downstream exact-shape stage over the compacted
+    survivors, AND the sharded variant (``sharded_refine_cost``: per-shard
+    compact+refine plus the cross-shard survivor all-gather bytes), matching
+    what ``core.distributed.build_glin_query_step`` actually executes."""
+    from repro.kernels.refine import refine_cost, sharded_refine_cost
     from repro.utils import roofline
 
     out = []
@@ -42,15 +46,22 @@ def kernel_rows(shapes=None):
                                + stages["exact"]["bytes_accessed"]),
         }
         stages["compact+refine"] = pipeline
+        for s in shards:
+            stages[f"sharded[{s}]"] = sharded_refine_cost(
+                q, n, budget, shards=s, verts=verts)
         for stage, cost in stages.items():
+            coll = cost.get("collective_bytes", 0.0)
             terms = roofline.roofline_terms(
-                cost["flops"], cost["bytes_accessed"], 0.0, chips=1)
-            out.append((
-                f"refine/{stage}/{shape}",
+                cost["flops"], cost["bytes_accessed"], coll, chips=1)
+            detail = (
                 f"flops={cost['flops']:.3g} bytes={cost['bytes_accessed']:.3g} "
                 f"compute={terms['compute_s']*1e6:.3g}us "
-                f"memory={terms['memory_s']*1e6:.3g}us "
-                f"dom={terms['dominant']}"))
+                f"memory={terms['memory_s']*1e6:.3g}us ")
+            if coll:
+                detail += (f"allgather={coll:.3g}B "
+                           f"coll={terms['collective_s']*1e6:.3g}us ")
+            out.append((f"refine/{stage}/{shape}",
+                        detail + f"dom={terms['dominant']}"))
     return out
 
 

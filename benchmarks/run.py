@@ -6,9 +6,9 @@ beyond-paper TPU-native path. Roofline artifacts are produced separately by
 launch/dryrun.py and rendered by benchmarks/roofline_report.py.
 
 ``--quick`` is the CI bench-smoke mode: reduced scale, device + maintenance
-only, and the machine-readable ``BENCH`` dicts are written to
-``BENCH_device.json`` / ``BENCH_maintenance.json`` in ``--bench-dir``
-(default: the repo root — the committed perf trajectory;
++ sharded only, and the machine-readable ``BENCH`` dicts are written to
+``BENCH_device.json`` / ``BENCH_maintenance.json`` / ``BENCH_sharded.json``
+in ``--bench-dir`` (default: the repo root — the committed perf trajectory;
 ``benchmarks.check_bench`` compares a fresh run against it).
 """
 from __future__ import annotations
@@ -25,7 +25,7 @@ def main() -> None:
     ap.add_argument("--large", action="store_true",
                     help="paper-scale datasets (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma list: glin,device,maintenance")
+                    help="comma list: glin,device,maintenance,sharded")
     ap.add_argument("--quick", action="store_true",
                     help="CI bench-smoke: reduced scale, write BENCH_*.json")
     ap.add_argument("--bench-dir", default=str(REPO_ROOT),
@@ -34,7 +34,8 @@ def main() -> None:
 
     from .common import Csv
     csv = Csv()
-    default = "device,maintenance" if args.quick else "glin,device,maintenance"
+    default = ("device,maintenance,sharded" if args.quick
+               else "glin,device,maintenance,sharded")
     which = set((args.only or default).split(","))
     bench_jsons = {}
     print("name,us_per_call,derived")
@@ -53,6 +54,12 @@ def main() -> None:
         else:
             bench_jsons["maintenance"] = bench_maintenance.run(
                 csv, large=args.large)
+    if "sharded" in which:
+        from . import bench_sharded
+        if args.quick:
+            bench_jsons["sharded"] = bench_sharded.run(csv, n=20_000, q=48)
+        else:
+            bench_jsons["sharded"] = bench_sharded.run(csv, large=args.large)
     if args.quick:
         out_dir = pathlib.Path(args.bench_dir)
         out_dir.mkdir(parents=True, exist_ok=True)

@@ -33,7 +33,8 @@ from .relations import get_relation
 from .zorder import (LO_LIMB_SIZE, mbr_to_zinterval_hilo, split_hilo_np,
                      z_less_hilo)
 
-__all__ = ["GLINSnapshot", "snapshot_from_host", "batch_probe",
+__all__ = ["GLINSnapshot", "HostCapture", "snapshot_capture",
+           "snapshot_from_capture", "snapshot_from_host", "batch_probe",
            "batch_query_bounds", "batch_query", "DeltaTable",
            "delta_table_from_host", "batch_check_added", "input_specs_like"]
 
@@ -94,16 +95,66 @@ class GLINSnapshot:
 
 
 # ---------------------------------------------------------------------------
-# Host tree -> snapshot
+# Host tree -> capture -> snapshot
+#
+# The flatten is split in two so a republish can run OFF the caller's thread
+# (engine double-buffering): ``snapshot_capture`` touches the live, mutable
+# host structure (leaf list, node tree, piecewise arrays) and must be called
+# synchronously with respect to insert/delete; ``snapshot_from_capture`` does
+# the heavy O(N) numpy work and the device uploads on plain numpy copies (or
+# append-immutable store arrays) and is safe to run on a background thread
+# while writes keep mutating the host index.
 # ---------------------------------------------------------------------------
-def snapshot_from_host(glin) -> GLINSnapshot:
+@dataclasses.dataclass(frozen=True)
+class HostCapture:
+    """A consistent host-side flattening of the index at one epoch.
+
+    ``keys``/``recs``/``starts``/``leaf_mbrs`` are fresh copies; the geometry
+    store fields alias the store's arrays, which are immutable once created
+    (inserts replace them append-style, deletes never touch them) — so the
+    capture stays valid while the live index keeps mutating."""
+
+    keys: np.ndarray        # (N,) int64 Zmin keys in slot order
+    recs: np.ndarray        # (N,) int64 record ids in slot order
+    starts: np.ndarray      # (L+1,) int64 leaf slot offsets
+    leaf_mbrs: np.ndarray   # (L, 4) f64 aggregate leaf MBRs
+    dlo_hi: np.ndarray      # (L+1,) int32 leaf domain bounds
+    dlo_lo: np.ndarray
+    k0_hi: np.ndarray       # (L,) int32 leaf model re-centring keys
+    k0_lo: np.ndarray
+    slope: np.ndarray       # (L,) float32
+    icpt: np.ndarray        # (L,) float32
+    node_dlo_hi: np.ndarray
+    node_dlo_lo: np.ndarray
+    node_scale: np.ndarray
+    node_fanout: np.ndarray
+    node_child_base: np.ndarray
+    child_codes: np.ndarray
+    depth: int
+    pw_zmax_hi: np.ndarray
+    pw_zmax_lo: np.ndarray
+    pw_sufmin_hi: np.ndarray
+    pw_sufmin_lo: np.ndarray
+    grid_x0: float
+    grid_y0: float
+    grid_cell: float
+    # geometry store at capture time (aliases; see class docstring)
+    gs_mbrs: np.ndarray
+    gs_verts: np.ndarray
+    gs_nverts: np.ndarray
+    gs_kinds: np.ndarray
+    num_records: int        # store length at capture time
+
+    @property
+    def num_leaves(self) -> int:
+        return self.leaf_mbrs.shape[0]
+
+
+def snapshot_capture(glin) -> HostCapture:
+    """Flatten the live host tree into plain numpy (synchronous part)."""
     keys, recs, starts, mbrs = glin.all_leaf_arrays()
     leaves = glin.leaves
     L = len(leaves)
-
-    k_hi, k_lo = split_hilo_np(keys)
-    rec_leaf = np.repeat(np.arange(L, dtype=np.int32),
-                         np.diff(starts).astype(np.int64))
 
     dlos = np.array([lf.dlo for lf in leaves] + [leaves[-1].dhi if L else 1],
                     dtype=object)
@@ -114,17 +165,6 @@ def snapshot_from_host(glin) -> GLINSnapshot:
         np.array([lf.key0 for lf in leaves], np.int64))
     slope = np.array([lf.slope for lf in leaves], np.float32)
     icpt = np.array([lf.intercept for lf in leaves], np.float32)
-
-    # Device-side max error: re-evaluate the fp32 model on every key so the
-    # binary-search window provably brackets the answer on device.
-    max_err = 1
-    key_f = ((k_hi - k0_hi[rec_leaf]).astype(np.float32) * np.float32(LO_LIMB_SIZE)
-             + (k_lo - k0_lo[rec_leaf]).astype(np.float32))
-    pred = np.rint(slope[rec_leaf] * key_f + icpt[rec_leaf]).astype(np.int64)
-    local = np.arange(keys.shape[0], dtype=np.int64) - starts[rec_leaf]
-    if keys.shape[0]:
-        max_err = max(1, int(np.max(np.abs(pred - local))))
-    search_steps = max(1, math.ceil(math.log2(2 * max_err + 4)))
 
     # Flatten internal nodes (BFS). A leaf root is wrapped in a fanout-1 node.
     leaf_ids = {id(lf): i for i, lf in enumerate(leaves)}
@@ -171,38 +211,83 @@ def snapshot_from_host(glin) -> GLINSnapshot:
                 _depth(c, d + 1)
     _depth(root, 1)
 
-    # Piecewise function in suffix-min form.
+    # Piecewise function in suffix-min form (copied: pw mutates in place).
     if glin.pw is not None and glin.pw.num_pieces:
         pw = glin.pw
-        pz_hi, pz_lo = split_hilo_np(pw.zmax_end)
+        pz_hi, pz_lo = split_hilo_np(np.array(pw.zmax_end, np.int64))
         ps_hi, ps_lo = split_hilo_np(pw.suffix_min().astype(np.int64))
     else:
         pz_hi = pz_lo = ps_hi = ps_lo = np.empty(0, np.int32)
 
-    grid = glin.gs.grid
-    mbrs32 = mbrs.astype(np.float32)
+    gs = glin.gs
+    grid = gs.grid
+    return HostCapture(
+        keys=keys, recs=recs, starts=starts, leaf_mbrs=mbrs,
+        dlo_hi=dlo_hi, dlo_lo=dlo_lo, k0_hi=k0_hi, k0_lo=k0_lo,
+        slope=slope, icpt=icpt,
+        node_dlo_hi=n_dlo_hi, node_dlo_lo=n_dlo_lo, node_scale=n_scale,
+        node_fanout=n_fan, node_child_base=n_base,
+        child_codes=np.asarray(codes, np.int32), depth=depth,
+        pw_zmax_hi=pz_hi, pw_zmax_lo=pz_lo,
+        pw_sufmin_hi=ps_hi, pw_sufmin_lo=ps_lo,
+        grid_x0=float(grid.x0), grid_y0=float(grid.y0),
+        grid_cell=float(grid.cell_size),
+        gs_mbrs=gs.mbrs, gs_verts=gs.verts, gs_nverts=gs.nverts,
+        gs_kinds=gs.kinds, num_records=len(gs),
+    )
+
+
+def snapshot_from_capture(c: HostCapture) -> GLINSnapshot:
+    """Heavy O(N) flattening + device upload over a capture (thread-safe)."""
+    keys, recs, starts = c.keys, c.recs, c.starts
+    L = c.num_leaves
+    k_hi, k_lo = split_hilo_np(keys)
+    rec_leaf = np.repeat(np.arange(L, dtype=np.int32),
+                         np.diff(starts).astype(np.int64))
+
+    # Device-side max error: re-evaluate the fp32 model on every key so the
+    # binary-search window provably brackets the answer on device.
+    max_err = 1
+    key_f = ((k_hi - c.k0_hi[rec_leaf]).astype(np.float32)
+             * np.float32(LO_LIMB_SIZE)
+             + (k_lo - c.k0_lo[rec_leaf]).astype(np.float32))
+    pred = np.rint(c.slope[rec_leaf] * key_f
+                   + c.icpt[rec_leaf]).astype(np.int64)
+    local = np.arange(keys.shape[0], dtype=np.int64) - starts[rec_leaf]
+    if keys.shape[0]:
+        max_err = max(1, int(np.max(np.abs(pred - local))))
+    search_steps = max(1, math.ceil(math.log2(2 * max_err + 4)))
+
+    mbrs32 = c.leaf_mbrs.astype(np.float32)
     return GLINSnapshot(
         keys_hi=jnp.asarray(k_hi), keys_lo=jnp.asarray(k_lo),
         recs=jnp.asarray(recs.astype(np.int32)),
         rec_leaf=jnp.asarray(rec_leaf),
         slot_lmbr=jnp.asarray(mbrs32[rec_leaf] if L else
                               np.empty((0, 4), np.float32)),
-        slot_rmbr=jnp.asarray(glin.gs.mbrs[recs].astype(np.float32)),
+        slot_rmbr=jnp.asarray(c.gs_mbrs[recs].astype(np.float32)),
         leaf_start=jnp.asarray(starts.astype(np.int32)),
-        leaf_dlo_hi=jnp.asarray(dlo_hi), leaf_dlo_lo=jnp.asarray(dlo_lo),
-        leaf_mbr=jnp.asarray(mbrs.astype(np.float32)),
-        leaf_k0_hi=jnp.asarray(k0_hi), leaf_k0_lo=jnp.asarray(k0_lo),
-        leaf_slope=jnp.asarray(slope), leaf_icpt=jnp.asarray(icpt),
-        node_dlo_hi=jnp.asarray(n_dlo_hi), node_dlo_lo=jnp.asarray(n_dlo_lo),
-        node_scale=jnp.asarray(n_scale), node_fanout=jnp.asarray(n_fan),
-        node_child_base=jnp.asarray(n_base),
-        child_codes=jnp.asarray(np.asarray(codes, np.int32)),
-        pw_zmax_hi=jnp.asarray(pz_hi), pw_zmax_lo=jnp.asarray(pz_lo),
-        pw_sufmin_hi=jnp.asarray(ps_hi), pw_sufmin_lo=jnp.asarray(ps_lo),
-        search_steps=search_steps, depth=depth,
-        grid_x0=float(grid.x0), grid_y0=float(grid.y0),
-        grid_cell=float(grid.cell_size),
+        leaf_dlo_hi=jnp.asarray(c.dlo_hi), leaf_dlo_lo=jnp.asarray(c.dlo_lo),
+        leaf_mbr=jnp.asarray(mbrs32),
+        leaf_k0_hi=jnp.asarray(c.k0_hi), leaf_k0_lo=jnp.asarray(c.k0_lo),
+        leaf_slope=jnp.asarray(c.slope), leaf_icpt=jnp.asarray(c.icpt),
+        node_dlo_hi=jnp.asarray(c.node_dlo_hi),
+        node_dlo_lo=jnp.asarray(c.node_dlo_lo),
+        node_scale=jnp.asarray(c.node_scale),
+        node_fanout=jnp.asarray(c.node_fanout),
+        node_child_base=jnp.asarray(c.node_child_base),
+        child_codes=jnp.asarray(c.child_codes),
+        pw_zmax_hi=jnp.asarray(c.pw_zmax_hi),
+        pw_zmax_lo=jnp.asarray(c.pw_zmax_lo),
+        pw_sufmin_hi=jnp.asarray(c.pw_sufmin_hi),
+        pw_sufmin_lo=jnp.asarray(c.pw_sufmin_lo),
+        search_steps=search_steps, depth=c.depth,
+        grid_x0=c.grid_x0, grid_y0=c.grid_y0, grid_cell=c.grid_cell,
     )
+
+
+def snapshot_from_host(glin) -> GLINSnapshot:
+    return snapshot_from_capture(snapshot_capture(glin))
 
 
 # ---------------------------------------------------------------------------
@@ -362,7 +447,14 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
 
     Returns ``(hits, counts)`` where ``hits`` is (Q, K) int32 record ids
     (-1 padded). ``cap`` bounds candidates per query; overflow is reported
-    via negative counts (callers re-issue with a bigger cap).
+    via negative counts, never silently. On the two-stage paths a negative
+    count carries the exact need: ``-(run length) - 1`` when the slot run
+    outgrew ``cap`` (scan/sort window stage 1 to the cap; the magnitude
+    being > cap disambiguates), else ``-(TOTAL MBR survivors) - 1`` so the
+    caller can grow its ``exact_budget`` ladder straight to a sufficient
+    budget (the ``SpatialIndex`` facade does). On the single-stage dense
+    path it encodes the truncated hit count and only signals that the slot
+    run outgrew ``cap``.
 
     ``exact_budget`` > 0 enables TWO-STAGE refinement (beyond-paper, §Perf):
     stage 1 evaluates only the cheap interval + leaf-MBR + record-MBR masks;
@@ -423,7 +515,9 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
                 prefilter=rel.prefilter_kind)
             hits, counts = exact_refine_compacted(slots, kb)
             overflow = mbr_counts > kb
-            return hits, jnp.where(overflow, -counts - 1, counts)
+            # overflow encodes the TOTAL survivor count (-(survivors) - 1),
+            # so the caller can size its budget ladder in one step
+            return hits, jnp.where(overflow, -mbr_counts - 1, counts)
 
         pos = start[:, None] + jnp.arange(cap, dtype=_I32)[None, :]
         valid = pos < jnp.minimum(end, start + cap)[:, None]
@@ -446,8 +540,14 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
                 jnp.arange(q, dtype=_I32)[:, None], col
             ].set(posc, mode="drop")
             hits, counts = exact_refine_compacted(slots, kb)
-            overflow = ((end - start) > cap) | (m32.sum(axis=1) > kb)
-            return hits, jnp.where(overflow, -counts - 1, counts)
+            surv = m32.sum(axis=1)
+            runlen = end - start
+            run_over = runlen > cap
+            overflow = run_over | (surv > kb)
+            # run overflow reports the run length (> cap, so callers can
+            # tell it from a survivor count <= cap and grow the right knob)
+            enc = jnp.where(run_over, runlen, surv)
+            return hits, jnp.where(overflow, -enc - 1, counts)
 
         # "sort": legacy argsort compaction over chained gathers
         leaf = s.rec_leaf[posc]
@@ -469,8 +569,12 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
         fmask = sub_mask & exact
         hits = jnp.where(fmask, sub_rec, -1)
         counts = fmask.sum(axis=1).astype(_I32)
-        overflow = ((end - start) > cap) | (mask.sum(axis=1) > kb)
-        return hits, jnp.where(overflow, -counts - 1, counts)
+        surv = mask.sum(axis=1)
+        runlen = end - start
+        run_over = runlen > cap
+        overflow = run_over | (surv > kb)
+        enc = jnp.where(run_over, runlen, surv)
+        return hits, jnp.where(overflow, -enc - 1, counts)
 
     # single-stage dense path (exact_budget disabled or >= cap)
     pos = start[:, None] + jnp.arange(cap, dtype=_I32)[None, :]  # (Q, cap)

@@ -26,57 +26,81 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import geometry as geom
-from .device import (GLINSnapshot, lower_bound_in_window, model_window,
-                     query_keys)
+from .device import (GLINSnapshot, HostCapture, lower_bound_in_window,
+                     model_window, query_keys, snapshot_capture)
 from .relations import get_relation
 from .zorder import LO_LIMB_SIZE
 from repro.utils.compat import shard_map as compat_shard_map
 
-__all__ = ["shard_glin_arrays", "build_glin_query_step", "glin_input_specs",
-           "GLIN_MODEL_SPEC"]
+__all__ = ["shard_glin_arrays", "shard_arrays_from_capture",
+           "build_glin_query_step", "glin_input_specs", "GLIN_MODEL_SPEC",
+           "TABLE_KEYS"]
 
 _I32 = jnp.int32
+_NEVER = 2e30          # padding MBR coordinate: intersects/contains nothing
 
 # Replicated model pytree spec (everything in GLINSnapshot is replicated; the
 # big sorted arrays travel separately, sharded).
 GLIN_MODEL_SPEC = P()
 
+# Slot-ordered record-table keys sharded over the data axes. ``lmbrs`` /
+# ``mbrs`` are the slot-aligned leaf / record MBR tables the fused
+# mask+compact stage streams (the sharded analogue of the snapshot's
+# ``slot_lmbr`` / ``slot_rmbr``).
+TABLE_KEYS = ("keys_hi", "keys_lo", "recs", "rec_leaf", "lmbrs", "mbrs",
+              "verts", "nverts", "kinds")
 
-def shard_glin_arrays(glin, num_shards: int) -> Dict[str, np.ndarray]:
-    """Reorder record payloads into slot order and pad to ``num_shards``.
 
-    Returns host arrays ready to be device_put with a 'data'-sharded layout:
-    keys/recs/leaf-ids plus slot-ordered record MBRs and vertex rings.
-    """
-    keys, recs, starts, _ = glin.all_leaf_arrays()
+def shard_arrays_from_capture(c: HostCapture,
+                              num_shards: int) -> Dict[str, np.ndarray]:
+    """Slot-ordered record payloads from a host capture, padded to
+    ``num_shards``. Padding slots carry +inf keys, ``recs == -1`` and
+    ``_NEVER`` MBRs (they intersect and contain nothing), so neither
+    prefilter shape can ever pick one up."""
+    keys, recs = c.keys, c.recs
     n = keys.shape[0]
     pad = (-n) % num_shards
-    gs = glin.gs
-    rec_leaf = np.repeat(np.arange(len(glin.leaves), dtype=np.int32),
-                         np.diff(starts).astype(np.int64))
+    rec_leaf = np.repeat(np.arange(c.num_leaves, dtype=np.int32),
+                         np.diff(c.starts).astype(np.int64))
+    lmbrs32 = c.leaf_mbrs.astype(np.float32)
     out = {
         "keys_hi": (keys >> 30).astype(np.int32),
         "keys_lo": (keys & (LO_LIMB_SIZE - 1)).astype(np.int32),
         "recs": recs.astype(np.int32),
         "rec_leaf": rec_leaf,
-        "mbrs": gs.mbrs[recs].astype(np.float32),
-        "verts": gs.verts[recs].astype(np.float32),
-        "nverts": gs.nverts[recs].astype(np.int32),
-        "kinds": gs.kinds[recs].astype(np.int32),
+        "lmbrs": (lmbrs32[rec_leaf] if c.num_leaves
+                  else np.empty((0, 4), np.float32)),
+        "mbrs": c.gs_mbrs[recs].astype(np.float32),
+        "verts": c.gs_verts[recs].astype(np.float32),
+        "nverts": c.gs_nverts[recs].astype(np.int32),
+        "kinds": c.gs_kinds[recs].astype(np.int32),
     }
     if pad:
+        never = np.full((pad, 4), _NEVER, np.float32)
+        # pad keys must be the MAXIMAL key in BOTH limbs: a real corner
+        # record can carry hi == 2^30-1 with lo > 0, and a (hi, 0) pad
+        # appended after it would break the shard-local sort order the
+        # bounded binary search relies on
         out["keys_hi"] = np.concatenate(
             [out["keys_hi"], np.full(pad, 2**30 - 1, np.int32)])
-        out["keys_lo"] = np.concatenate([out["keys_lo"], np.full(pad, 0, np.int32)])
+        out["keys_lo"] = np.concatenate(
+            [out["keys_lo"], np.full(pad, LO_LIMB_SIZE - 1, np.int32)])
         out["recs"] = np.concatenate([out["recs"], np.full(pad, -1, np.int32)])
         out["rec_leaf"] = np.concatenate(
             [out["rec_leaf"], np.zeros(pad, np.int32)])
-        out["mbrs"] = np.concatenate([out["mbrs"], np.zeros((pad, 4), np.float32)])
+        out["lmbrs"] = np.concatenate([out["lmbrs"], never])
+        out["mbrs"] = np.concatenate([out["mbrs"], never])
         out["verts"] = np.concatenate(
-            [out["verts"], np.zeros((pad, *gs.verts.shape[1:]), np.float32)])
-        out["nverts"] = np.concatenate([out["nverts"], np.zeros(pad, np.int32)])
+            [out["verts"],
+             np.zeros((pad, *c.gs_verts.shape[1:]), np.float32)])
+        out["nverts"] = np.concatenate([out["nverts"], np.ones(pad, np.int32)])
         out["kinds"] = np.concatenate([out["kinds"], np.zeros(pad, np.int32)])
     return out
+
+
+def shard_glin_arrays(glin, num_shards: int) -> Dict[str, np.ndarray]:
+    """``shard_arrays_from_capture`` over a fresh capture of the live index."""
+    return shard_arrays_from_capture(snapshot_capture(glin), num_shards)
 
 
 def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -84,22 +108,55 @@ def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 
 def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
-                          cap: int = 512):
+                          cap: int = 512, exact_budget: int = 0,
+                          compaction: str = "scan"):
     """Returns (step_fn, in_shardings, out_shardings) for the mesh.
 
     step(snapshot, windows, table) -> (hits, counts):
-      hits  (Q, n_data_shards, cap) int32  — -1 padded global record ids
-      counts(Q, n_data_shards)       int32 — per-shard hit counts
+      hits  (Q, n_data_shards, K) int32  — -1 padded global record ids,
+            K = ``exact_budget`` when two-stage refinement is on, else ``cap``
+      counts(Q, n_data_shards)     int32 — per-shard hit counts
+
+    ``exact_budget > 0`` runs the fused probe -> mask+compact -> exact-refine
+    pipeline PER SHARD (the PR-4 device pipeline, sharded): stage 1 evaluates
+    the interval + MBR masks over the shard-local slot-aligned MBR tables
+    (``table["lmbrs"]`` / ``table["mbrs"]``) and compacts the survivors to
+    ``(Q, exact_budget)`` local slots; stage 2 gathers vertices and runs the
+    exact predicate only on those survivors. Each shard then contributes a
+    ``(Q, exact_budget)`` survivor block plus its survivor count — the
+    all-gathered per-shard counts replace the dense ``(Q, cap)`` candidate
+    window as the only cross-shard signal, so HBM/ICI traffic scales with
+    ``budget``, not ``cap``. Overflow is encoded per shard as a negative
+    count carrying the exact LOCAL need — ``-(local run length) - 1`` when
+    the shard's slot run outgrew ``cap`` (``compaction == "scan"`` windows
+    stage 1 to ``(Q, cap)``; the Pallas kernel scans the full local run and
+    has no cap), else ``-(survivors) - 1`` when only ``exact_budget``
+    overflowed — so the caller can tell the two apart by comparing the
+    magnitude against ``cap`` and size the right ladder in one step (the
+    GLOBAL probe run is a useless overestimate here: a shard only ever sees
+    its sub-run).
+
+    ``compaction`` picks the stage-1 implementation: ``"scan"`` (the jnp
+    cumsum+scatter reference — the CPU path) or ``"pallas"`` (the fused
+    ``refine_compact`` kernel on TPU). ``exact_budget == 0`` is the legacy
+    dense single-stage path (kept as the sharded benchmark baseline).
     """
     rel = get_relation(relation)
     if not rel.device_native:
         raise ValueError(f"relation {relation!r} is not device-native; shard "
                          f"its base relation {rel.base_name()!r} instead")
+    if compaction not in ("scan", "pallas"):
+        raise ValueError(f"unsupported sharded compaction {compaction!r} "
+                         "(use 'scan' or 'pallas')")
+    if exact_budget and compaction == "pallas" \
+            and rel.prefilter_kind == "custom":
+        raise ValueError(
+            f"relation {relation!r} has a custom MBR prefilter; the fused "
+            "kernel cannot evaluate it — use compaction='scan'")
     daxes = _data_axes(mesh)
+    kb = exact_budget if 0 < exact_budget < cap else 0
 
-    table_spec = {k: P(daxes) for k in
-                  ("keys_hi", "keys_lo", "recs", "rec_leaf", "mbrs", "verts",
-                   "nverts", "kinds")}
+    table_spec = {k: P(daxes) for k in TABLE_KEYS}
     in_specs = (
         GLIN_MODEL_SPEC,           # snapshot: fully replicated (prefix spec)
         P("model"),                # windows sharded over query axis
@@ -134,29 +191,81 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
 
         lstart = local_lb(zmin_hi, zmin_lo)
         lend = local_lb(ub_hi, ub_lo)
+        qn = windows.shape[0]
+        probe_w = rel.probe_window(windows, xp=jnp)
 
+        def exact_for(w, vv, nn, kk):
+            return rel.predicate(w, vv, nn, kk, xp=jnp)
+
+        def exact_refine_compacted(slots):
+            """Exact-shape stage over compacted local survivor slots."""
+            taken = slots >= 0
+            slotc = jnp.maximum(slots, 0)
+            rec = jnp.where(taken, table["recs"][slotc], -1)
+            v = table["verts"][slotc.reshape(-1)]
+            nv = table["nverts"][slotc.reshape(-1)]
+            kd = table["kinds"][slotc.reshape(-1)]
+            exact = jax.vmap(exact_for)(windows,
+                                        v.reshape(qn, kb, *v.shape[1:]),
+                                        nv.reshape(qn, kb),
+                                        kd.reshape(qn, kb))
+            fmask = taken & exact & (rec >= 0)
+            hits = jnp.where(fmask, rec, -1)
+            return hits, fmask.sum(axis=1).astype(_I32)
+
+        if kb:
+            if compaction == "pallas":
+                from repro.kernels import ops
+
+                bounds = jnp.stack([lstart, lend], axis=1)
+                slots, surv = ops.refine_compact(
+                    probe_w, bounds, table["lmbrs"], table["mbrs"],
+                    budget=kb, prefilter=rel.prefilter_kind)
+                overflow = surv > kb
+            else:
+                pos = lstart[:, None] + jnp.arange(cap, dtype=_I32)[None, :]
+                valid = pos < jnp.minimum(lend, lstart + cap)[:, None]
+                posc = jnp.minimum(pos, local_n - 1)
+                # no leaf-MBR gather: padded slots sit at _NEVER and every
+                # record MBR lies inside its leaf's aggregate MBR (grow-only
+                # maintenance), so the record prefilter implies the leaf test
+                rmbr = table["mbrs"][posc]
+                rec_ok = rel.mbr_prefilter(rmbr, windows[:, None, :], xp=jnp)
+                mask = valid & rec_ok
+                m32 = mask.astype(_I32)
+                excl = jnp.cumsum(m32, axis=1) - m32
+                col = jnp.where(mask & (excl < kb), excl, kb)
+                slots = jnp.full((qn, kb), -1, _I32).at[
+                    jnp.arange(qn, dtype=_I32)[:, None], col
+                ].set(posc, mode="drop")
+                surv = m32.sum(axis=1)
+                runlen = lend - lstart
+                run_over = runlen > cap
+                overflow = run_over | (surv > kb)
+                # run overflow reports the local run length (> cap, so the
+                # caller can distinguish it from a survivor count <= cap)
+                surv = jnp.where(run_over, runlen, surv)
+            hits, counts = exact_refine_compacted(slots)
+            counts = jnp.where(overflow, -surv - 1, counts)
+            return hits[:, None, :], counts[:, None]
+
+        # dense single-stage path (exact_budget == 0): the benchmark baseline
         pos = lstart[:, None] + jnp.arange(cap, dtype=_I32)[None, :]
         valid = pos < jnp.minimum(lend, lstart + cap)[:, None]
         posc = jnp.minimum(pos, local_n - 1)
 
-        leaf = table["rec_leaf"][posc]
-        lmbr = snapshot.leaf_mbr[leaf]
         wq = windows[:, None, :]
         # leaf pruning uses the padded probe window (dwithin); the record
         # prefilter pads internally and the predicate sees the raw window
-        leaf_ok = geom.mbr_intersects(
-            lmbr, rel.probe_window(windows, xp=jnp)[:, None, :], xp=jnp)
+        lmbr = table["lmbrs"][posc]
+        leaf_ok = geom.mbr_intersects(lmbr, probe_w[:, None, :], xp=jnp)
         rmbr = table["mbrs"][posc]
         rec_ok = rel.mbr_prefilter(rmbr, wq, xp=jnp)
         mask = valid & leaf_ok & rec_ok
 
-        qn, _ = pos.shape
         v = table["verts"][posc.reshape(-1)]
         nv = table["nverts"][posc.reshape(-1)]
         kd = table["kinds"][posc.reshape(-1)]
-
-        def exact_for(w, vv, nn, kk):
-            return rel.predicate(w, vv, nn, kk, xp=jnp)
 
         exact = jax.vmap(exact_for)(windows,
                                     v.reshape(qn, cap, *v.shape[1:]),
@@ -164,8 +273,9 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
         mask = mask & exact & (table["recs"][posc] >= 0)
         hits = jnp.where(mask, table["recs"][posc], -1)
         counts = mask.sum(axis=1).astype(_I32)
-        overflow = (lend - lstart) > cap
-        counts = jnp.where(overflow, -counts - 1, counts)  # signal truncation
+        runlen = lend - lstart
+        # truncation signal carries the local run length (the needed cap)
+        counts = jnp.where(runlen > cap, -runlen - 1, counts)
         return hits[:, None, :], counts[:, None]
 
     step = compat_shard_map(local_step, mesh, in_specs, out_specs)
@@ -236,6 +346,7 @@ def glin_input_specs(num_records: int, num_queries: int, mesh: Mesh,
         "keys_lo": jax.ShapeDtypeStruct((num_records,), i32),
         "recs": jax.ShapeDtypeStruct((num_records,), i32),
         "rec_leaf": jax.ShapeDtypeStruct((num_records,), i32),
+        "lmbrs": jax.ShapeDtypeStruct((num_records, 4), f32),
         "mbrs": jax.ShapeDtypeStruct((num_records, 4), f32),
         "verts": jax.ShapeDtypeStruct((num_records, max_verts, 2), f32),
         "nverts": jax.ShapeDtypeStruct((num_records,), i32),

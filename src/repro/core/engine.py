@@ -48,17 +48,20 @@ Typical use::
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional, Set, Tuple
+import os
+import threading
+from typing import Any, Dict, Iterator, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import geometry as geom
 from .datasets import GeometrySet
-from .device import (DeltaTable, GLINSnapshot, batch_check_added, batch_query,
-                     batch_query_bounds, delta_table_from_host,
-                     snapshot_from_host)
+from .device import (DeltaTable, GLINSnapshot, HostCapture, batch_check_added,
+                     batch_query, batch_query_bounds, delta_table_from_host,
+                     snapshot_capture, snapshot_from_capture)
 from .index import GLIN, GLINConfig, QueryStats
 from .index import initial_knn_radius
 from .index import knn as _host_knn
@@ -101,6 +104,19 @@ class EngineConfig:
     refresh_threshold: int = 4096     # delta size at which the planner prefers
                                       # a republish over patching (0 means
                                       # republish on every stale query)
+    mesh: Optional[Any] = None        # jax Mesh with a "model" axis (query
+                                      # sharding) and a "data"/"pod" axis
+                                      # (record sharding): activates the
+                                      # "sharded" planner backend
+    shard_min_records: int = 1 << 16  # below this the single-device path
+                                      # beats per-shard dispatch overhead;
+                                      # the sharded backend is not chosen
+    async_republish: bool = False     # double-buffered snapshots: a stale
+                                      # delta past refresh_threshold builds
+                                      # the NEXT snapshot on a background
+                                      # thread while queries keep serving the
+                                      # current snapshot + delta patch; the
+                                      # finished build swaps in atomically
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,7 +132,8 @@ class QueryBatch:
     relation: str = "intersects"
     points: Optional[np.ndarray] = None     # (Q, 2) fp64, knn only
     k: int = 1
-    backend: Optional[str] = None     # force "host"/"device"/"device+delta"
+    backend: Optional[str] = None     # force "host"/"device"/"device+delta"/
+                                      # "sharded"
     collect_stats: bool = False             # per-window QueryStats (host path)
 
     @classmethod
@@ -146,7 +163,8 @@ class QueryBatch:
 class QueryPlan:
     """How a batch will execute (returned by ``plan``, recorded on results)."""
 
-    backend: str                  # "host" | "device" | "device+delta"
+    backend: str                  # "host" | "device" | "device+delta" |
+                                  # "sharded"
     kind: str                     # "window" | "knn"
     relation: Optional[str]       # None for knn
     base_relation: Optional[str]  # probed relation (complements differ)
@@ -179,12 +197,38 @@ class QueryResult:
         return int(sum(r.shape[0] for r in self.ids))
 
 
+@dataclasses.dataclass
+class _InflightPublish:
+    """A double-buffered snapshot build running on a background thread.
+
+    ``capture`` is the synchronous host flattening at ``epoch``; the thread
+    turns it into the padded snapshot (+ the sharded placement when a mesh is
+    active) and sets ``done``. ``tombs_after`` collects records deleted while
+    the build runs that the PENDING snapshot contains (``rec < recs``) — they
+    become the tombstone set of the swapped-in snapshot."""
+
+    capture: HostCapture
+    epoch: int
+    recs: int
+    done: threading.Event
+    tombs_after: Set[int]
+    thread: Optional[threading.Thread] = None
+    snapshot: Optional[GLINSnapshot] = None
+    table_np: Optional[Dict[str, np.ndarray]] = None
+    error: Optional[BaseException] = None
+
+
 class SpatialIndex:
     """Facade over the host ``GLIN`` + lazily-materialized device snapshot.
 
     All mutations MUST go through :meth:`insert` / :meth:`delete` so the
     mutation epoch tracks the host structure; the device snapshot and device
     geometry payload are invalidated by epoch and rebuilt on demand.
+
+    NOT thread-safe for concurrent callers: one thread issues queries and
+    writes. The ``async_republish`` machinery runs the snapshot REBUILD on a
+    background thread, but all state transitions (start, swap) happen on the
+    caller's thread at query boundaries.
     """
 
     def __init__(self, glin: GLIN, config: Optional[EngineConfig] = None):
@@ -205,6 +249,22 @@ class SpatialIndex:
         # adaptive candidate capacity: remembered across queries so the
         # overflow ladder (cap doubling) is walked once, not per call
         self._cap = self.config.initial_cap
+        # host capture backing the published snapshot (sharded placement src)
+        self._capture: Optional[HostCapture] = None
+        # double-buffered republish in flight (async_republish)
+        self._inflight: Optional[_InflightPublish] = None
+        # sticky floors for the snapshot's STATIC jit fields: search_steps /
+        # depth may shrink after a refit, but serving the larger value is
+        # still correct (extra bounded-search/traversal trips no-op) and
+        # keeps the jit signature stable across republishes
+        self._steps_floor = 0
+        self._depth_floor = 0
+        # sharded backend caches: jitted steps per (relation, cap, budget,
+        # compaction); device placement (replicated model snapshot + sharded
+        # record table) per publish
+        self._shard_steps: Dict[Tuple, Any] = {}
+        self._shard_placement: Optional[Tuple] = None   # (publish_id, ...)
+        self._staged_table: Optional[Dict[str, np.ndarray]] = None
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -226,6 +286,7 @@ class SpatialIndex:
         st["snapshot_stale"] = self.snapshot_is_stale()
         st["delta_size"] = self.delta_size()
         st["snapshot_publishes"] = self._publishes
+        st["republish_inflight"] = self._inflight is not None
         return st
 
     # ------------------------------------------------------------ maintenance
@@ -245,6 +306,11 @@ class SpatialIndex:
                 self._tombstones.add(rec)
             # else: the record was never published nor added since the last
             # publish — it cannot appear in snapshot results, nothing to patch
+            if self._inflight is not None and rec < self._inflight.recs:
+                # the PENDING double-buffered snapshot contains this record
+                # (it was live at capture time): remember it so the swap
+                # installs the correct tombstone set
+                self._inflight.tombs_after.add(rec)
         return ok
 
     def delta_size(self) -> int:
@@ -270,8 +336,139 @@ class SpatialIndex:
         return self._snapshot is None or self._snapshot_epoch != self._epoch
 
     def _padded(self, n: int) -> int:
-        q = self.config.pad_quantum
+        return self._bucket(n, self.config.pad_quantum)
+
+    # bucket quanta for the small model tables (pad_quantum > 0): a republish
+    # that grew the tree or the piecewise function keeps the SAME jitted-shape
+    # signature as long as each table stays inside its bucket, so the first
+    # query after an (async) snapshot swap hits the jit cache instead of
+    # paying an XLA recompile
+    _LEAF_QUANTUM = 256
+    _NODE_QUANTUM = 64
+    _CODE_QUANTUM = 256
+    _PW_QUANTUM = 1024
+    _INF_HI = np.int32(1 << 30)   # > any valid 30-bit limb
+
+    @staticmethod
+    def _bucket(n: int, q: int) -> int:
         return n if q <= 0 else max(q, -(-n // q) * q)
+
+    def _pad_snapshot(self, snap: GLINSnapshot) -> GLINSnapshot:
+        """Bucket-pad every snapshot table (``EngineConfig.pad_quantum``
+        disables all of it when 0).
+
+        * slot arrays — padding slots sit past the ``leaf_start`` sentinel,
+          so no probe or candidate window ever reaches them;
+        * leaf tables — padding leaves carry +inf domain bounds (the ±2
+          routing fix-up can never step onto one), empty ``leaf_start`` runs
+          and far-away MBRs;
+        * node tables / child codes — only reachable through ``child_codes``
+          entries of real nodes, so zero padding is inert;
+        * piecewise pieces — +inf ``zmax_end`` (sorts after every real
+          piece) with +inf suffix-min (an augmentation landing there is a
+          no-op by the ``z_less`` take-test).
+        """
+        if self.config.pad_quantum <= 0:
+            return snap
+        reps: dict = {}
+        # static jit fields: sticky-monotonic with generous floors (16 steps
+        # cover a model-error window of 2^16 slots — clipped to the leaf size
+        # anyway — at ~9 extra cheap binary-search gathers per probe).
+        # Shrinking them would change the jit signature for no win; growing
+        # them stays correct (extra bounded-search / traversal trips no-op),
+        # and the floor keeps a republish whose refit grew the model error
+        # from recompiling the query. Read-only here (this runs on the build
+        # thread too); the floors are COMMITTED in _install_snapshot, on the
+        # caller's thread only.
+        steps = max(self._steps_floor, snap.search_steps, 16)
+        depth = max(self._depth_floor, snap.depth, 8)
+        if (steps, depth) != (snap.search_steps, snap.depth):
+            reps.update(search_steps=steps, depth=depth)
+        # slot arrays
+        n = snap.keys_hi.shape[0]
+        pad = self._padded(n) - n
+        if pad:
+            big = jnp.asarray(np.full(pad, (1 << 30) - 1, np.int32))
+            far = jnp.full((pad, 4), 2e30, jnp.float32)  # hits nothing
+            reps.update(
+                keys_hi=jnp.concatenate([snap.keys_hi, big]),
+                keys_lo=jnp.concatenate([snap.keys_lo, big]),
+                recs=jnp.concatenate([snap.recs, jnp.zeros(pad, jnp.int32)]),
+                rec_leaf=jnp.concatenate(
+                    [snap.rec_leaf,
+                     jnp.full(pad, snap.num_leaves - 1, jnp.int32)]),
+                slot_lmbr=jnp.concatenate([snap.slot_lmbr, far]),
+                slot_rmbr=jnp.concatenate([snap.slot_rmbr, far]),
+            )
+        # leaf tables ((L,) and (L+1,) shapes share one bucket). The domain
+        # sentinel dlo[L] (the last leaf's nominal dhi) is REPLACED together
+        # with the pads by a strictly-infinite bound: inserted keys may
+        # legitimately exceed the nominal dhi (the host tree stores them in
+        # the last leaf), and without padding it was the fix-up's clamp to
+        # ``num_leaves - 1`` that kept such probes on the last REAL leaf —
+        # the infinite sentinel reproduces exactly that, so the ±2 routing
+        # fix-up can never step onto a (empty-windowed) pad leaf.
+        L = snap.num_leaves
+        lb = self._bucket(L, self._LEAF_QUANTUM)
+        if lb > L:
+            inf_lo = jnp.full(lb + 1 - L, 1 << 30, jnp.int32)
+            reps.update(
+                leaf_dlo_hi=jnp.concatenate(
+                    [snap.leaf_dlo_hi[:L],
+                     jnp.full(lb + 1 - L, self._INF_HI, jnp.int32)]),
+                leaf_dlo_lo=jnp.concatenate(
+                    [snap.leaf_dlo_lo[:L], inf_lo]),
+                leaf_start=jnp.concatenate(
+                    [snap.leaf_start,
+                     jnp.full(lb - L, snap.leaf_start[-1], jnp.int32)]),
+                leaf_mbr=jnp.concatenate(
+                    [snap.leaf_mbr, jnp.full((lb - L, 4), 2e30,
+                                             jnp.float32)]),
+                leaf_k0_hi=jnp.concatenate(
+                    [snap.leaf_k0_hi, jnp.zeros(lb - L, jnp.int32)]),
+                leaf_k0_lo=jnp.concatenate(
+                    [snap.leaf_k0_lo, jnp.zeros(lb - L, jnp.int32)]),
+                leaf_slope=jnp.concatenate(
+                    [snap.leaf_slope, jnp.zeros(lb - L, jnp.float32)]),
+                leaf_icpt=jnp.concatenate(
+                    [snap.leaf_icpt, jnp.zeros(lb - L, jnp.float32)]),
+            )
+        # node tables + child codes (reachable only via real child_codes)
+        M = snap.node_scale.shape[0]
+        mb = self._bucket(M, self._NODE_QUANTUM)
+        if mb > M:
+            k = mb - M
+            reps.update(
+                node_dlo_hi=jnp.concatenate(
+                    [snap.node_dlo_hi, jnp.zeros(k, jnp.int32)]),
+                node_dlo_lo=jnp.concatenate(
+                    [snap.node_dlo_lo, jnp.zeros(k, jnp.int32)]),
+                node_scale=jnp.concatenate(
+                    [snap.node_scale, jnp.zeros(k, jnp.float32)]),
+                node_fanout=jnp.concatenate(
+                    [snap.node_fanout, jnp.ones(k, jnp.int32)]),
+                node_child_base=jnp.concatenate(
+                    [snap.node_child_base, jnp.zeros(k, jnp.int32)]),
+            )
+        C = snap.child_codes.shape[0]
+        cb = self._bucket(C, self._CODE_QUANTUM)
+        if cb > C:
+            reps["child_codes"] = jnp.concatenate(
+                [snap.child_codes, jnp.zeros(cb - C, jnp.int32)])
+        # piecewise pieces (only when the function exists at all)
+        Pn = snap.pw_zmax_hi.shape[0]
+        pb = self._bucket(Pn, self._PW_QUANTUM) if Pn else 0
+        if pb > Pn:
+            k = pb - Pn
+            inf = jnp.full(k, self._INF_HI, jnp.int32)
+            zero = jnp.zeros(k, jnp.int32)
+            reps.update(
+                pw_zmax_hi=jnp.concatenate([snap.pw_zmax_hi, inf]),
+                pw_zmax_lo=jnp.concatenate([snap.pw_zmax_lo, zero]),
+                pw_sufmin_hi=jnp.concatenate([snap.pw_sufmin_hi, inf]),
+                pw_sufmin_lo=jnp.concatenate([snap.pw_sufmin_lo, zero]),
+            )
+        return dataclasses.replace(snap, **reps) if reps else snap
 
     def snapshot(self) -> GLINSnapshot:
         """The flattened device snapshot at the CURRENT epoch (rebuilds when
@@ -279,38 +476,131 @@ class SpatialIndex:
 
         The slot arrays are bucket-padded (``EngineConfig.pad_quantum``) so an
         insert-only epoch bump usually republishes with UNCHANGED shapes and
-        the jitted query does not recompile. Padding slots sit past the
-        ``leaf_start`` sentinel, so no probe or candidate window ever reaches
-        them; their values are inert.
+        the jitted query does not recompile.
         """
         if self.snapshot_is_stale():
-            snap = snapshot_from_host(self.glin)
-            n = snap.keys_hi.shape[0]
-            pad = self._padded(n) - n
-            if pad:
-                big = np.full(pad, (1 << 30) - 1, np.int32)
-                far = jnp.full((pad, 4), 2e30, jnp.float32)  # hits nothing
-                snap = dataclasses.replace(
-                    snap,
-                    keys_hi=jnp.concatenate([snap.keys_hi, jnp.asarray(big)]),
-                    keys_lo=jnp.concatenate([snap.keys_lo, jnp.asarray(big)]),
-                    recs=jnp.concatenate(
-                        [snap.recs, jnp.zeros(pad, jnp.int32)]),
-                    rec_leaf=jnp.concatenate(
-                        [snap.rec_leaf,
-                         jnp.full(pad, snap.num_leaves - 1, jnp.int32)]),
-                    slot_lmbr=jnp.concatenate([snap.slot_lmbr, far]),
-                    slot_rmbr=jnp.concatenate([snap.slot_rmbr, far]),
-                )
-            self._snapshot = snap
-            self._snapshot_epoch = self._epoch
-            self._snapshot_recs = len(self.glin.gs)
-            self._publishes += 1
-            self._added.clear()
-            self._tombstones.clear()
-            self._dtable = None
-            self._dtable_epoch = -1
+            # a finished double-buffered build may already BE the current
+            # epoch — swap it in instead of rebuilding synchronously
+            self._poll_republish()
+        if self.snapshot_is_stale():
+            cap = snapshot_capture(self.glin)
+            self._install_snapshot(
+                self._pad_snapshot(snapshot_from_capture(cap)), cap,
+                self._epoch, added=set(), tombstones=set())
         return self._snapshot
+
+    def _install_snapshot(self, snap: GLINSnapshot, capture: HostCapture,
+                          epoch: int, added: Set[int],
+                          tombstones: Set[int]) -> None:
+        """Atomically publish ``snap`` as the served snapshot (single caller
+        thread; every dependent field moves together)."""
+        self._snapshot = snap
+        self._snapshot_epoch = epoch
+        self._snapshot_recs = capture.num_records
+        # the capture is only consumed by the sharded placement; without a
+        # mesh, retaining it would pin O(N) dead host copies per publish
+        self._capture = capture if self.config.mesh is not None else None
+        self._publishes += 1
+        self._added = added
+        self._tombstones = tombstones
+        self._dtable = None
+        self._dtable_epoch = -1
+        # any sharded table staged by a (now superseded) async build belongs
+        # to a different capture — serving it would drop post-capture writes
+        self._staged_table = None
+        # commit the static-field floors on the caller's thread (see
+        # _pad_snapshot — the build thread only reads them)
+        self._steps_floor = max(self._steps_floor, snap.search_steps)
+        self._depth_floor = max(self._depth_floor, snap.depth)
+
+    # ------------------------------------------------- async double-buffering
+    @property
+    def serving_generation(self) -> Tuple[int, int]:
+        """Identity of what a query at this instant would serve: the mutation
+        epoch AND the published-snapshot generation. Result caches must key
+        on this (not the epoch alone) so an async snapshot swap — which does
+        not bump the epoch — can never serve a hit computed against the
+        previous snapshot."""
+        return (self._epoch, self._publishes)
+
+    def republish_inflight(self) -> bool:
+        return self._inflight is not None
+
+    def _maintain_async(self) -> None:
+        """Per-query async upkeep: swap in a finished double-buffered build,
+        then kick off a new one when the delta has crossed the republish
+        point. Runs on the caller's thread at the top of :meth:`query`."""
+        self._poll_republish()
+        cfg = self.config
+        if (cfg.async_republish and self._inflight is None
+                and self._snapshot is not None and self.snapshot_is_stale()
+                and self.delta_size() >= max(cfg.refresh_threshold, 1)):
+            self._start_republish()
+
+    def _start_republish(self) -> None:
+        """Capture the host tree NOW (synchronous, cheap) and build the next
+        snapshot + sharded placement on a daemon thread. Queries keep serving
+        the current snapshot + delta until :meth:`_poll_republish` swaps."""
+        capture = snapshot_capture(self.glin)
+        inf = _InflightPublish(capture=capture, epoch=self._epoch,
+                               recs=capture.num_records,
+                               done=threading.Event(), tombs_after=set())
+        shards = self._shard_count() if self._sharded_available() else 0
+
+        def build():
+            try:
+                # serve-first: schedule this thread SCHED_IDLE (it runs only
+                # on cycles the query threads leave idle — Linux applies it
+                # per native TID), falling back to plain niceness. A rebuild
+                # stretching a little is fine; query latency spiking is not.
+                tid = threading.get_native_id()
+                try:
+                    os.sched_setscheduler(tid, os.SCHED_IDLE,
+                                          os.sched_param(0))
+                except (AttributeError, OSError):
+                    os.setpriority(os.PRIO_PROCESS, tid, 10)
+            except (AttributeError, OSError, PermissionError):
+                pass
+            try:
+                snap = snapshot_from_capture(capture)
+                inf.snapshot = self._pad_snapshot(snap)
+                if shards:
+                    from .distributed import shard_arrays_from_capture
+                    inf.table_np = shard_arrays_from_capture(capture, shards)
+            except BaseException as e:   # surfaced on the caller's thread
+                inf.error = e
+            finally:
+                inf.done.set()
+
+        inf.thread = threading.Thread(target=build, daemon=True,
+                                      name="glin-republish")
+        self._inflight = inf
+        inf.thread.start()
+
+    def _poll_republish(self) -> None:
+        """Non-blocking: if the background build finished, swap it in. The
+        swap is epoch-tagged — a synchronous publish that overtook the build
+        (forced rebuild, ``count_candidates``) simply discards it."""
+        inf = self._inflight
+        if inf is None or not inf.done.is_set():
+            return
+        self._inflight = None
+        inf.thread.join()
+        if inf.epoch <= self._snapshot_epoch:
+            return   # a newer (or identical) snapshot is already published —
+            # the build (even a failed one) is superseded and irrelevant
+        if inf.error is not None:
+            raise RuntimeError(
+                "async snapshot republish failed") from inf.error
+        # Post-capture delta: record ids are append-only, so everything
+        # inserted after the capture has id >= capture recs; deletes of
+        # pending-snapshot records were collected in tombs_after.
+        added = {r for r in self._added if r >= inf.recs}
+        self._install_snapshot(inf.snapshot, inf.capture, inf.epoch,
+                               added=added,
+                               tombstones=set(inf.tombs_after))
+        if inf.table_np is not None:
+            self._staged_table = inf.table_np
 
     def _published_snapshot(self) -> GLINSnapshot:
         """The last *published* snapshot, possibly behind the current epoch —
@@ -350,25 +640,116 @@ class SpatialIndex:
             self._payload_key = (n, width)
         return self._payload
 
-    def _compaction(self, base_relation: str) -> str:
+    def _compaction(self, base_relation: str,
+                    budget: Optional[int] = None) -> str:
         """Stage-1 refinement implementation for ``batch_query``: the fused
         Pallas kernel on TPU, the jnp reference elsewhere (interpret-mode
         Pallas is a correctness tool, not a CPU execution path), and the jnp
         reference whenever the relation's MBR prefilter has no static kernel
-        shape (``prefilter_kind == "custom"``)."""
+        shape (``prefilter_kind == "custom"``). ``budget`` is the budget the
+        call will actually use (the overflow ladder grows it past the
+        configured default)."""
         mode = self.config.compaction
         if mode is None:
             mode = "pallas" if jax.default_backend() == "tpu" else "scan"
         if mode == "pallas":
             from repro.kernels.refine import MAX_COMPACT_BUDGET
 
+            b = self.config.exact_budget if budget is None else budget
             if (get_relation(base_relation).prefilter_kind == "custom"
-                    or self.config.exact_budget > MAX_COMPACT_BUDGET):
+                    or b > MAX_COMPACT_BUDGET):
                 # custom MBR prefilters have no static kernel shape, and
                 # budgets past the VMEM bound cannot host the one-hot
                 # scatter block — both take the jnp reference
                 mode = "scan"
         return mode
+
+    # ---------------------------------------------------------------- sharded
+    def _sharded_available(self) -> bool:
+        """A mesh is configured and shaped for the sharded backend (a loud
+        error on a malformed mesh beats silently planning around it)."""
+        mesh = self.config.mesh
+        if mesh is None:
+            return False
+        names = tuple(mesh.axis_names)
+        if "model" not in names or not any(a in ("data", "pod")
+                                           for a in names):
+            raise ValueError(
+                f"EngineConfig.mesh axes {names} unusable: the sharded "
+                "backend needs a 'model' axis (query sharding) and a "
+                "'data' and/or 'pod' axis (record sharding)")
+        return True
+
+    def _shard_count(self) -> int:
+        """Number of record shards (product of the data/pod axis sizes)."""
+        from .distributed import _data_axes
+
+        mesh = self.config.mesh
+        s = 1
+        for a in _data_axes(mesh):
+            s *= mesh.shape[a]
+        return s
+
+    def _sharded_placement(self):
+        """Device placement of the PUBLISHED snapshot for the mesh, built
+        once per publish: the record table range-partitioned over the data
+        axes (slot order, slot-aligned MBR tables) and a model-only snapshot
+        (record-level arrays stripped to 1-element stand-ins — the sharded
+        step never touches them) replicated on every device."""
+        if self._shard_placement is not None \
+                and self._shard_placement[0] == self._publishes:
+            return self._shard_placement[1:]
+        from .distributed import _data_axes, shard_arrays_from_capture
+
+        mesh = self.config.mesh
+        shards = self._shard_count()
+        if self._capture is None:
+            # the mesh was configured AFTER the last publish (captures are
+            # only retained while a mesh is active): re-derive it — from the
+            # live tree when the snapshot is fresh (they are identical), via
+            # a republish otherwise
+            if self.snapshot_is_stale():
+                self.snapshot()
+            else:
+                self._capture = snapshot_capture(self.glin)
+        table_np = self._staged_table
+        self._staged_table = None
+        # a staged table (built by the async swap's background thread) must
+        # describe exactly the published capture's slots — anything else is
+        # rebuilt here (every publish clears stale stagings, so this is just
+        # a belt-and-braces shape check)
+        n = self._capture.keys.shape[0]
+        if table_np is None or table_np["keys_hi"].shape[0] != n + (-n) % shards:
+            table_np = shard_arrays_from_capture(self._capture, shards)
+        tsh = NamedSharding(mesh, P(_data_axes(mesh)))
+        table = {k: jax.device_put(v, tsh) for k, v in table_np.items()}
+        tiny_i = jnp.zeros((1,), jnp.int32)
+        tiny_f = jnp.zeros((1, 4), jnp.float32)
+        model_only = dataclasses.replace(
+            self._snapshot, keys_hi=tiny_i, keys_lo=tiny_i, recs=tiny_i,
+            rec_leaf=tiny_i, slot_lmbr=tiny_f, slot_rmbr=tiny_f)
+        repl = NamedSharding(mesh, P())
+        snap_repl = jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, repl), model_only)
+        # key read AFTER the potential republish above bumped the count —
+        # caching under the pre-publish key would force a rebuilt placement
+        # (and its multi-MB device_put) on the very next query
+        self._shard_placement = (self._publishes, snap_repl, table, shards)
+        return self._shard_placement[1:]
+
+    def _sharded_step(self, base: str, cap: int, budget: int,
+                      compaction: str):
+        key = (base, cap, budget, compaction)
+        fn = self._shard_steps.get(key)
+        if fn is None:
+            from .distributed import build_glin_query_step
+
+            step, in_sh, out_sh = build_glin_query_step(
+                self.config.mesh, base, cap=cap, exact_budget=budget,
+                compaction=compaction)
+            fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            self._shard_steps[key] = fn
+        return fn
 
     def _check_augmentable(self, relation: str, base) -> None:
         """Fail loudly when a relation needs the piecewise augmentation and
@@ -399,6 +780,7 @@ class SpatialIndex:
         self._check_augmentable(batch.relation, base)
         stale = self.snapshot_is_stale()
         delta = self.delta_size()
+        inflight = self._inflight is not None
         # patch viable: a snapshot has been published, the per-query patch
         # work is bounded (delta_patch_max), and the delta has not yet hit
         # the republish point (refresh_threshold)
@@ -418,7 +800,12 @@ class SpatialIndex:
             return QueryPlan("device+delta", "window", rel.name, base.name,
                              self._snapshot is None, reason, delta)
 
-        if batch.collect_stats and batch.backend in ("device", "device+delta"):
+        def sharded(reason, rebuild=False):
+            return QueryPlan("sharded", "window", rel.name, base.name,
+                             rebuild, reason, delta)
+
+        if batch.collect_stats and batch.backend in ("device", "device+delta",
+                                                     "sharded"):
             raise ValueError("collect_stats is host-only; drop it or force "
                              "backend='host'")
         if batch.backend == "host":
@@ -427,6 +814,12 @@ class SpatialIndex:
             return device("forced by caller")
         if batch.backend == "device+delta":
             return patched("forced by caller")
+        if batch.backend == "sharded":
+            if not self._sharded_available():
+                raise ValueError("backend='sharded' requires "
+                                 "EngineConfig.mesh")
+            return sharded("forced by caller",
+                           rebuild=stale and not (patchable or inflight))
         if batch.backend is not None:
             raise ValueError(f"unknown backend {batch.backend!r}")
         if batch.collect_stats:
@@ -436,15 +829,38 @@ class SpatialIndex:
         q = len(batch)
         if q < cfg.device_min_batch:
             return host(f"batch of {q} < device_min_batch={cfg.device_min_batch}")
+        shard_ok = (self._sharded_available()
+                    and self.glin.num_records >= cfg.shard_min_records)
+        nsh = self._shard_count() if shard_ok else 0
         if not stale:
+            if shard_ok:
+                return sharded(f"sharded over {nsh} shards: batch of {q} "
+                               f"windows on {jax.default_backend()} mesh")
             return device(f"batch of {q} windows on {jax.default_backend()}")
+        if inflight and self._snapshot is not None:
+            # double-buffering: the next snapshot is building on the side;
+            # keep serving the published one + delta patch (the patch bound
+            # is waived — the delta stays bounded by write rate x build time)
+            if shard_ok:
+                return sharded(f"sharded over {nsh} shards; async republish "
+                               f"in flight, delta of {delta} patched on top")
+            return patched(f"async republish in flight; serving published "
+                           f"snapshot + delta of {delta}")
         if patchable:
+            if shard_ok:
+                return sharded(f"sharded over {nsh} shards; snapshot stale, "
+                               f"delta of {delta} patched on top")
             return patched(f"snapshot stale; delta of {delta} <= "
                            f"delta_patch_max={cfg.delta_patch_max}: patching "
                            "instead of republishing")
         if q < cfg.stale_rebuild_min_batch:
             return host(f"snapshot stale and batch of {q} < "
                         f"stale_rebuild_min_batch={cfg.stale_rebuild_min_batch}")
+        if shard_ok:
+            verb = ("publishing" if self._snapshot is None
+                    else "republishing")
+            return sharded(f"sharded over {nsh} shards; {verb} for "
+                           f"batch of {q}", rebuild=True)
         if self._snapshot is None:
             return device(f"no published snapshot yet: publishing for "
                           f"batch of {q}")
@@ -468,10 +884,14 @@ class SpatialIndex:
             if kw:
                 raise ValueError(f"{sorted(kw)} must be set on the QueryBatch "
                                  "itself")
+        self._maintain_async()
         plan = self.plan(batch)
         if batch.kind == "knn":
             return self._run_knn(batch, plan)
-        if plan.backend in ("device", "device+delta"):
+        if plan.backend == "sharded":
+            ids = self._run_sharded(batch, plan)
+            stats = None
+        elif plan.backend in ("device", "device+delta"):
             ids = self._run_device(batch, plan)
             stats = None
         else:
@@ -512,9 +932,63 @@ class SpatialIndex:
             ids.append(np.sort(self.glin.query(w, batch.relation, st)))
         return ids, stats
 
+    def _grow_cap(self, cap: int, need: int) -> int:
+        cfg = self.config
+        if cap >= cfg.max_cap or need > cfg.max_cap:
+            raise OverflowError(
+                f"candidate run of {need} exceeded max_cap="
+                f"{cfg.max_cap}; raise EngineConfig.max_cap or "
+                f"narrow the windows")
+        return min(max(cap * 2, 1 << (need - 1).bit_length()), cfg.max_cap)
+
+    def _grow_budget(self, use_budget: int, survivors: int, cap: int) -> int:
+        """The ROADMAP's budget-overflow ladder: the negative-count encoding
+        carries the TRUE survivor count, so the budget grows geometrically
+        straight past it (re-running compaction) and only falls back to the
+        single-stage dense path once the needed budget exceeds
+        ``MAX_COMPACT_BUDGET`` (or the cap — two-stage would no longer shrink
+        anything)."""
+        from repro.kernels.refine import MAX_COMPACT_BUDGET
+
+        target = max(use_budget * 2, 1 << max(survivors - 1, 0).bit_length())
+        if target > MAX_COMPACT_BUDGET or target >= cap:
+            return 0         # ladder exhausted: single-stage dense
+        return target
+
+    def _grow_after_overflow(self, counts: np.ndarray, cap: int,
+                             use_budget: int, budget: int,
+                             snap: GLINSnapshot, wj, base: str,
+                             batch_len: int) -> Tuple[int, int]:
+        """The device-path overflow ladder: given negative-count overflow,
+        return the (cap, budget) for the retry.
+
+        The overflow signal conflates run-length > cap with MBR survivors >
+        exact_budget. A cheap bounds-only probe tells them apart, so we jump
+        straight to a sufficient cap — keeping the LOGICAL ``budget``
+        (a budget the old cap disabled because ``budget >= cap`` comes back
+        into play once the cap outgrows it). When the budget itself
+        overflowed, ``_grow_budget`` takes over."""
+        start, end = batch_query_bounds(snap, wj, relation=base)
+        need = int(np.max(np.asarray(end - start))) if batch_len else 0
+        if need > cap:
+            return self._grow_cap(cap, need), budget
+        if not use_budget:
+            raise AssertionError(
+                "single-stage overflow with run <= cap")  # unreachable
+        survivors = int(-(counts.min()) - 1)
+        return cap, self._grow_budget(use_budget, survivors, cap)
+
+    def _finish_complement(self, rel, ids: List[np.ndarray]
+                           ) -> List[np.ndarray]:
+        if rel.complement_of is None:
+            return ids
+        live = np.nonzero(self.glin._live_mask())[0].astype(np.int64)
+        return [np.setdiff1d(live, r) for r in ids]
+
     def _run_device(self, batch: QueryBatch, plan: QueryPlan) -> List[np.ndarray]:
         cfg = self.config
         rel = get_relation(batch.relation)
+        base = rel.base_name()
         patch = plan.backend == "device+delta"
         # device+delta serves the published snapshot and patches the delta on
         # top; plain device republishes first — either way a query answer
@@ -523,44 +997,86 @@ class SpatialIndex:
         verts, nv, kd, mb = self._device_payload(self._snapshot_recs)
         wj = jnp.asarray(batch.windows.astype(np.float32))
         cap, budget = self._cap, cfg.exact_budget
-        compaction = self._compaction(rel.base_name())
         while True:
             use_budget = budget if 0 < budget < cap else 0
             hits, counts = batch_query(
-                snap, wj, verts, nv, kd, mb, relation=rel.base_name(),
-                cap=cap, exact_budget=use_budget, compaction=compaction)
+                snap, wj, verts, nv, kd, mb, relation=base,
+                cap=cap, exact_budget=use_budget,
+                compaction=self._compaction(base, use_budget or None))
             counts = np.asarray(counts)
             if (counts >= 0).all():
                 self._cap = cap
                 break
-            # The overflow signal conflates run-length > cap with MBR
-            # survivors > exact_budget. A cheap bounds-only probe tells them
-            # apart, so we jump straight to a sufficient cap (keeping the
-            # two-stage budget) and only drop to single-stage when the budget
-            # itself was exceeded.
-            start, end = batch_query_bounds(snap, wj, relation=rel.base_name())
-            need = int(np.max(np.asarray(end - start))) if len(batch) else 0
-            if need > cap:
-                if cap >= cfg.max_cap or need > cfg.max_cap:
-                    raise OverflowError(
-                        f"candidate run of {need} exceeded max_cap="
-                        f"{cfg.max_cap}; raise EngineConfig.max_cap or "
-                        f"narrow the windows")
-                cap = min(max(cap * 2, 1 << (need - 1).bit_length()),
-                          cfg.max_cap)
-            else:
-                if not use_budget:
-                    raise AssertionError(
-                        "single-stage overflow with run <= cap")  # unreachable
-                budget = 0
+            cap, budget = self._grow_after_overflow(
+                counts, cap, use_budget, budget, snap, wj, base, len(batch))
         hits = np.asarray(hits)
         ids = [np.sort(row[row >= 0]).astype(np.int64) for row in hits]
         if patch:
             ids = self._patch_delta(batch, ids)
-        if rel.complement_of is not None:
-            live = np.nonzero(self.glin._live_mask())[0].astype(np.int64)
-            ids = [np.setdiff1d(live, r) for r in ids]
-        return ids
+        return self._finish_complement(rel, ids)
+
+    def _run_sharded(self, batch: QueryBatch, plan: QueryPlan
+                     ) -> List[np.ndarray]:
+        """The mesh backend: the fused probe -> compact -> exact pipeline
+        running per record shard (``core.distributed``), query windows
+        sharded over the model axis. Serves the published snapshot; when it
+        is stale the same tombstone/added delta patch as ``device+delta``
+        restores exactness on top (``plan.rebuild_snapshot`` republishes
+        first instead)."""
+        cfg = self.config
+        rel = get_relation(batch.relation)
+        base = rel.base_name()
+        if plan.rebuild_snapshot:
+            self.snapshot()
+        else:
+            self._published_snapshot()
+        patch = self.snapshot_is_stale()
+        mesh = cfg.mesh
+        q = len(batch)
+        # pad the batch to a model-axis multiple (shard_map divides Q evenly);
+        # padded rows repeat the last window and are sliced off after
+        m = mesh.shape["model"]
+        wins32 = batch.windows.astype(np.float32)
+        qpad = (-q) % m
+        if qpad:
+            wins32 = np.concatenate(
+                [wins32, np.repeat(wins32[-1:], qpad, axis=0)])
+        wj = jnp.asarray(wins32)
+        snap_repl, table, _ = self._sharded_placement()
+        cap, budget = self._cap, cfg.exact_budget
+        while True:
+            use_budget = budget if 0 < budget < cap else 0
+            comp = self._compaction(base, use_budget or None)
+            if comp == "sort":   # legacy argsort baseline: single-device only
+                comp = "scan"
+            step = self._sharded_step(base, cap, use_budget, comp)
+            hits, counts = step(snap_repl, wj, table)
+            counts = np.asarray(counts)
+            if (counts >= 0).all():
+                self._cap = cap
+                break
+            # the step encodes the exact LOCAL need: -(run length)-1 when a
+            # shard's slot run outgrew cap (magnitude > cap), else
+            # -(survivors)-1 for a budget overflow — no global bounds probe,
+            # whose run is a useless overestimate of any one shard's
+            need = int(-(counts.min()) - 1)
+            if use_budget and comp == "pallas":
+                # the kernel scans the full local run (capless): overflow is
+                # ALWAYS the budget, even when survivors exceed cap
+                budget = self._grow_budget(use_budget, need, cap)
+            elif need > cap:
+                cap = self._grow_cap(cap, need)
+            elif not use_budget:
+                raise AssertionError(
+                    "single-stage overflow with run <= cap")  # unreachable
+            else:
+                budget = self._grow_budget(use_budget, need, cap)
+        hits = np.asarray(hits)[:q]               # (Q, shards, K)
+        ids = [np.sort(row[row >= 0]).astype(np.int64)
+               for row in hits.reshape(q, -1)]
+        if patch:
+            ids = self._patch_delta(batch, ids)
+        return self._finish_complement(rel, ids)
 
     def _delta_table(self) -> DeltaTable:
         """The device-resident added-set side table at the current epoch,

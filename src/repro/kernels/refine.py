@@ -305,6 +305,30 @@ def refine_cost(kind: str, q: int, n: int, budget: int = 0,
             "transcendentals": 0}
 
 
+def sharded_refine_cost(q: int, n: int, budget: int, shards: int,
+                        verts: int = 0, bq: int = DEFAULT_BQ,
+                        bn: int = DEFAULT_BN) -> dict:
+    """Per-device cost of the SHARDED compact+refine pipeline
+    (``core.distributed.build_glin_query_step`` with ``exact_budget``).
+
+    Each of ``shards`` devices streams its N/shards slice of the slot-aligned
+    MBR tables through the compact stage, exact-refines its own ``(Q,
+    budget)`` survivor block, and contributes the block + its survivor count
+    to the cross-shard result gather — ``collective_bytes`` models that
+    all-gather of ``(Q, shards, budget+1)`` int32 (the only cross-shard
+    traffic; the dense path moved ``(Q, shards, cap)``)."""
+    n_local = -(-n // max(shards, 1))
+    c = refine_cost("compact", q, n_local, budget, bq=bq, bn=bn)
+    e = refine_cost("exact", q, n_local, budget, verts=verts)
+    return {
+        "flops": c["flops"] + e["flops"],
+        "bytes_accessed": c["bytes_accessed"] + e["bytes_accessed"],
+        "transcendentals": 0,
+        # every device receives the other shards' survivor blocks + counts
+        "collective_bytes": float(q * shards * (budget + 1) * 4),
+    }
+
+
 def _cost_estimate(kind: str, q: int, n: int, budget: int = 0):
     c = refine_cost(kind, q, n, budget)
     return pl.CostEstimate(flops=int(c["flops"]),

@@ -14,6 +14,7 @@ This module is the single source of truth for server classes;
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -79,28 +80,42 @@ class SpatialQueryServer:
     ``device+delta`` backend (snapshot + tombstone/added patch) instead of
     republishing the snapshot per write (``backend_counts`` records the mix).
 
-    **Result cache.** Flushed results are cached per window, keyed on
-    ``(index epoch, window bytes, relation)``: repeated windows (hot map
+    **Result cache.** Flushed results are cached per window, keyed on the
+    facade's **serving generation** — ``(index epoch, snapshot publish
+    count)`` — plus window bytes and relation: repeated windows (hot map
     tiles, dashboard refreshes) are served from the cache without touching
-    the facade. The epoch in the key makes every write an implicit
-    invalidation — a stale entry can never hit — and entries from dead
-    epochs are dropped eagerly. ``backend_counts["cache"]`` counts
-    cache-served queries next to the facade backends; ``cache_hits`` /
-    ``cache_misses`` give the raw telemetry.
+    the facade. The epoch component makes every write an implicit
+    invalidation, and the publish component makes every snapshot swap one
+    too — an async double-buffered republish (``EngineConfig.
+    async_republish``) replaces the served snapshot WITHOUT bumping the
+    epoch, so keying on the epoch alone could serve a hit computed against
+    the previous snapshot. Entries from dead generations are dropped
+    eagerly. ``backend_counts["cache"]`` counts cache-served queries next to
+    the facade backends; ``cache_hits`` / ``cache_misses`` give the raw
+    telemetry.
+
+    ``async_republish=True`` flips the facade's double-buffering on at
+    construction: under a write-heavy stream, snapshot republishes build on
+    a background thread while ``flush``/``query`` keep serving the current
+    snapshot + delta — the query stream never blocks on a rebuild.
     """
 
     CACHE_MAX_ENTRIES = 4096
 
-    def __init__(self, index: SpatialIndex):
+    def __init__(self, index: SpatialIndex,
+                 async_republish: Optional[bool] = None):
         self.index = index
+        if async_republish is not None:
+            index.config = dataclasses.replace(
+                index.config, async_republish=async_republish)
         self._queue: List[Tuple[int, str, np.ndarray]] = []
         self._next_ticket = 0
         self.served_queries = 0
         self.served_batches = 0
         self.write_ops = 0
         self.backend_counts: Dict[str, int] = {}  # plan.backend -> batches
-        self._cache: Dict[Tuple[int, bytes, str], np.ndarray] = {}
-        self._cache_epoch = -1
+        self._cache: Dict[Tuple[Tuple[int, int], bytes, str], np.ndarray] = {}
+        self._cache_gen: Tuple[int, int] = (-1, -1)
         self.cache_hits = 0
         self.cache_misses = 0
 
@@ -108,29 +123,31 @@ class SpatialQueryServer:
         b = res.plan.backend
         self.backend_counts[b] = self.backend_counts.get(b, 0) + 1
 
-    def _cache_lookup(self, epoch: int, w: np.ndarray, relation: str):
+    def _cache_lookup(self, gen: Tuple[int, int], w: np.ndarray,
+                      relation: str):
         """Return a writable copy of the cached hit ids for a window, or
-        None. A write bumps the facade epoch, so stale entries never match;
-        the whole cache is dropped when the epoch moves (dead keys can never
-        hit again). Hits are copies so callers get the same mutable-array
-        contract on hits and misses alike."""
-        if self._cache_epoch != epoch:
+        None. A write bumps the epoch and a snapshot swap bumps the publish
+        count, so stale entries never match; the whole cache is dropped when
+        the serving generation moves (dead keys can never hit again). Hits
+        are copies so callers get the same mutable-array contract on hits
+        and misses alike."""
+        if self._cache_gen != gen:
             self._cache.clear()
-            self._cache_epoch = epoch
-        hit = self._cache.get((epoch, w.tobytes(), relation))
+            self._cache_gen = gen
+        hit = self._cache.get((gen, w.tobytes(), relation))
         return None if hit is None else hit.copy()
 
-    def _cache_store(self, epoch: int, w: np.ndarray, relation: str,
+    def _cache_store(self, gen: Tuple[int, int], w: np.ndarray, relation: str,
                      ids: np.ndarray) -> None:
-        if epoch != self._cache_epoch:
-            return                            # a write landed mid-flush
+        if gen != self._cache_gen or gen != self.index.serving_generation:
+            return         # a write or a snapshot swap landed mid-flush
         if len(self._cache) >= self.CACHE_MAX_ENTRIES:
             self._cache.pop(next(iter(self._cache)))   # FIFO eviction
         # cache a frozen copy, not the array handed to the caller: an
         # in-place mutation by one caller must not poison later hits
         frozen = ids.copy()
         frozen.setflags(write=False)
-        self._cache[(epoch, w.tobytes(), relation)] = frozen
+        self._cache[(gen, w.tobytes(), relation)] = frozen
 
     # ------------------------------------------------------------------ reads
     def submit(self, window: np.ndarray, relation: str = "intersects") -> int:
@@ -144,12 +161,12 @@ class SpatialQueryServer:
     def flush(self) -> Dict[int, np.ndarray]:
         if not self._queue:
             return {}
-        epoch = self.index.epoch
+        gen = self.index.serving_generation
         out: Dict[int, np.ndarray] = {}
         by_rel: Dict[str, List[Tuple[int, np.ndarray]]] = {}
         cached = 0
         for ticket, rel, w in self._queue:
-            hit = self._cache_lookup(epoch, w, rel)
+            hit = self._cache_lookup(gen, w, rel)
             if hit is not None:
                 out[ticket] = hit
                 cached += 1
@@ -162,7 +179,7 @@ class SpatialQueryServer:
             plans.append(res)
             for (ticket, w), ids in zip(items, res):
                 out[ticket] = ids
-                self._cache_store(epoch, w, rel, ids)
+                self._cache_store(gen, w, rel, ids)
         # commit counters and drop the queue only once every group succeeded
         # — an exception above (e.g. device OverflowError) leaves all tickets
         # retryable WITHOUT having skewed the telemetry

@@ -109,6 +109,114 @@ def test_distributed_glin_query_registry_relations():
     assert "DIST-REL-OK" in out
 
 
+def test_distributed_fused_refinement_matches_dense():
+    """The fused per-shard probe->compact->exact pipeline (exact_budget > 0,
+    both overflow-free and budget-overflow regimes) against the dense
+    per-shard baseline and the brute-force oracle on a (4,2) mesh."""
+    out = run_py("""
+        import numpy as np, jax
+        from repro.utils.compat import make_auto_mesh
+        mesh = make_auto_mesh((4,2), ("data","model"))
+        from repro.core.datasets import generate, make_query_windows
+        from repro.core.index import GLIN, GLINConfig
+        from repro.core.engine import EngineConfig, SpatialIndex
+        from repro.core.distributed import (shard_glin_arrays,
+                                            build_glin_query_step)
+        from repro.core import geometry as geom
+
+        gs = generate("cluster", 6000, seed=2)
+        g = GLIN.build(gs, GLINConfig(piece_limitation=300))
+        snap = SpatialIndex(g, EngineConfig(pad_quantum=0)).snapshot()
+        table_np = shard_glin_arrays(g, 4)
+        wins = make_query_windows(gs, 0.003, 8, seed=5).astype(np.float32)
+
+        def run_step(cap, budget):
+            step, in_sh, out_sh = build_glin_query_step(
+                mesh, "intersects", cap=cap, exact_budget=budget)
+            with mesh:
+                table = {k: jax.device_put(v, in_sh[2][k])
+                         for k, v in table_np.items()}
+                sd = jax.tree_util.tree_map(
+                    lambda x: jax.device_put(x, in_sh[0]), snap)
+                w = jax.device_put(wins, in_sh[1])
+                hits, counts = jax.jit(step, in_shardings=in_sh,
+                                       out_shardings=out_sh)(sd, w, table)
+            return np.asarray(hits), np.asarray(counts)
+
+        dense_h, dense_c = run_step(4096, 0)
+        fused_h, fused_c = run_step(4096, 128)
+        assert (dense_c >= 0).all() and (fused_c >= 0).all()
+        assert fused_h.shape[2] == 128 and dense_h.shape[2] == 4096
+        verts32 = gs.verts.astype(np.float32)
+        for qi in range(len(wins)):
+            got_f = np.sort(fused_h[qi][fused_h[qi] >= 0])
+            got_d = np.sort(dense_h[qi][dense_h[qi] >= 0])
+            ref = np.nonzero(geom.rect_intersects_geoms(
+                wins[qi], verts32, gs.nverts, gs.kinds))[0]
+            assert np.array_equal(got_f, ref), (qi, "fused")
+            assert np.array_equal(got_d, ref), (qi, "dense")
+        # per-shard exact counts agree between the two pipelines
+        assert np.array_equal(dense_c, fused_c)
+
+        # budget overflow: counts encode -(survivors) - 1 per shard
+        tiny_h, tiny_c = run_step(4096, 8)
+        over = tiny_c < 0
+        assert over.any()
+        surv = -tiny_c[over] - 1
+        assert (surv > 8).all()
+        print("DIST-FUSED-OK")
+    """)
+    assert "DIST-FUSED-OK" in out
+
+
+def test_facade_sharded_backend_on_mesh_matches_host():
+    """SpatialIndex.query routes to the sharded step when a mesh is active
+    (EngineConfig.mesh) and matches forced-host results exactly, including
+    through a write burst served as sharded + delta patch."""
+    out = run_py("""
+        import numpy as np, jax
+        from repro.utils.compat import make_auto_mesh
+        mesh = make_auto_mesh((4,2), ("data","model"))
+        from repro.core.datasets import generate, make_query_windows
+        from repro.core.engine import EngineConfig, SpatialIndex
+        from repro.core.geometry import mbrs_of_verts
+        from repro.core.index import GLINConfig
+
+        gs = generate("cluster", 6000, seed=2)
+        gs.verts = gs.verts.astype(np.float32).astype(np.float64)
+        gs.mbrs = mbrs_of_verts(gs.verts, gs.nverts)
+        idx = SpatialIndex.build(gs, GLINConfig(piece_limitation=300),
+                                 EngineConfig(mesh=mesh, shard_min_records=1,
+                                              device_min_batch=1,
+                                              stale_rebuild_min_batch=1))
+        wins = make_query_windows(gs, 0.003, 9, seed=5)  # odd Q: model-pad
+        wins = wins.astype(np.float32).astype(np.float64)
+        res = idx.query(wins, "intersects")
+        assert res.plan.backend == "sharded", res.plan
+        host = idx.query(wins, "intersects", backend="host")
+        for a, b in zip(res, host):
+            np.testing.assert_array_equal(a, b)
+        # write burst: sharded serving of the stale placement + delta patch
+        rng = np.random.default_rng(7)
+        for i in range(6):
+            ang = np.sort(rng.uniform(0, 2*np.pi, 8))
+            c = rng.uniform(0.3, 0.7, 2)
+            v = np.stack([c[0]+3e-3*np.cos(ang), c[1]+3e-3*np.sin(ang)], -1)
+            idx.insert(v.astype(np.float32).astype(np.float64), 8, 0)
+        live = np.nonzero(idx.glin._live_mask())[0]
+        idx.delete(int(live[10]))
+        assert idx.snapshot_is_stale()
+        res = idx.query(wins, "intersects")
+        assert res.plan.backend == "sharded" and "patched" in res.plan.reason
+        host = idx.query(wins, "intersects", backend="host")
+        for a, b in zip(res, host):
+            np.testing.assert_array_equal(a, b)
+        assert idx.snapshot_is_stale()   # no republish happened
+        print("FACADE-SHARDED-OK")
+    """)
+    assert "FACADE-SHARDED-OK" in out
+
+
 def test_sharded_train_step_runs_and_matches_single():
     """FSDP+TP train step on a (4,2) mesh == single-device step (loss)."""
     out = run_py("""
@@ -231,3 +339,32 @@ def test_elastic_checkpoint_restore():
         print("ELASTIC-OK")
     """)
     assert "ELASTIC-OK" in out
+
+
+def test_shard_arrays_pad_keys_preserve_sort_order():
+    """REGRESSION (review): shard padding keys must be maximal in BOTH limbs
+    — a corner record with hi == 2^30-1 and lo > 0 sorts after a (hi, 0)
+    pad, which would break the shard-local binary search's sort invariant."""
+    import numpy as np
+
+    from repro.core.datasets import generate
+    from repro.core.distributed import shard_glin_arrays
+    from repro.core.engine import SpatialIndex
+    from repro.core.index import GLIN, GLINConfig
+
+    gs = generate("uniform", 1001, seed=3)   # odd count: every shard pads
+    g = GLIN.build(gs, GLINConfig(piece_limitation=100))
+    idx = SpatialIndex(g)
+    rng = np.random.default_rng(5)
+    for _ in range(6):   # tiny squares hugging the (1, 1) corner: max limbs
+        c = 1.0 - rng.uniform(1e-6, 3e-6, 2)
+        v = np.array([[c[0], c[1]], [c[0] + 1e-7, c[1]],
+                      [c[0] + 1e-7, c[1] + 1e-7], [c[0], c[1] + 1e-7]])
+        idx.insert(np.clip(v, 0, 1 - 1e-12), 4, 0)
+    for shards in (2, 4, 8):
+        t = shard_glin_arrays(g, shards)
+        hi = t["keys_hi"].astype(np.int64)
+        lo = t["keys_lo"].astype(np.int64)
+        keys = (hi << 30) | lo
+        per = keys.reshape(shards, -1)
+        assert (np.diff(per, axis=1) >= 0).all(), shards

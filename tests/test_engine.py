@@ -740,3 +740,435 @@ def test_server_write_flush_stream_takes_delta_plan():
     assert server.backend_counts.get("device+delta", 0) >= 20
     assert idx._publishes >= 2               # crossed a republish boundary
     assert server.write_ops == 24
+
+
+# ------------------------------------------ budget ladder + survivor counts --
+def test_budget_overflow_encodes_survivor_count():
+    """Two-stage overflow counts carry -(TOTAL MBR survivors) - 1, so the
+    caller can size the budget ladder in one step (all three impls)."""
+    from repro.core.device import batch_query
+
+    idx = _build(n=2500, pl=200)
+    snap = idx.snapshot()
+    payload = idx._device_payload(idx._snapshot_recs)
+    wins = make_query_windows(idx.gs, 0.01, 6, seed=9)
+    wj = jnp.asarray(wins.astype(np.float32))
+    surv = {}
+    for mode in ("sort", "scan", "pallas"):
+        _, c = batch_query(snap, wj, *payload, relation="intersects",
+                           cap=1 << 15, exact_budget=2, compaction=mode)
+        surv[mode] = np.asarray(c)
+    for mode, c in surv.items():
+        over = c < 0
+        assert over.any(), mode               # budget of 2 must overflow
+        np.testing.assert_array_equal((-c[over] - 1),
+                                      _mbr_survivors(idx, wins)[over],
+                                      err_msg=mode)
+
+
+def _mbr_survivors(idx, wins):
+    """Oracle stage-1 survivor counts: slots in the probe run whose record
+    MBR passes the prefilter."""
+    from repro.core.device import batch_query_bounds
+
+    snap = idx.snapshot()
+    wj = jnp.asarray(wins.astype(np.float32))
+    start, end = batch_query_bounds(snap, wj, relation="intersects")
+    start, end = np.asarray(start), np.asarray(end)
+    rmbr = np.asarray(snap.slot_rmbr)
+    out = np.zeros(len(wins), np.int64)
+    for qi, w in enumerate(wins.astype(np.float32)):
+        sl = slice(start[qi], end[qi])
+        ok = geom.mbr_intersects(rmbr[sl], w[None, :])
+        out[qi] = int(np.count_nonzero(ok))
+    return out
+
+
+def test_budget_ladder_grows_geometrically_then_goes_dense():
+    """Survivors past a small exact_budget grow the budget geometrically
+    (re-running compaction) instead of dropping straight to the dense path;
+    only survivors past MAX_COMPACT_BUDGET escalate to dense."""
+    import repro.core.engine as eng
+    from repro.kernels.refine import MAX_COMPACT_BUDGET
+
+    calls = []
+    real_bq = eng.batch_query
+
+    def spy(*a, **kw):
+        calls.append((kw.get("cap"), kw.get("exact_budget")))
+        return real_bq(*a, **kw)
+
+    idx = _build(n=3000, pl=200,
+                 config=EngineConfig(initial_cap=1 << 14, exact_budget=8))
+    try:
+        eng.batch_query = spy
+        # moderately selective: survivors overflow budget=8 but stay well
+        # under MAX_COMPACT_BUDGET -> the ladder must stay two-stage
+        wins = make_query_windows(idx.gs, 0.02, 4, seed=3)
+        res = idx.query(wins, "intersects", backend="device")
+        budgets = [b for _, b in calls]
+        assert budgets[0] == 8
+        assert len(budgets) >= 2 and budgets[-1] > 8, budgets
+        assert all(b > 0 for b in budgets), f"dropped to dense: {budgets}"
+        for i in range(1, len(budgets)):
+            assert budgets[i] >= 2 * budgets[i - 1]   # geometric growth
+        for qi, w in enumerate(wins):
+            np.testing.assert_array_equal(
+                res[qi], _oracle(idx, w.astype(np.float32), "intersects",
+                                 np.float32))
+        # whole-domain covers: survivors ~ N > MAX_COMPACT_BUDGET -> dense
+        calls.clear()
+        whole = np.repeat(np.array([[0.0, 0.0, 1.0, 1.0]]), 2, axis=0)
+        res = idx.query(whole, "covers", backend="device")
+        assert calls[-1][1] == 0, calls       # escalated to single-stage
+        assert all(b <= MAX_COMPACT_BUDGET for _, b in calls)
+        np.testing.assert_array_equal(
+            res[0], _oracle(idx, whole[0].astype(np.float32), "covers",
+                            np.float32))
+    finally:
+        eng.batch_query = real_bq
+
+
+# ------------------------------------------------- async double-buffering ---
+def _slow_build(monkeypatch, delay=0.25):
+    """Slow the background snapshot build down so the in-flight window is
+    reliably observable."""
+    import time
+
+    import repro.core.engine as eng
+
+    real = eng.snapshot_from_capture
+
+    def slow(cap):
+        time.sleep(delay)
+        return real(cap)
+
+    monkeypatch.setattr(eng, "snapshot_from_capture", slow)
+
+
+def _fp32_grid(gs):
+    from repro.core.geometry import mbrs_of_verts
+
+    gs.verts = gs.verts.astype(np.float32).astype(np.float64)
+    gs.mbrs = mbrs_of_verts(gs.verts, gs.nverts)
+    return gs
+
+
+def test_async_republish_streams_exact_across_swap(monkeypatch):
+    """The double-buffer race test: queries streamed WHILE a republish builds
+    on the background thread never see stale or torn results — including
+    writes (and deletes of pending-snapshot records) landing mid-build."""
+    import time
+
+    gs = _fp32_grid(generate("cluster", 4000, seed=21))
+    idx = SpatialIndex.build(
+        gs, GLINConfig(piece_limitation=300),
+        EngineConfig(device_min_batch=1, stale_rebuild_min_batch=1,
+                     delta_patch_max=8, refresh_threshold=8,
+                     async_republish=True))
+    wins = make_query_windows(gs, 0.02, 4, seed=6)
+    wins = wins.astype(np.float32).astype(np.float64)
+    idx.snapshot()
+    idx.query(wins, "intersects")
+    _slow_build(monkeypatch, delay=0.3)
+    rng = np.random.default_rng(23)
+
+    def check_exact():
+        res = idx.query(wins, "intersects")
+        host = idx.query(wins, "intersects", backend="host")
+        for a, b in zip(res, host):
+            np.testing.assert_array_equal(a, b)
+        return res
+
+    # drive the delta over the threshold: the next query starts the build
+    # and keeps serving patched results instead of blocking on it
+    for _ in range(9):
+        idx.insert(_big_polygon(rng, rng.uniform(0.3, 0.7, 2), r=3e-4, nv=6),
+                   6, 0)
+    pubs0 = idx._publishes
+    res = check_exact()
+    # the build is STILL in flight after the query returned: it did not
+    # block on the rebuild (a wall-clock bound here flakes under CI load)
+    assert idx.republish_inflight()
+    assert res.plan.backend == "device+delta"
+    assert "async republish in flight" in res.plan.reason
+
+    # mid-build writes: a record the PENDING snapshot contains is deleted
+    # (it must come out tombstoned after the swap, not resurrect) and new
+    # records are inserted (they must stay in the delta after the swap)
+    victim = int(idx.query(wins, "intersects", backend="host")[0][0])
+    assert idx.delete(victim)
+    late = idx.insert(
+        _big_polygon(rng, np.array([np.mean(wins[0][[0, 2]]),
+                                    np.mean(wins[0][[1, 3]])]), r=2e-3, nv=6),
+        6, 0)
+    served_inflight = 0
+    for _ in range(200):
+        res = check_exact()
+        if idx._publishes > pubs0:
+            break
+        served_inflight += 1
+        time.sleep(0.01)
+    assert idx._publishes == pubs0 + 1, "swap never landed"
+    assert served_inflight >= 1                 # queries ran during the build
+    # post-swap: the delta shrank to just the post-capture writes, and the
+    # targeted records behave
+    assert victim in idx._tombstones and late in idx._added
+    res = check_exact()
+    ids0 = res[0]
+    assert victim not in ids0 and late in ids0
+    # converges to a fresh snapshot once the follow-up republish drains
+    for _ in range(200):
+        if not idx.snapshot_is_stale() and not idx.republish_inflight():
+            break
+        check_exact()
+        time.sleep(0.01)
+
+
+def test_async_republish_discarded_by_sync_publish(monkeypatch):
+    """A forced synchronous publish (count_candidates, forced device) that
+    overtakes the in-flight build wins: the stale pending snapshot is
+    discarded by the epoch guard, never swapped in."""
+    import time
+
+    gs = _fp32_grid(generate("cluster", 2000, seed=29))
+    idx = SpatialIndex.build(
+        gs, GLINConfig(piece_limitation=200),
+        EngineConfig(device_min_batch=1, stale_rebuild_min_batch=1,
+                     delta_patch_max=4, refresh_threshold=4,
+                     async_republish=True))
+    wins = make_query_windows(gs, 0.02, 4, seed=6)
+    wins = wins.astype(np.float32).astype(np.float64)
+    idx.snapshot()
+    _slow_build(monkeypatch, delay=0.3)
+    rng = np.random.default_rng(31)
+    for _ in range(5):
+        idx.insert(_big_polygon(rng, rng.uniform(0.3, 0.7, 2), r=3e-4, nv=6),
+                   6, 0)
+    idx.query(wins, "intersects")
+    assert idx.republish_inflight()
+    inflight_epoch = idx._inflight.epoch
+    idx.insert(_big_polygon(rng, rng.uniform(0.3, 0.7, 2), r=3e-4, nv=6),
+               6, 0)
+    snap = idx.snapshot()                      # sync publish at a NEWER epoch
+    pubs = idx._publishes
+    time.sleep(0.5)                            # let the stale build finish
+    idx.query(wins, "intersects")              # poll point
+    assert idx._publishes == pubs              # discarded, not swapped
+    assert idx._snapshot is snap
+    assert idx._snapshot_epoch > inflight_epoch
+    res = idx.query(wins, "intersects")
+    host = idx.query(wins, "intersects", backend="host")
+    for a, b in zip(res, host):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_serving_generation_moves_on_write_and_publish():
+    idx = _build(n=1500, config=EngineConfig(device_min_batch=1))
+    g0 = idx.serving_generation
+    idx.snapshot()
+    g1 = idx.serving_generation
+    assert g1 != g0
+    rng = np.random.default_rng(3)
+    idx.insert(_big_polygon(rng, np.array([0.5, 0.5]), r=1e-3), 10, 0)
+    assert idx.serving_generation != g1
+
+
+def test_server_cache_invalidated_by_snapshot_swap(monkeypatch):
+    """The result cache keys on the SERVED snapshot identity: an async swap
+    (which does not bump the epoch) must stop the old entries from hitting."""
+    import time
+
+    from repro.serve.server import SpatialQueryServer
+
+    gs = _fp32_grid(generate("cluster", 2000, seed=37))
+    idx = SpatialIndex.build(
+        gs, GLINConfig(piece_limitation=200),
+        EngineConfig(device_min_batch=1, stale_rebuild_min_batch=1,
+                     delta_patch_max=4, refresh_threshold=4))
+    server = SpatialQueryServer(idx, async_republish=True)
+    assert idx.config.async_republish
+    wins = make_query_windows(gs, 0.02, 3, seed=6)
+    wins = wins.astype(np.float32).astype(np.float64)
+    idx.snapshot()
+    rng = np.random.default_rng(39)
+    _slow_build(monkeypatch, delay=0.2)
+    for _ in range(5):
+        server.insert(_big_polygon(rng, rng.uniform(0.3, 0.7, 2), r=3e-4,
+                                   nv=6), 6, 0)
+    t1 = [server.submit(w, "intersects") for w in wins]
+    out1 = server.flush()                     # starts the build, caches at
+    gen1 = idx.serving_generation             # generation (epoch, publishes)
+    assert idx.republish_inflight()
+    # identical resubmission pre-swap: pure cache hits
+    t2 = [server.submit(w, "intersects") for w in wins]
+    out2 = server.flush()
+    assert server.cache_hits == len(wins)
+    for a, b in zip(t1, t2):
+        np.testing.assert_array_equal(out1[a], out2[b])
+    # wait for the swap (no writes: the epoch does NOT move)
+    deadline = time.time() + 5
+    while idx.republish_inflight() or idx.snapshot_is_stale():
+        assert time.time() < deadline, "swap never landed"
+        time.sleep(0.02)
+        idx.query(wins[:1], "intersects")     # poll point (host-planned)
+    assert idx.serving_generation[0] == gen1[0]       # same epoch ...
+    assert idx.serving_generation[1] == gen1[1] + 1   # ... new snapshot
+    hits0 = server.cache_hits
+    t3 = [server.submit(w, "intersects") for w in wins]
+    out3 = server.flush()                     # generation moved: cache MISS
+    assert server.cache_hits == hits0
+    for a, b in zip(t1, t3):                  # swap is invisible in content
+        np.testing.assert_array_equal(out1[a], out3[b])
+
+
+def test_forced_sharded_backend_requires_mesh():
+    idx = _build(n=1000)
+    wins = make_query_windows(idx.gs, 0.01, 4, seed=2)
+    with pytest.raises(ValueError, match="requires EngineConfig.mesh"):
+        idx.plan(QueryBatch.window(wins, "intersects", backend="sharded"))
+
+
+def test_plan_reason_sharded_branches():
+    """The sharded planner branches: fresh, stale+patched, async-inflight,
+    republishing, and the shard_min_records / device_min_batch gates."""
+    from repro.utils.compat import make_auto_mesh
+
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
+    cfg = EngineConfig(mesh=mesh, shard_min_records=1, device_min_batch=4,
+                       stale_rebuild_min_batch=8, delta_patch_max=2,
+                       refresh_threshold=2)
+    idx = _build(n=1000, pl=100, config=cfg)
+    one = make_query_windows(idx.gs, 0.01, 1, seed=2)
+    big = np.repeat(one, 8, axis=0)
+    rng = np.random.default_rng(43)
+
+    p = idx.plan(QueryBatch.window(big, "intersects", backend="sharded"))
+    assert p.backend == "sharded" and p.reason == "forced by caller"
+    p = idx.plan(one, "intersects")
+    assert p.backend == "host" and "device_min_batch" in p.reason
+    p = idx.plan(big, "intersects")           # nothing published yet
+    assert p.backend == "sharded" and "publishing" in p.reason
+    assert p.rebuild_snapshot
+    idx.snapshot()
+    p = idx.plan(big, "intersects")
+    assert p.backend == "sharded" and "windows on" in p.reason
+    assert not p.rebuild_snapshot
+    idx.insert(_big_polygon(rng, np.array([0.5, 0.5]), r=1e-3), 10, 0)
+    p = idx.plan(big, "intersects")
+    assert p.backend == "sharded" and "patched on top" in p.reason
+    idx.insert(_big_polygon(rng, np.array([0.5, 0.5]), r=1e-3), 10, 0)
+    p = idx.plan(big, "intersects")           # delta >= refresh_threshold
+    assert p.backend == "sharded" and "republishing" in p.reason
+    assert p.rebuild_snapshot
+    p = idx.plan(np.repeat(one, 5, axis=0), "intersects")
+    assert p.backend == "host" and "stale_rebuild_min_batch" in p.reason
+    # below shard_min_records the single-device device path wins
+    small = SpatialIndex(idx.glin, EngineConfig(mesh=mesh,
+                                                shard_min_records=1 << 20))
+    small.snapshot()
+    p = small.plan(np.repeat(one, 32, axis=0), "intersects")
+    assert p.backend == "device"
+
+
+def test_plan_reason_sharded_async_inflight(monkeypatch):
+    """The sharded + async-republish-in-flight branch: the mesh keeps
+    serving the published placement + delta while the build runs."""
+    from repro.utils.compat import make_auto_mesh
+
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
+    gs = _fp32_grid(generate("cluster", 2000, seed=61))
+    idx = SpatialIndex.build(
+        gs, GLINConfig(piece_limitation=200),
+        EngineConfig(mesh=mesh, shard_min_records=1, device_min_batch=1,
+                     stale_rebuild_min_batch=1, delta_patch_max=4,
+                     refresh_threshold=4, async_republish=True))
+    wins = make_query_windows(gs, 0.02, 4, seed=6)
+    wins = wins.astype(np.float32).astype(np.float64)
+    idx.snapshot()
+    _slow_build(monkeypatch, delay=0.3)
+    rng = np.random.default_rng(67)
+    for _ in range(5):
+        idx.insert(_big_polygon(rng, rng.uniform(0.3, 0.7, 2), r=3e-4, nv=6),
+                   6, 0)
+    res = idx.query(wins, "intersects")      # starts the build, serves patched
+    assert idx.republish_inflight()
+    assert res.plan.backend == "sharded"
+    assert "async republish in flight" in res.plan.reason
+    host = idx.query(wins, "intersects", backend="host")
+    for a, b in zip(res, host):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_sync_publish_discards_staged_sharded_table(monkeypatch):
+    """REGRESSION (review): an async swap stages its sharded table; when a
+    synchronous republish immediately follows (post-capture write + forced
+    rebuild), the staged table describes the OLD capture and must not be
+    served — post-capture records would silently vanish from sharded
+    results."""
+    import time
+
+    from repro.utils.compat import make_auto_mesh
+
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
+    gs = _fp32_grid(generate("cluster", 2000, seed=71))
+    idx = SpatialIndex.build(
+        gs, GLINConfig(piece_limitation=200),
+        EngineConfig(mesh=mesh, shard_min_records=1, device_min_batch=1,
+                     stale_rebuild_min_batch=1, delta_patch_max=4,
+                     refresh_threshold=4, async_republish=True))
+    wins = make_query_windows(gs, 0.02, 4, seed=6)
+    wins = wins.astype(np.float32).astype(np.float64)
+    idx.snapshot()
+    rng = np.random.default_rng(73)
+    for _ in range(5):
+        idx.insert(_big_polygon(rng, rng.uniform(0.3, 0.7, 2), r=3e-4, nv=6),
+                   6, 0)
+    idx.query(wins, "intersects")            # starts the async build
+    deadline = time.time() + 5
+    while not idx._inflight.done.is_set():   # let it finish UN-polled
+        assert time.time() < deadline
+        time.sleep(0.01)
+    # a post-capture record inside window 0, then a synchronous republish
+    c = np.array([np.mean(wins[0][[0, 2]]), np.mean(wins[0][[1, 3]])])
+    late = idx.insert(
+        _big_polygon(rng, c, r=2e-3, nv=6).astype(np.float32)
+        .astype(np.float64), 6, 0)
+    idx.snapshot()                           # polls (swap), then sync publish
+    assert not idx.snapshot_is_stale()
+    res = idx.query(wins, "intersects")
+    assert res.plan.backend == "sharded"
+    assert late in res[0]                    # the staged table was NOT served
+    host = idx.query(wins, "intersects", backend="host")
+    for a, b in zip(res, host):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_cap_growth_reenables_configured_budget():
+    """REGRESSION (review): a budget >= the initial cap is dormant (dense);
+    once the overflow ladder grows the cap past it, the configured two-stage
+    budget must come back into play instead of staying dense forever."""
+    import repro.core.engine as eng
+
+    calls = []
+    real_bq = eng.batch_query
+
+    def spy(*a, **kw):
+        calls.append((kw.get("cap"), kw.get("exact_budget")))
+        return real_bq(*a, **kw)
+
+    idx = _build(n=3000, pl=200,
+                 config=EngineConfig(initial_cap=256, exact_budget=512,
+                                     max_cap=1 << 15))
+    wins = make_query_windows(idx.gs, 0.05, 4, seed=3)  # runs overflow 256
+    try:
+        eng.batch_query = spy
+        res = idx.query(wins, "intersects", backend="device")
+    finally:
+        eng.batch_query = real_bq
+    assert calls[0] == (256, 0)              # dormant budget: dense
+    assert calls[-1][0] > 512 and calls[-1][1] == 512, calls
+    for qi, w in enumerate(wins):
+        np.testing.assert_array_equal(
+            res[qi], _oracle(idx, w.astype(np.float32), "intersects",
+                             np.float32))

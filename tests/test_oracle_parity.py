@@ -32,11 +32,19 @@ def _index(key="base"):
         return _CACHE[key]
     gs = mixed_store(_N, seed=3)
     # "delta-table" forces the added-set patch through the device-resident
-    # Zmin-sorted DeltaTable (delta_device_min=1) instead of the host loop
+    # Zmin-sorted DeltaTable (delta_device_min=1) instead of the host loop;
+    # "sharded"/"sharded-delta" route through the mesh backend (a (1,1) mesh
+    # exercises the full shard_map machinery on one CPU device)
+    mesh = None
+    if key.startswith("sharded"):
+        from repro.utils.compat import make_auto_mesh
+        mesh = make_auto_mesh((1, 1), ("data", "model"))
     cfg = EngineConfig(device_min_batch=1, stale_rebuild_min_batch=1,
-                       delta_device_min=1 if key == "delta-table" else 64)
+                       delta_device_min=1 if key == "delta-table" else 64,
+                       mesh=mesh, shard_min_records=1,
+                       knn_device_min_batch=1)
     idx = SpatialIndex.build(gs, GLINConfig(piece_limitation=500), cfg)
-    if key in ("delta", "delta-table"):
+    if key in ("delta", "delta-table", "sharded-delta"):
         idx.snapshot()   # publish, then build a delta on top
         rng = np.random.default_rng(11)
         star = _star(rng, (0.4, 0.4), 0.05)
@@ -101,6 +109,49 @@ def test_device_delta_matches_fp32_oracle(relation):
     ])
     _assert_parity(idx, wins, relation, "device+delta")
     assert idx.snapshot_is_stale()   # parity did NOT come from a republish
+
+
+@pytest.mark.parametrize("relation", PARITY_RELATIONS)
+def test_sharded_matches_fp32_oracle(relation):
+    """The mesh backend (fused per-shard probe->compact->exact pipeline)
+    against the oracle for EVERY registry relation, incl. the bound dwithin
+    and the complement (host-finished) disjoint."""
+    idx = _index("sharded")
+    _assert_parity(idx, _windows(idx, 0.02, 6, seed=7), relation, "sharded")
+
+
+@pytest.mark.parametrize("relation", PARITY_RELATIONS)
+def test_sharded_delta_matches_fp32_oracle(relation):
+    """Sharded serving of a STALE snapshot: the published placement is
+    queried per shard and the tombstone/added delta patch restores exactness
+    on top — no republish."""
+    idx = _index("sharded-delta")
+    wins = np.concatenate([
+        _windows(idx, 0.02, 4, seed=9),
+        _fp32([[0.3, 0.3, 0.5, 0.5], [0.58, 0.58, 0.72, 0.72]]),
+    ])
+    _assert_parity(idx, wins, relation, "sharded")
+    assert idx.snapshot_is_stale()   # parity did NOT come from a republish
+
+
+def test_sharded_knn_matches_host():
+    """knn over the mesh: every dwithin radius rung is planned as a sharded
+    batch; results must equal the host knn loop exactly."""
+    from repro.core.engine import QueryBatch
+    from repro.core.index import knn as host_knn
+
+    idx = _index("sharded")
+    rng = np.random.default_rng(5)
+    pts = _fp32(rng.uniform(0.2, 0.8, (8, 2)))
+    res = idx.query(QueryBatch.knn(pts, k=4))
+    assert res.plan.backend == "device" and res.plan.kind == "knn"
+    for i, p in enumerate(pts):
+        hi, hd = host_knn(idx.glin, p, 4)
+        np.testing.assert_array_equal(res.ids[i], np.asarray(hi, np.int64))
+        np.testing.assert_allclose(res.distances[i], hd, rtol=1e-6)
+    # the rung batches themselves took the sharded backend
+    probe = idx.plan(_windows(idx, 0.02, 4, seed=1), "dwithin:0.1")
+    assert probe.backend == "sharded"
 
 
 @pytest.mark.parametrize("relation", PARITY_RELATIONS)
