@@ -1,0 +1,392 @@
+"""Closed-/open-loop serving-tier load harness (the SLO gate for PR 6).
+
+Drives ``repro.serve.SpatialQueryServer`` with an **open-loop Poisson
+arrival process** (latency is measured from the *scheduled* arrival time, so
+a falling-behind server cannot hide queueing delay — no coordinated
+omission) over a mixed relation + write workload at fixed selectivity
+tiers, and reports p50/p99/p999 versus offered QPS plus the **max
+sustainable QPS under a p99 SLO** for two configurations:
+
+* ``serial_flush`` — the pre-serving-tier usage: no dispatcher, every
+  arrival is served by its own submit + ``flush()`` cycle with relation
+  groups executing serially (what a production caller got before the pump
+  loop existed);
+* ``serving``      — the full tier: pump dispatcher with adaptive
+  micro-batching, overlapped relation groups on the worker pool, replica
+  fan-out, admission control.
+
+``--large`` adds a third ``batched_serial`` ablation (pump dispatcher with
+overlap + adaptive gather off) separating the micro-batching win from the
+overlap/replica win.
+
+Both configurations serve EVERY scheduled arrival (overload tiers pay the
+backlog in latency, which is what busts the SLO), and exactness is asserted
+against the host oracle through the serving path after every tier, with
+writes quiesced (coordinates are fp32-clamped so host fp64 and device fp32
+agree bit-for-bit).
+
+The p99 SLO and the offered-QPS ladder are machine-relative: both derive
+from a closed-loop calibration of the serial per-query service time, so the
+gated ``qps_ratio`` (serving max QPS / serial-flush max QPS) is robust
+across runner hardware.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.datasets import generate, make_query_windows
+from repro.core.engine import EngineConfig, SpatialIndex
+from repro.core.geometry import mbrs_of_verts
+from repro.core.index import GLINConfig
+from repro.serve import Rejected, ServerConfig, SpatialQueryServer
+
+from .common import Csv
+
+SELECTIVITIES = (1e-5, 1e-4)
+# Fractions of the calibrated serial peak. The ladder is fine-grained around
+# 1x because the honest single-core win (micro-batch amortisation of the
+# fixed per-flush cost) lands in the 1.2-2x band; the ladder must be able to
+# resolve it. A config that fails two consecutive tiers exits the ladder
+# early -- overload tiers serve every arrival, so they are the expensive ones.
+TIER_FRACS = (0.5, 0.8, 1.0, 1.25, 1.4, 1.6, 2.1, 2.8)
+CHECK_WINDOWS = 8
+
+
+def _fp32_dataset(n: int, seed: int = 0):
+    gs = generate("cluster", n, seed=seed)
+    gs.verts = gs.verts.astype(np.float32).astype(np.float64)
+    gs.mbrs = mbrs_of_verts(gs.verts, gs.nverts)
+    return gs
+
+
+def _polygon(rng, nv: int = 8, r: float = 2e-4) -> np.ndarray:
+    c = rng.uniform(0.15, 0.85, 2)
+    ang = np.sort(rng.uniform(0, 2 * np.pi, nv))
+    v = np.stack([c[0] + r * np.cos(ang), c[1] + r * np.sin(ang)], -1)
+    return v.astype(np.float32).astype(np.float64)
+
+
+def _build_index(n: int) -> SpatialIndex:
+    gs = _fp32_dataset(n)
+    return SpatialIndex.build(
+        gs, GLINConfig(piece_limitation=10_000),
+        EngineConfig(device_min_batch=1, stale_rebuild_min_batch=1,
+                     exact_budget=1024, async_republish=True))
+
+
+def _window_pool(idx: SpatialIndex, per_sel: int) -> np.ndarray:
+    pools = [make_query_windows(idx.gs, sel, per_sel, seed=2 + i)
+             for i, sel in enumerate(SELECTIVITIES)]
+    return np.concatenate(pools).astype(np.float32).astype(np.float64)
+
+
+def _warm(idx: SpatialIndex, pool: np.ndarray, relations, max_batch: int):
+    """Settle the shared adaptive candidate cap over the full window pool
+    FIRST (cap is a static jit arg — compiling a bucket before the cap
+    stops growing would leave a stale compile that recompiles mid-ladder),
+    then compile every (relation, pow2 batch bucket) the run can hit at
+    that settled cap — the ladder measures serving, not XLA compiles."""
+    idx.snapshot()
+    jittered = _tier_windows(pool, np.arange(len(pool)),
+                             np.random.default_rng(99))
+    for rel in relations:
+        for i in range(0, len(pool), 32):
+            idx.query(pool[i:i + 32], rel)
+        for i in range(0, len(jittered), 32):
+            idx.query(jittered[i:i + 32], rel)
+    for rel in relations:
+        q = 1
+        while q <= max_batch:
+            idx.query(pool[:q], rel)
+            q *= 2
+
+
+def _calibrate(server: SpatialQueryServer, pool: np.ndarray, relations,
+               reps: int = 48) -> float:
+    """Closed-loop per-query service time of the serial-flush cycle
+    (seconds): one submit + flush per query, relations round-robin, a write
+    every 8th rep so the result cache cannot flatter the number."""
+    rng = np.random.default_rng(3)
+    times = []
+    for i in range(reps):
+        if i % 8 == 0:
+            server.insert(_polygon(rng), 8, 0)
+        t0 = time.perf_counter()
+        server.submit(pool[i % len(pool)], relations[i % len(relations)])
+        server.flush()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _percentiles(lat: List[float]) -> Dict[str, float]:
+    a = np.asarray(lat)
+    p50, p99, p999 = np.percentile(a, [50, 99, 99.9])
+    return {"p50_ms": 1e3 * float(p50), "p99_ms": 1e3 * float(p99),
+            "p999_ms": 1e3 * float(p999)}
+
+
+def _schedule(qps: float, seconds: float, rng) -> np.ndarray:
+    """Poisson arrival offsets in [0, seconds)."""
+    gaps = rng.exponential(1.0 / qps, size=int(qps * seconds * 1.5) + 8)
+    arr = np.cumsum(gaps)
+    return arr[arr < seconds]
+
+
+def _tier_windows(pool: np.ndarray, picks: np.ndarray, rng) -> np.ndarray:
+    """One UNIQUE window per scheduled arrival: the picked pool window
+    shifted by a tiny per-arrival offset (same delta on both corners, so
+    the box stays valid; fp32-clamped for the exactness protocol). Without
+    this, repeated pool windows hit the server result cache between writes
+    and each tier's capacity depends on where the Poisson stream happened
+    to place the cache-invalidating writes — the ladder then measures
+    cache-hit luck, not the serve path."""
+    d = rng.uniform(-1e-5, 1e-5, size=(len(picks), 2))
+    shift = np.concatenate([d, d], axis=1)
+    return (pool[picks] + shift).astype(np.float32).astype(np.float64)
+
+
+def _exactness_check(server: SpatialQueryServer, idx: SpatialIndex,
+                     wins: np.ndarray, relations, pump: bool) -> None:
+    """Serving-path results vs the host oracle, writes quiesced. Raises on
+    any mismatch (the bench fails loudly rather than reporting a number
+    computed from wrong answers)."""
+    for rel in relations:
+        if pump:
+            tickets = [server.submit(w, rel, tenant="check") for w in wins]
+            outs = [server.result(t, timeout=120.0) for t in tickets]
+        else:
+            tickets = [server.submit(w, rel, tenant="check") for w in wins]
+            flushed = server.flush()
+            outs = [flushed[t] for t in tickets]
+        host = idx.query(wins, rel, backend="host")
+        for q, o in enumerate(outs):
+            if isinstance(o, Rejected):
+                raise AssertionError(f"exactness check shed: {o}")
+            np.testing.assert_array_equal(o, host[q])
+
+
+def _run_tier_serial(server, pool, relations, qps, seconds, write_frac,
+                     rng) -> dict:
+    """Open-loop tier against the no-dispatcher baseline: every arrival is
+    served by its own flush cycle, on schedule when the server keeps up and
+    late (with the lateness measured) when it does not."""
+    sched = _schedule(qps, seconds, rng)
+    picks = rng.integers(len(pool), size=len(sched))
+    wins = _tier_windows(pool, picks, rng)
+    rels = [relations[i % len(relations)] for i in range(len(sched))]
+    writes = rng.random(len(sched)) < write_frac
+    lat: List[float] = []
+    shed = 0
+    t0 = time.perf_counter()
+    for k, dt_arr in enumerate(sched):
+        t_arr = t0 + dt_arr
+        now = time.perf_counter()
+        if t_arr > now:
+            time.sleep(t_arr - now)
+        if writes[k]:
+            server.insert(_polygon(rng), 8, 0)
+        t = server.submit(wins[k], rels[k])
+        out = server.flush()[t]
+        if isinstance(out, Rejected):
+            shed += 1
+        else:
+            lat.append(time.perf_counter() - t_arr)
+    return {"offered_qps": qps, "submitted": len(sched), "shed": shed,
+            "completed": len(lat), "lat": lat,
+            "wall_s": time.perf_counter() - t0}
+
+
+def _run_tier_pump(server, pool, relations, qps, seconds, write_frac,
+                   rng, tenants: int = 2) -> dict:
+    """Open-loop tier against the pump dispatcher: arrivals are submitted on
+    the Poisson schedule, results collected afterwards from the resolution
+    timestamps ``result_at`` records — collector lag cannot inflate (or
+    hide) latency."""
+    sched = _schedule(qps, seconds, rng)
+    picks = rng.integers(len(pool), size=len(sched))
+    wins = _tier_windows(pool, picks, rng)
+    rels = [relations[i % len(relations)] for i in range(len(sched))]
+    writes = rng.random(len(sched)) < write_frac
+    tens = [f"t{i % tenants}" for i in range(len(sched))]
+    t_submit: Dict[int, float] = {}
+    t0 = time.perf_counter()
+    for k, dt_arr in enumerate(sched):
+        t_arr = t0 + dt_arr
+        now = time.perf_counter()
+        if t_arr > now:
+            time.sleep(t_arr - now)
+        if writes[k]:
+            server.insert(_polygon(rng), 8, 0)
+        t_submit[server.submit(wins[k], rels[k], tenant=tens[k])] = t_arr
+    lat: List[float] = []
+    shed = 0
+    for t, t_arr in t_submit.items():
+        val, t_res = server.result_at(t, timeout=120.0)
+        if isinstance(val, Rejected):
+            shed += 1
+        else:
+            lat.append(t_res - t_arr)
+    return {"offered_qps": qps, "submitted": len(sched), "shed": shed,
+            "completed": len(lat), "lat": lat,
+            "wall_s": time.perf_counter() - t0}
+
+
+def _ladder(name: str, server, idx, pool, relations, tiers, seconds,
+            write_frac, slo_s, csv: Csv, pump: bool) -> dict:
+    rng = np.random.default_rng(17)
+    check_wins = pool[:CHECK_WINDOWS]
+    def one_tier(qps: float) -> dict:
+        run = (_run_tier_pump if pump else _run_tier_serial)(
+            server, pool, relations, qps, seconds, write_frac, rng)
+        lat = run.pop("lat")
+        row = dict(run)
+        row.update(_percentiles(lat))
+        ok_p99 = row["p99_ms"] <= 1e3 * slo_s
+        ok_done = row["completed"] >= 0.98 * row["submitted"]
+        row["sustainable"] = bool(ok_p99 and ok_done)
+        return row
+
+    rows = []
+    max_sustainable = 0.0
+    fails = 0
+    for qps in tiers:
+        if fails >= 2:   # two consecutive busted tiers: the knee is found
+            break
+        row = one_tier(qps)
+        if not row["sustainable"]:
+            # one retry on a fresh Poisson draw: a transient host-noise
+            # burst busts a 2s tier's p99 once, genuine overload twice
+            retry = one_tier(qps)
+            if retry["sustainable"] or retry["p99_ms"] < row["p99_ms"]:
+                retry["retried"] = True
+                row = retry
+        if row["sustainable"]:
+            max_sustainable = max(max_sustainable, qps)
+            fails = 0
+        else:
+            fails += 1
+        rows.append(row)
+        csv.emit(f"serving/{name}/qps={qps:.0f}",
+                 1e3 * row["p99_ms"],
+                 f"p50={row['p50_ms']:.1f}ms;p99={row['p99_ms']:.1f}ms;"
+                 f"p999={row['p999_ms']:.1f}ms;shed={row['shed']};"
+                 f"sustainable={row['sustainable']}")
+        # exactness through the serving path, writes quiesced (the queue is
+        # already drained: both tier runners resolve every ticket)
+        _exactness_check(server, idx, check_wins, relations, pump)
+    return {"tiers": rows, "max_sustainable_qps": max_sustainable,
+            "slo_ms": 1e3 * slo_s, "stats": server.stats(), "exact": True}
+
+
+def run(csv: Csv, large: bool = False, quick: bool = False,
+        n: Optional[int] = None, seconds: Optional[float] = None) -> dict:
+    n = n or (100_000 if large else (20_000 if quick else 50_000))
+    seconds = seconds or (2.0 if quick else 4.0)
+    relations = (("intersects", "contains") if quick
+                 else ("intersects", "contains", "dwithin:0.003"))
+    write_frac = 0.01
+    # per-query service time is U-shaped in batch size on CPU (fixed
+    # dispatch amortises out by q=8, then large batches thrash the cache
+    # hierarchy: q=128 costs MORE per query than q=1) — cap micro-batches
+    # at the measured sweet spot instead of letting overload depth pick a
+    # pessimal size
+    max_batch = 32
+
+    # ---- serial-flush baseline: fresh index, no dispatcher -------------
+    idx_a = _build_index(n)
+    pool = _window_pool(idx_a, 128)
+    _warm(idx_a, pool, relations, max_batch)
+    serial = SpatialQueryServer(idx_a, config=ServerConfig(
+        overlap_groups=False, max_workers=1, adaptive_batch=False))
+    unit_s = _calibrate(serial, pool, relations)
+    peak_qps = 1.0 / max(unit_s, 1e-6)
+    # The SLO has to sit in the gap between "keeping up" (p99 bounded by
+    # batching latency plus host-noise bursts — shared runners stall a
+    # busy-spinning process for 100-300ms at a time) and "fallen behind"
+    # (open-loop lateness diverges, p99 shoots past 2x the SLO within a
+    # tier). 20x the calibrated unit cost lands in that gap; a tighter SLO
+    # measures the runner's throttle jitter, not the server.
+    slo_s = max(0.5, 20.0 * unit_s)
+    tiers = [f * peak_qps for f in TIER_FRACS]
+    csv.emit("serving/calibration", 1e6 * unit_s,
+             f"unit={1e3 * unit_s:.2f}ms;peak={peak_qps:.0f}qps;"
+             f"slo={1e3 * slo_s:.0f}ms")
+    res_serial = _ladder("serial_flush", serial, idx_a, pool, relations,
+                         tiers, seconds, write_frac, slo_s, csv, pump=False)
+
+    # ---- the serving tier: pump + micro-batching + overlap + replicas --
+    idx_b = _build_index(n)
+    _warm(idx_b, pool, relations, max_batch)
+    # gather window sized to actually amortise the fixed per-batch cost:
+    # well under the SLO, wide enough that mid-ladder tiers collect
+    # double-digit micro-batches per relation group.
+    serving = SpatialQueryServer(idx_b, config=ServerConfig(
+        replicas=2, overlap_groups=True, adaptive_batch=True,
+        min_batch=16, max_batch=max_batch, gather_window_s=0.04,
+        max_queue=4096, fair_watermark=0.9))
+    serving.start()
+    try:
+        res_serving = _ladder("serving", serving, idx_b, pool, relations,
+                              tiers, seconds, write_frac, slo_s, csv,
+                              pump=True)
+    finally:
+        serving.stop()
+
+    out = {
+        "bench": "serving",
+        "n": n,
+        "relations": list(relations),
+        "selectivities": list(SELECTIVITIES),
+        "write_frac": write_frac,
+        "seconds_per_tier": seconds,
+        "calib_unit_ms": 1e3 * unit_s,
+        "slo_ms": 1e3 * slo_s,
+        "configs": {"serial_flush": res_serial, "serving": res_serving},
+        "exact": True,
+    }
+
+    if large:   # ablation: micro-batching alone, overlap/replicas off
+        idx_c = _build_index(n)
+        _warm(idx_c, pool, relations, max_batch)
+        batched = SpatialQueryServer(idx_c, config=ServerConfig(
+            overlap_groups=False, max_workers=1, adaptive_batch=True,
+            min_batch=8, max_batch=max_batch, gather_window_s=0.01))
+        batched.start()
+        try:
+            out["configs"]["batched_serial"] = _ladder(
+                "batched_serial", batched, idx_c, pool, relations, tiers,
+                seconds, write_frac, slo_s, csv, pump=True)
+        finally:
+            batched.stop()
+
+    smax = res_serving["max_sustainable_qps"]
+    bmax = res_serial["max_sustainable_qps"]
+    out["qps_ratio"] = smax / bmax if bmax > 0 else 0.0
+    csv.emit("serving/qps_ratio", 0.0,
+             f"serving={smax:.0f}qps;serial={bmax:.0f}qps;"
+             f"x{out['qps_ratio']:.2f};exact=True")
+    print("BENCH " + json.dumps(out))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--seconds", type=float, default=None)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--large", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(Csv(), large=args.large, quick=args.quick, n=args.n,
+        seconds=args.seconds)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,9 +6,10 @@ beyond-paper TPU-native path. Roofline artifacts are produced separately by
 launch/dryrun.py and rendered by benchmarks/roofline_report.py.
 
 ``--quick`` is the CI bench-smoke mode: reduced scale, device + maintenance
-+ sharded only, and the machine-readable ``BENCH`` dicts are written to
-``BENCH_device.json`` / ``BENCH_maintenance.json`` / ``BENCH_sharded.json``
-in ``--bench-dir`` (default: the repo root — the committed perf trajectory;
++ sharded + serving only, and the machine-readable ``BENCH`` dicts are
+written to ``BENCH_device.json`` / ``BENCH_maintenance.json`` /
+``BENCH_sharded.json`` / ``BENCH_serving.json`` in ``--bench-dir``
+(default: the repo root — the committed perf trajectory;
 ``benchmarks.check_bench`` compares a fresh run against it).
 """
 from __future__ import annotations
@@ -25,7 +26,8 @@ def main() -> None:
     ap.add_argument("--large", action="store_true",
                     help="paper-scale datasets (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma list: glin,device,maintenance,sharded")
+                    help="comma list: glin,device,maintenance,sharded,"
+                         "serving")
     ap.add_argument("--quick", action="store_true",
                     help="CI bench-smoke: reduced scale, write BENCH_*.json")
     ap.add_argument("--bench-dir", default=str(REPO_ROOT),
@@ -34,8 +36,8 @@ def main() -> None:
 
     from .common import Csv
     csv = Csv()
-    default = ("device,maintenance,sharded" if args.quick
-               else "glin,device,maintenance,sharded")
+    default = ("device,maintenance,sharded,serving" if args.quick
+               else "glin,device,maintenance,sharded,serving")
     which = set((args.only or default).split(","))
     bench_jsons = {}
     print("name,us_per_call,derived")
@@ -60,6 +62,10 @@ def main() -> None:
             bench_jsons["sharded"] = bench_sharded.run(csv, n=20_000, q=48)
         else:
             bench_jsons["sharded"] = bench_sharded.run(csv, large=args.large)
+    if "serving" in which:
+        from . import bench_serving
+        bench_jsons["serving"] = bench_serving.run(csv, large=args.large,
+                                                   quick=args.quick)
     if args.quick:
         out_dir = pathlib.Path(args.bench_dir)
         out_dir.mkdir(parents=True, exist_ok=True)

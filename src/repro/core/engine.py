@@ -117,6 +117,16 @@ class EngineConfig:
                                       # thread while queries keep serving the
                                       # current snapshot + delta patch; the
                                       # finished build swaps in atomically
+    replicas: int = 1                 # independent device placements of the
+                                      # published snapshot + geometry payload
+                                      # for serving fan-out: every publish
+                                      # (sync or async swap) refreshes all of
+                                      # them from the same HostCapture;
+                                      # query(..., replica=r) serves placement
+                                      # r (round-robin over jax.devices(); on
+                                      # a single device the copies alias the
+                                      # primary buffers, costing nothing but
+                                      # enabling concurrent callers)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,15 +235,25 @@ class SpatialIndex:
     mutation epoch tracks the host structure; the device snapshot and device
     geometry payload are invalidated by epoch and rebuilt on demand.
 
-    NOT thread-safe for concurrent callers: one thread issues queries and
-    writes. The ``async_republish`` machinery runs the snapshot REBUILD on a
-    background thread, but all state transitions (start, swap) happen on the
-    caller's thread at query boundaries.
+    Thread-safe for concurrent callers (the serving tier drives it from many
+    worker threads): writes and the query prologue (planning, snapshot
+    install/swap, delta freezing) serialize on one internal lock, while the
+    heavy device compute of the ``device``/``device+delta`` backends runs
+    OUTSIDE it against frozen immutable state — a ``device`` query is exact
+    at the epoch frozen under the lock, and concurrent writers are never
+    blocked by device execution. The host, sharded and knn paths hold the
+    lock for their whole run (they walk the mutable host tree, or own every
+    mesh device anyway). The ``async_republish`` machinery runs the snapshot
+    REBUILD on a background thread; all state transitions (start, swap)
+    happen under the lock at query boundaries.
     """
 
     def __init__(self, glin: GLIN, config: Optional[EngineConfig] = None):
         self.glin = glin
         self.config = config or EngineConfig()
+        # one reentrant lock guards every mutable facade field AND the host
+        # tree (writers mutate leaves in place); device compute runs outside
+        self._lock = threading.RLock()
         self._epoch = 0
         self._snapshot: Optional[GLINSnapshot] = None
         self._snapshot_epoch = -1
@@ -265,6 +285,10 @@ class SpatialIndex:
         self._shard_steps: Dict[Tuple, Any] = {}
         self._shard_placement: Optional[Tuple] = None   # (publish_id, ...)
         self._staged_table: Optional[Dict[str, np.ndarray]] = None
+        # replica placements (config.replicas > 1): per replica r >= 1 a
+        # device_put copy of the published snapshot + payload, keyed on the
+        # (publish, payload) generation it was fanned out from
+        self._replica_places: Dict[int, Tuple] = {}
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -280,38 +304,43 @@ class SpatialIndex:
         return self.glin.num_records
 
     def stats(self) -> dict:
-        st = self.glin.stats()
-        st["epoch"] = self._epoch
-        st["snapshot_epoch"] = self._snapshot_epoch
-        st["snapshot_stale"] = self.snapshot_is_stale()
-        st["delta_size"] = self.delta_size()
-        st["snapshot_publishes"] = self._publishes
-        st["republish_inflight"] = self._inflight is not None
-        return st
+        with self._lock:
+            st = self.glin.stats()
+            st["epoch"] = self._epoch
+            st["snapshot_epoch"] = self._snapshot_epoch
+            st["snapshot_stale"] = self.snapshot_is_stale()
+            st["delta_size"] = self.delta_size()
+            st["snapshot_publishes"] = self._publishes
+            st["republish_inflight"] = self._inflight is not None
+            st["replicas"] = max(1, self.config.replicas)
+            return st
 
     # ------------------------------------------------------------ maintenance
     def insert(self, verts: np.ndarray, nverts: int, kind: int = 0) -> int:
-        rec = self.glin.insert(verts, nverts, kind)
-        self._epoch += 1
-        self._added.add(rec)
-        return rec
+        with self._lock:
+            rec = self.glin.insert(verts, nverts, kind)
+            self._epoch += 1
+            self._added.add(rec)
+            return rec
 
     def delete(self, rec: int) -> bool:
-        ok = self.glin.delete(rec)
-        if ok:
-            self._epoch += 1
-            if rec in self._added:
-                self._added.remove(rec)
-            elif rec < self._snapshot_recs:
-                self._tombstones.add(rec)
-            # else: the record was never published nor added since the last
-            # publish — it cannot appear in snapshot results, nothing to patch
-            if self._inflight is not None and rec < self._inflight.recs:
-                # the PENDING double-buffered snapshot contains this record
-                # (it was live at capture time): remember it so the swap
-                # installs the correct tombstone set
-                self._inflight.tombs_after.add(rec)
-        return ok
+        with self._lock:
+            ok = self.glin.delete(rec)
+            if ok:
+                self._epoch += 1
+                if rec in self._added:
+                    self._added.remove(rec)
+                elif rec < self._snapshot_recs:
+                    self._tombstones.add(rec)
+                # else: the record was never published nor added since the
+                # last publish — it cannot appear in snapshot results,
+                # nothing to patch
+                if self._inflight is not None and rec < self._inflight.recs:
+                    # the PENDING double-buffered snapshot contains this
+                    # record (it was live at capture time): remember it so
+                    # the swap installs the correct tombstone set
+                    self._inflight.tombs_after.add(rec)
+            return ok
 
     def delta_size(self) -> int:
         """Records added plus published records tombstoned since the last
@@ -478,16 +507,17 @@ class SpatialIndex:
         insert-only epoch bump usually republishes with UNCHANGED shapes and
         the jitted query does not recompile.
         """
-        if self.snapshot_is_stale():
-            # a finished double-buffered build may already BE the current
-            # epoch — swap it in instead of rebuilding synchronously
-            self._poll_republish()
-        if self.snapshot_is_stale():
-            cap = snapshot_capture(self.glin)
-            self._install_snapshot(
-                self._pad_snapshot(snapshot_from_capture(cap)), cap,
-                self._epoch, added=set(), tombstones=set())
-        return self._snapshot
+        with self._lock:
+            if self.snapshot_is_stale():
+                # a finished double-buffered build may already BE the current
+                # epoch — swap it in instead of rebuilding synchronously
+                self._poll_republish()
+            if self.snapshot_is_stale():
+                cap = snapshot_capture(self.glin)
+                self._install_snapshot(
+                    self._pad_snapshot(snapshot_from_capture(cap)), cap,
+                    self._epoch, added=set(), tombstones=set())
+            return self._snapshot
 
     def _install_snapshot(self, snap: GLINSnapshot, capture: HostCapture,
                           epoch: int, added: Set[int],
@@ -508,6 +538,9 @@ class SpatialIndex:
         # any sharded table staged by a (now superseded) async build belongs
         # to a different capture — serving it would drop post-capture writes
         self._staged_table = None
+        # replica placements describe the previous snapshot: refresh lazily
+        # (first query routed to each replica fans the new snapshot out)
+        self._replica_places.clear()
         # commit the static-field floors on the caller's thread (see
         # _pad_snapshot — the build thread only reads them)
         self._steps_floor = max(self._steps_floor, snap.search_steps)
@@ -521,7 +554,8 @@ class SpatialIndex:
         on this (not the epoch alone) so an async snapshot swap — which does
         not bump the epoch — can never serve a hit computed against the
         previous snapshot."""
-        return (self._epoch, self._publishes)
+        with self._lock:
+            return (self._epoch, self._publishes)
 
     def republish_inflight(self) -> bool:
         return self._inflight is not None
@@ -639,6 +673,34 @@ class SpatialIndex:
                              jnp.asarray(kinds), jnp.asarray(mbrs))
             self._payload_key = (n, width)
         return self._payload
+
+    def _replica_view(self, rep: int, snap: GLINSnapshot, payload):
+        """Device placement of ``(snap, payload)`` for replica ``rep``.
+
+        Replica 0 is the primary placement (the facade's own fields). Higher
+        replicas are ``device_put`` copies fanned out round-robin over
+        ``jax.devices()``, built once per (publish, payload) generation from
+        the SAME HostCapture-derived snapshot the primary serves — the
+        write/delta stream therefore republishes to every replica at the
+        same swap. On a single-device host every replica serves the primary
+        placement directly: there is no second device to fan out to, and a
+        same-device ``device_put`` would commit the arrays, forking the jit
+        cache into a recompile per (relation, batch bucket) for zero
+        routing benefit. The serving tier's replica routing stays
+        meaningful either way (per-replica inflight/telemetry); only the
+        physical placement collapses. Call under ``self._lock``."""
+        R = max(1, int(self.config.replicas))
+        rep = rep % R if R else 0
+        if rep <= 0 or jax.device_count() <= 1:
+            return snap, payload
+        key = (self._publishes, self._payload_key)
+        ent = self._replica_places.get(rep)
+        if ent is None or ent[0] != key:
+            dev = jax.devices()[rep % jax.device_count()]
+            ent = (key, jax.device_put(snap, dev),
+                   tuple(jax.device_put(p, dev) for p in payload))
+            self._replica_places[rep] = ent
+        return ent[1], ent[2]
 
     def _compaction(self, base_relation: str,
                     budget: Optional[int] = None) -> str:
@@ -870,11 +932,23 @@ class SpatialIndex:
                       f"republishing for batch of {q}")
 
     # ------------------------------------------------------------------ query
-    def query(self, batch, relation: Optional[str] = None, **kw) -> QueryResult:
+    def query(self, batch, relation: Optional[str] = None,
+              replica: Optional[int] = None, **kw) -> QueryResult:
         """THE entry point: one or thousands of queries, any relation or knn.
 
         ``batch`` is a :class:`QueryBatch`, or a bare (4,) / (Q, 4) window
         array (``relation`` then applies, default ``intersects``).
+        ``replica`` routes a device-backend batch to placement ``replica %
+        EngineConfig.replicas`` (the serving tier's least-loaded dispatcher
+        sets it; default: the primary placement).
+
+        Concurrency contract: safe to call from many threads, interleaved
+        with :meth:`insert`/:meth:`delete`. A window batch on the
+        ``device``/``device+delta`` backends is exact at the epoch frozen in
+        its prologue (``result.epoch``) and runs its device compute without
+        blocking writers; host/sharded batches serialize with writers and
+        are exact at the epoch they hold the lock. knn under concurrent
+        writes serves each radius rung at the epoch it froze.
         """
         if not isinstance(batch, QueryBatch):
             batch = QueryBatch.window(batch, relation or "intersects", **kw)
@@ -884,19 +958,24 @@ class SpatialIndex:
             if kw:
                 raise ValueError(f"{sorted(kw)} must be set on the QueryBatch "
                                  "itself")
-        self._maintain_async()
-        plan = self.plan(batch)
+        with self._lock:
+            self._maintain_async()
+            plan = self.plan(batch)
         if batch.kind == "knn":
             return self._run_knn(batch, plan)
         if plan.backend == "sharded":
-            ids = self._run_sharded(batch, plan)
+            with self._lock:
+                ids = self._run_sharded(batch, plan)
+                epoch = self._epoch
             stats = None
         elif plan.backend in ("device", "device+delta"):
-            ids = self._run_device(batch, plan)
+            ids, epoch = self._run_device(batch, plan, replica or 0)
             stats = None
         else:
-            ids, stats = self._run_host(batch)
-        return QueryResult(ids=ids, plan=plan, epoch=self._epoch, stats=stats)
+            with self._lock:
+                ids, stats = self._run_host(batch)
+                epoch = self._epoch
+        return QueryResult(ids=ids, plan=plan, epoch=epoch, stats=stats)
 
     # ------------------------------------------------------------- estimation
     def count_candidates(self, windows, relation: str = "intersects"
@@ -978,25 +1057,57 @@ class SpatialIndex:
         survivors = int(-(counts.min()) - 1)
         return cap, self._grow_budget(use_budget, survivors, cap)
 
-    def _finish_complement(self, rel, ids: List[np.ndarray]
+    def _finish_complement(self, rel, ids: List[np.ndarray],
+                           live: Optional[np.ndarray] = None
                            ) -> List[np.ndarray]:
         if rel.complement_of is None:
             return ids
-        live = np.nonzero(self.glin._live_mask())[0].astype(np.int64)
+        if live is None:
+            live = np.nonzero(self.glin._live_mask())[0].astype(np.int64)
         return [np.setdiff1d(live, r) for r in ids]
 
-    def _run_device(self, batch: QueryBatch, plan: QueryPlan) -> List[np.ndarray]:
+    def _freeze_live(self, rel) -> Optional[np.ndarray]:
+        """Live record ids for complement finishing, frozen under the lock
+        (the live mask walks the mutable host leaves)."""
+        if rel.complement_of is None:
+            return None
+        return np.nonzero(self.glin._live_mask())[0].astype(np.int64)
+
+    def _run_device(self, batch: QueryBatch, plan: QueryPlan,
+                    replica: int = 0):
         cfg = self.config
         rel = get_relation(batch.relation)
         base = rel.base_name()
         patch = plan.backend == "device+delta"
-        # device+delta serves the published snapshot and patches the delta on
-        # top; plain device republishes first — either way a query answer
-        # always reflects the current epoch exactly
-        snap = self._published_snapshot() if patch else self.snapshot()
-        verts, nv, kd, mb = self._device_payload(self._snapshot_recs)
-        wj = jnp.asarray(batch.windows.astype(np.float32))
-        cap, budget = self._cap, cfg.exact_budget
+        with self._lock:
+            # freeze everything the unlocked compute below reads: the served
+            # snapshot + payload (immutable device arrays, fanned out to the
+            # requested replica placement), copies of the delta sets and the
+            # live set — a writer landing after this block changes none of
+            # them, so the answer is exact at the frozen epoch.
+            # device+delta serves the published snapshot and patches the
+            # delta on top; plain device republishes first — either way the
+            # answer reflects the frozen epoch exactly
+            snap = self._published_snapshot() if patch else self.snapshot()
+            payload = self._device_payload(self._snapshot_recs)
+            snap, payload = self._replica_view(replica, snap, payload)
+            frozen = self._freeze_delta() if patch else None
+            live = self._freeze_live(rel)
+            epoch = self._epoch
+            cap, budget = self._cap, cfg.exact_budget
+        verts, nv, kd, mb = payload
+        q = len(batch.windows)
+        wq = batch.windows.astype(np.float32)
+        if cfg.pad_quantum > 0 and q:
+            # bucket the query axis to a power of two: the jitted
+            # batch_query compiles per windows shape, and a serving tier
+            # draining adaptively-sized micro-batches would otherwise
+            # compile once per distinct batch size. Padding rows repeat the
+            # last window and are sliced off below.
+            qb = 1 << (q - 1).bit_length()
+            if qb > q:
+                wq = np.concatenate([wq, np.repeat(wq[-1:], qb - q, 0)])
+        wj = jnp.asarray(wq)
         while True:
             use_budget = budget if 0 < budget < cap else 0
             hits, counts = batch_query(
@@ -1005,15 +1116,17 @@ class SpatialIndex:
                 compaction=self._compaction(base, use_budget or None))
             counts = np.asarray(counts)
             if (counts >= 0).all():
-                self._cap = cap
+                with self._lock:
+                    # max-merge: a concurrent query may have grown it further
+                    self._cap = max(self._cap, cap)
                 break
             cap, budget = self._grow_after_overflow(
                 counts, cap, use_budget, budget, snap, wj, base, len(batch))
-        hits = np.asarray(hits)
+        hits = np.asarray(hits)[:q]
         ids = [np.sort(row[row >= 0]).astype(np.int64) for row in hits]
         if patch:
-            ids = self._patch_delta(batch, ids)
-        return self._finish_complement(rel, ids)
+            ids = self._patch_delta(batch, ids, frozen, snap)
+        return self._finish_complement(rel, ids, live), epoch
 
     def _run_sharded(self, batch: QueryBatch, plan: QueryPlan
                      ) -> List[np.ndarray]:
@@ -1022,7 +1135,8 @@ class SpatialIndex:
         sharded over the model axis. Serves the published snapshot; when it
         is stale the same tombstone/added delta patch as ``device+delta``
         restores exactness on top (``plan.rebuild_snapshot`` republishes
-        first instead)."""
+        first instead). Runs entirely under the facade lock (the mesh owns
+        every device — there is nothing to overlap with)."""
         cfg = self.config
         rel = get_relation(batch.relation)
         base = rel.base_name()
@@ -1053,7 +1167,7 @@ class SpatialIndex:
             hits, counts = step(snap_repl, wj, table)
             counts = np.asarray(counts)
             if (counts >= 0).all():
-                self._cap = cap
+                self._cap = max(self._cap, cap)
                 break
             # the step encodes the exact LOCAL need: -(run length)-1 when a
             # shard's slot run outgrew cap (magnitude > cap), else
@@ -1075,7 +1189,8 @@ class SpatialIndex:
         ids = [np.sort(row[row >= 0]).astype(np.int64)
                for row in hits.reshape(q, -1)]
         if patch:
-            ids = self._patch_delta(batch, ids)
+            ids = self._patch_delta(batch, ids, self._freeze_delta(),
+                                    self._snapshot)
         return self._finish_complement(rel, ids)
 
     def _delta_table(self) -> DeltaTable:
@@ -1092,38 +1207,53 @@ class SpatialIndex:
             self._dtable_epoch = self._epoch
         return self._dtable
 
-    def _patch_delta(self, batch: QueryBatch, ids: List[np.ndarray]
-                     ) -> List[np.ndarray]:
-        """Restore exactness of snapshot results at the current epoch: mask
-        out tombstoned records and check the added set (fp32, to match the
-        device precision contract) against the *base* relation — complement
-        finishing happens after, on top of the patched ids.
-
-        Small added sets are brute-force checked in a host loop; past
-        ``EngineConfig.delta_device_min`` the check runs on device through
-        the Zmin-sorted :class:`DeltaTable` (one vectorized (Q × A) pass,
-        no per-batch host round-trip)."""
+    def _freeze_delta(self) -> Optional[Tuple]:
+        """Copies of the tombstone/added delta plus the geometry slices (or
+        the device :class:`DeltaTable`) the patch step needs, frozen under
+        ``self._lock`` so :meth:`_patch_delta` can run outside it while
+        writers keep mutating the live sets."""
         if not (self._tombstones or self._added):
-            return ids
+            return None
         gs = self.glin.gs
-        base = get_relation(batch.relation).base_name()
         tombs = (np.fromiter(self._tombstones, np.int64,
                              len(self._tombstones))
                  if self._tombstones else None)
         added = np.asarray(sorted(self._added), np.int64)
-        added_hits: Optional[List[np.ndarray]] = None
+        table = av = an = ak = None
         if added.shape[0] >= self.config.delta_device_min:
-            t = self._delta_table()
-            snap = self._published_snapshot()
+            table = self._delta_table()
+        elif added.shape[0]:
+            av = gs.verts[added].astype(np.float32)
+            an, ak = gs.nverts[added], gs.kinds[added]
+        return (tombs, added, table, av, an, ak)
+
+    def _patch_delta(self, batch: QueryBatch, ids: List[np.ndarray],
+                     frozen: Optional[Tuple], snap: GLINSnapshot
+                     ) -> List[np.ndarray]:
+        """Restore exactness of snapshot results at the frozen epoch: mask
+        out tombstoned records and check the added set (fp32, to match the
+        device precision contract) against the *base* relation — complement
+        finishing happens after, on top of the patched ids.
+
+        ``frozen`` is the :meth:`_freeze_delta` capture; ``snap`` supplies
+        the grid parameters of the snapshot being patched (identical across
+        replica placements). Small added sets are brute-force checked in a
+        host loop; past ``EngineConfig.delta_device_min`` the check runs on
+        device through the Zmin-sorted :class:`DeltaTable` (one vectorized
+        (Q × A) pass, no per-batch host round-trip)."""
+        if frozen is None:
+            return ids
+        tombs, added, table, av, an, ak = frozen
+        base = get_relation(batch.relation).base_name()
+        added_hits: Optional[List[np.ndarray]] = None
+        if table is not None:
             wj = jnp.asarray(batch.windows.astype(np.float32))
             ok = np.asarray(batch_check_added(
-                t, wj, base, snap.grid_x0, snap.grid_y0, snap.grid_cell))
-            tbl_ids = np.asarray(t.ids, np.int64)
+                table, wj, base, snap.grid_x0, snap.grid_y0, snap.grid_cell))
+            tbl_ids = np.asarray(table.ids, np.int64)
             added_hits = [np.sort(tbl_ids[row]) for row in ok]
         elif added.shape[0]:
             pred = get_relation(base).predicate
-            av = gs.verts[added].astype(np.float32)
-            an, ak = gs.nverts[added], gs.kinds[added]
             added_hits = []
             for qi in range(len(ids)):
                 w32 = batch.windows[qi].astype(np.float32)
@@ -1143,11 +1273,13 @@ class SpatialIndex:
         if plan.backend == "device":
             return self._run_knn_device(batch, plan)
         ids, dists = [], []
-        for p in batch.points:
-            i, d = _host_knn(self.glin, p, batch.k)
-            ids.append(np.asarray(i, np.int64))
-            dists.append(np.asarray(d))
-        return QueryResult(ids=ids, plan=plan, epoch=self._epoch,
+        with self._lock:      # the host knn walks the mutable tree
+            for p in batch.points:
+                i, d = _host_knn(self.glin, p, batch.k)
+                ids.append(np.asarray(i, np.int64))
+                dists.append(np.asarray(d))
+            epoch = self._epoch
+        return QueryResult(ids=ids, plan=plan, epoch=epoch,
                            distances=dists)
 
     def _run_knn_device(self, batch: QueryBatch, plan: QueryPlan
@@ -1160,11 +1292,11 @@ class SpatialIndex:
         dwithin candidate set is exactly {distance <= r}, so no closer
         geometry can be missing). Radii are snapped to powers of two: each
         rung compiles once and is shared by every knn call."""
-        gs = self.glin.gs
         pts = batch.points
         q, k = len(batch), batch.k
         wins = np.concatenate([pts, pts], axis=1)       # degenerate windows
-        r = initial_knn_radius(self.glin, k)
+        with self._lock:      # the radius estimate reads the mutable tree
+            r = initial_knn_radius(self.glin, k)
         r = float(2.0 ** np.ceil(np.log2(max(r, 1e-9))))
         done = np.zeros(q, bool)
         out_ids: List[Optional[np.ndarray]] = [None] * q
@@ -1189,12 +1321,16 @@ class SpatialIndex:
                 # a straggler's radius outgrew max_cap: the host loop has no
                 # cap — finish the stragglers there instead of failing the
                 # whole batch
-                for i in todo:
-                    hi, hd = _host_knn(self.glin, pts[int(i)], k)
-                    out_ids[int(i)] = np.asarray(hi, np.int64)
-                    out_d[int(i)] = np.asarray(hd)
+                with self._lock:
+                    for i in todo:
+                        hi, hd = _host_knn(self.glin, pts[int(i)], k)
+                        out_ids[int(i)] = np.asarray(hi, np.int64)
+                        out_d[int(i)] = np.asarray(hd)
                 return QueryResult(ids=out_ids, plan=plan, epoch=self._epoch,
                                    distances=out_d)
+            # the store is append-only (arrays are replaced, never mutated):
+            # a fresh reference covers every candidate id the rung returned
+            gs = self.glin.gs
             for ti, i in enumerate(todo):
                 cand = res[ti]
                 if cand.shape[0] < k:

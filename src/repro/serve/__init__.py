@@ -1,4 +1,6 @@
-"""Serving substrate: LM slot server + GLIN spatial-query server."""
-from .server import SlotServer, SpatialQueryServer
+"""Serving tier: the GLIN spatial-query server (replica router, admission
+control, adaptive micro-batching). The LM slot-serving demo lives in
+``repro.launch.serve``."""
+from .server import Rejected, ServerConfig, SpatialQueryServer
 
-__all__ = ["SlotServer", "SpatialQueryServer"]
+__all__ = ["Rejected", "ServerConfig", "SpatialQueryServer"]

@@ -1,0 +1,378 @@
+"""Serving tier: concurrent submit/flush/insert exactness vs the oracle,
+weighted-fair admission control and explicit `Rejected` shedding, overlapped
+group-flush telemetry atomicity, replica fan-out routing, the pump-mode
+serving loop with adaptive micro-batching, and cache safety across async
+snapshot generation swaps."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.datasets import generate, make_query_windows
+from repro.core.engine import EngineConfig, SpatialIndex
+from repro.core.geometry import mbrs_of_verts
+from repro.core.index import GLINConfig
+from repro.core.relations import get_relation
+from repro.serve import Rejected, ServerConfig, SpatialQueryServer
+
+
+def _fp32_index(n=3000, pl=200, seed=0, **eng):
+    """fp32-representable dataset: the host (fp64) and device (fp32) paths
+    agree bit-for-bit, so serving results compare exactly against the host
+    oracle regardless of which backend the planner picks."""
+    gs = generate("cluster", n, seed=seed)
+    gs.verts = gs.verts.astype(np.float32).astype(np.float64)
+    gs.mbrs = mbrs_of_verts(gs.verts, gs.nverts)
+    cfg = EngineConfig(device_min_batch=1, stale_rebuild_min_batch=1, **eng)
+    return SpatialIndex.build(gs, GLINConfig(piece_limitation=pl), config=cfg)
+
+
+def _fp32_windows(idx, sel, k, seed):
+    w = make_query_windows(idx.gs, sel, k, seed=seed)
+    return w.astype(np.float32).astype(np.float64)
+
+
+def _fp32_polygon(rng, c, r=1e-3, nv=8):
+    ang = np.sort(rng.uniform(0, 2 * np.pi, nv))
+    v = np.stack([c[0] + r * np.cos(ang), c[1] + r * np.sin(ang)], -1)
+    return v.astype(np.float32).astype(np.float64)
+
+
+def _drain_inflight(idx, w, relation="intersects"):
+    """Poll until any in-flight async snapshot build lands (queries drive
+    the poll), so no background build thread outlives the test."""
+    deadline = time.perf_counter() + 20.0
+    while idx._inflight is not None and time.perf_counter() < deadline:
+        idx.query(w[None], relation)
+        time.sleep(0.01)
+
+
+# ------------------------------------------------------------- concurrency --
+def test_concurrent_submit_flush_insert_exact_vs_oracle():
+    """Three flusher threads and one writer thread hammer a single server.
+
+    Inserts are append-only, so EVERY served result must equal the base hit
+    set plus a prefix (in insertion order) of the inserted hitters — i.e. be
+    exact at the epoch the engine froze for that batch. A torn read (partial
+    delta, stale cache entry mixed with fresh patch, dropped sibling group)
+    breaks the prefix property."""
+    idx = _fp32_index(n=3000, refresh_threshold=24)
+    server = SpatialQueryServer(idx, async_republish=True)
+    relation = "intersects"
+    wins = _fp32_windows(idx, 2e-3, 6, seed=3)
+    base = [set(ids.tolist())
+            for ids in idx.query(wins, relation, backend="host")]
+    pred = get_relation(relation).predicate
+
+    log = []       # (rec id, hit-per-window flags), in insertion order
+    errors = []
+
+    def writer():
+        rng = np.random.default_rng(11)
+        try:
+            for j in range(48):
+                if j % 2 == 0:   # half the inserts land inside a probe window
+                    w = wins[(j // 2) % len(wins)]
+                    c = np.array([(w[0] + w[2]) / 2, (w[1] + w[3]) / 2])
+                else:
+                    c = rng.uniform(0.05, 0.95, 2)
+                v = _fp32_polygon(rng, c, r=2e-4)
+                v32 = v.astype(np.float32)[None]
+                hits = [bool(np.asarray(pred(
+                    wins[q].astype(np.float32), v32, np.array([8]),
+                    np.array([0])))[0]) for q in range(len(wins))]
+                log.append((server.insert(v, 8, 0), hits))
+                time.sleep(0.002)
+        except BaseException as e:   # noqa: BLE001 — re-raised via `errors`
+            errors.append(e)
+
+    ticket_win = {}
+    collected = {}
+    t_lock = threading.Lock()
+
+    def flusher(tid):
+        try:
+            for _ in range(8):
+                mine = {}
+                for q in range(len(wins)):
+                    mine[server.submit(wins[q], relation,
+                                       tenant=f"t{tid}")] = q
+                with t_lock:
+                    ticket_win.update(mine)
+                out = server.flush()   # may serve other threads' tickets too
+                with t_lock:
+                    collected.update(out)
+                time.sleep(0.001)
+        except BaseException as e:   # noqa: BLE001 — re-raised via `errors`
+            errors.append(e)
+
+    threads = [threading.Thread(target=flusher, args=(i,)) for i in range(3)]
+    wt = threading.Thread(target=writer)
+    for t in threads:
+        t.start()
+    wt.start()
+    for t in threads:
+        t.join()
+    wt.join()
+    assert not errors, errors
+    collected.update(server.flush())   # drain any straggler tickets
+
+    assert set(collected) == set(ticket_win)   # every ticket resolved
+    hitters = [[rec for rec, h in log if h[q]] for q in range(len(wins))]
+    for ticket, ids in collected.items():
+        q = ticket_win[ticket]
+        assert not isinstance(ids, Rejected)
+        s = set(ids.tolist())
+        assert base[q] <= s
+        extra = sorted(s - base[q])     # rec ids are append-only increasing
+        assert extra == hitters[q][:len(extra)]
+
+    final = server.query(wins, relation)
+    hostr = idx.query(wins, relation, backend="host")
+    for q in range(len(wins)):
+        np.testing.assert_array_equal(final[q], hostr[q])
+    st = server.stats()
+    assert st["queue_depth"] == 0
+    assert st["write_ops"] == 48
+    assert st["shed"] == 0
+    _drain_inflight(idx, wins[0], relation)
+
+
+def test_cache_never_serves_across_generation_swap():
+    """Writes bump the epoch and async republishes bump the publish count;
+    a cached result from either dead generation must never resurface."""
+    idx = _fp32_index(n=2000, refresh_threshold=4)
+    server = SpatialQueryServer(idx, async_republish=True)
+    rng = np.random.default_rng(13)
+    relation = "intersects"
+    w = _fp32_windows(idx, 2e-3, 1, seed=12)[0]
+    for j in range(8):
+        c = np.array([(w[0] + w[2]) / 2 + (j - 4) * 1e-5,
+                      (w[1] + w[3]) / 2])
+        rec = server.insert(_fp32_polygon(rng, c, r=2e-4), 8, 0)
+        t = server.submit(w, relation)
+        out = server.flush()[t]
+        assert rec in set(out.tolist())   # a stale cache hit would miss it
+        np.testing.assert_array_equal(
+            out, idx.query(w[None], relation, backend="host")[0])
+        t2 = server.submit(w, relation)
+        np.testing.assert_array_equal(server.flush()[t2], out)
+    # drive flushes until an async republish lands (the publish count moves
+    # without an epoch bump), then the same window must still serve exactly
+    pubs0 = idx.serving_generation[1]
+    deadline = time.perf_counter() + 20.0
+    while idx.serving_generation[1] == pubs0:
+        assert time.perf_counter() < deadline, "async republish never landed"
+        # keep the delta growing so a republish (re-)triggers, then poll
+        server.insert(_fp32_polygon(rng, rng.uniform(0.2, 0.8, 2), r=2e-4),
+                      8, 0)
+        t = server.submit(w, relation)
+        server.flush()
+        time.sleep(0.01)
+    t = server.submit(w, relation)
+    np.testing.assert_array_equal(
+        server.flush()[t], idx.query(w[None], relation, backend="host")[0])
+    assert server.cache_hits > 0   # the cache was actually exercised
+    _drain_inflight(idx, w, relation)
+
+
+# --------------------------------------------------- admission + fairness --
+def test_shed_requests_surface_as_rejected():
+    idx = _fp32_index(n=1500)
+    server = SpatialQueryServer(
+        idx, config=ServerConfig(max_queue=8, fair_watermark=1.0))
+    w = _fp32_windows(idx, 2e-3, 1, seed=5)[0]
+    tickets = [server.submit(w, "intersects") for _ in range(12)]
+    assert server.shed_count == 4
+    out = server.flush()
+    assert set(out) == set(tickets)        # nothing silently dropped
+    rejected = [t for t in tickets if isinstance(out[t], Rejected)]
+    assert rejected == tickets[8:]
+    assert out[rejected[0]].reason.startswith("queue full")
+    assert out[rejected[0]].tenant == "default"
+    ref = idx.query(w[None], "intersects", backend="host")[0]
+    for t in tickets[:8]:
+        np.testing.assert_array_equal(out[t], ref)
+    st = server.stats()
+    assert st["tenants"]["default"] == {
+        "admitted": 8, "rejected": 4, "served": 8}
+    assert st["shed"] == 4 and st["queue_depth"] == 0
+
+
+def test_weighted_fair_admission_protects_trickle_tenant():
+    """Above the fairness watermark a flooding tenant is capped at its
+    weighted share of the queue bound; a trickle tenant keeps being
+    admitted into its reserved slice."""
+    idx = _fp32_index(n=1500)
+    server = SpatialQueryServer(
+        idx, config=ServerConfig(max_queue=16, fair_watermark=0.25))
+    w = _fp32_windows(idx, 2e-3, 1, seed=6)[0]
+    tb0 = server.submit(w, "intersects", tenant="B")   # B is now known
+    ta = [server.submit(w, "intersects", tenant="A") for _ in range(30)]
+    st = server.stats()["tenants"]
+    assert st["A"] == {"admitted": 8, "rejected": 22, "served": 0}
+    tb = [server.submit(w, "intersects", tenant="B") for _ in range(5)]
+    assert server.stats()["tenants"]["B"]["rejected"] == 0
+    out = server.flush()
+    assert set(out) == set([tb0] + ta + tb)
+    assert not any(isinstance(out[t], Rejected) for t in [tb0] + tb)
+    assert sum(isinstance(out[t], Rejected) for t in ta) == 22
+
+
+# ------------------------------------------------------ flush atomicity -----
+def test_overlapped_flush_atomicity_on_group_failure():
+    """One failed relation group: EVERY drained ticket (including the
+    sibling group's completed work) is restored untouched, no counter moves,
+    and a retry serves everything exactly."""
+    idx = _fp32_index(n=1500)
+    server = SpatialQueryServer(idx)     # overlap_groups on by default
+    wins = _fp32_windows(idx, 2e-3, 4, seed=7)
+    real_query = idx.query
+
+    def flaky(batch, relation=None, **kw):
+        if getattr(batch, "relation", relation) == "contains":
+            raise RuntimeError("boom")
+        return real_query(batch, relation, **kw)
+
+    idx.query = flaky
+    try:
+        t1 = [server.submit(w, "intersects") for w in wins]
+        t2 = [server.submit(w, "contains") for w in wins]
+
+        def snap():
+            return (server.served_queries, server.served_batches,
+                    server.cache_hits, server.cache_misses,
+                    dict(server.backend_counts), dict(server.batch_hist),
+                    list(server.replica_queries),
+                    {t: dict(v) for t, v in server._tenant_stats.items()})
+
+        before = snap()
+        with pytest.raises(RuntimeError, match="boom"):
+            server.flush()
+        assert snap() == before                      # telemetry untouched
+        assert server.stats()["queue_depth"] == 8    # every ticket restored
+    finally:
+        idx.query = real_query
+    out = server.flush()
+    assert set(out) == set(t1 + t2)
+    for rel, tickets in (("intersects", t1), ("contains", t2)):
+        hostr = idx.query(wins, rel, backend="host")
+        for q, t in enumerate(tickets):
+            np.testing.assert_array_equal(out[t], hostr[q])
+    assert server.served_queries == 8 and server.served_batches == 2
+
+
+# -------------------------------------------------------------- replicas ----
+def test_replica_fanout_exact_and_counted():
+    idx = _fp32_index(n=3000)
+    server = SpatialQueryServer(idx, config=ServerConfig(replicas=2))
+    assert idx.config.replicas == 2    # the server raised the engine knob
+    for rnd in range(3):
+        wins = _fp32_windows(idx, 2e-3, 4, seed=20 + rnd)
+        tickets = [(server.submit(w, rel), rel, q)
+                   for rel in ("intersects", "contains")
+                   for q, w in enumerate(wins)]
+        out = server.flush()
+        for rel in ("intersects", "contains"):
+            hostr = idx.query(wins, rel, backend="host")
+            for t, r, q in tickets:
+                if r == rel:
+                    np.testing.assert_array_equal(out[t], hostr[q])
+    st = server.stats()
+    assert st["replicas"] == 2
+    assert sum(st["replica_queries"]) == 24
+    assert st["replica_inflight"] == [0, 0]
+    # least-loaded dispatch: two concurrent picks land on distinct replicas
+    with server._lock:
+        picks = {server._pick_replica_locked(), server._pick_replica_locked()}
+        server._replica_inflight = [0, 0]
+    assert picks == {0, 1}
+    # the engine's replica routing itself is exact across placements
+    wins = _fp32_windows(idx, 2e-3, 4, seed=40)
+    r0 = idx.query(wins, "intersects", replica=0)
+    r1 = idx.query(wins, "intersects", replica=1)
+    hostr = idx.query(wins, "intersects", backend="host")
+    for q in range(len(wins)):
+        np.testing.assert_array_equal(r0[q], hostr[q])
+        np.testing.assert_array_equal(r1[q], hostr[q])
+
+
+# ------------------------------------------------------------- pump mode ----
+def test_serving_loop_resolves_tickets_with_adaptive_batching():
+    idx = _fp32_index(n=2000)
+    server = SpatialQueryServer(
+        idx, config=ServerConfig(min_batch=4, gather_window_s=0.01))
+    wins = _fp32_windows(idx, 2e-3, 8, seed=9)
+    hostr = idx.query(wins, "intersects", backend="host")
+    server.start()
+    try:
+        tickets = [(server.submit(wins[i % 8], "intersects"), i % 8)
+                   for i in range(40)]
+        for t, q in tickets:
+            val, ts = server.result_at(t, timeout=60.0)
+            assert not isinstance(val, Rejected)
+            np.testing.assert_array_equal(val, hostr[q])
+            assert ts <= time.perf_counter()
+    finally:
+        server.stop()
+    st = server.stats()
+    assert st["queue_depth"] == 0
+    assert st["served_queries"] == 40
+    assert st["batch_size_hist"]            # micro-batches were recorded
+    assert st["failed_batches"] == 0
+    with pytest.raises(TimeoutError):       # results are consumed exactly once
+        server.result(tickets[0][0], timeout=0.0)
+
+
+def test_pump_mode_sheds_with_rejected_results_under_backpressure():
+    """Gate the single worker: the slot semaphore blocks the pump, queue
+    depth saturates, and admission control sheds — every shed ticket still
+    resolves through result() as an explicit Rejected."""
+    idx = _fp32_index(n=1500)
+    server = SpatialQueryServer(idx, config=ServerConfig(
+        max_queue=4, fair_watermark=1.0, max_workers=1, min_batch=1,
+        adaptive_batch=False))
+    w = _fp32_windows(idx, 2e-3, 1, seed=10)[0]
+    real_query = idx.query
+    gate = threading.Event()
+
+    def slow(batch, relation=None, **kw):
+        gate.wait(10.0)
+        return real_query(batch, relation, **kw)
+
+    idx.query = slow
+    tickets = []
+    try:
+        server.start()
+        deadline = time.perf_counter() + 10.0
+        while server.shed_count == 0:
+            assert time.perf_counter() < deadline, "backpressure never shed"
+            tickets.append(server.submit(w, "intersects"))
+            time.sleep(0.001)
+    finally:
+        gate.set()
+        idx.query = real_query
+        server.stop()
+    outs = [server.result(t, timeout=30.0) for t in tickets]
+    rejected = [o for o in outs if isinstance(o, Rejected)]
+    served = [o for o in outs if not isinstance(o, Rejected)]
+    assert rejected and len(rejected) == server.shed_count
+    assert "fair share" in rejected[0].reason or "queue full" in \
+        rejected[0].reason
+    ref = idx.query(w[None], "intersects", backend="host")[0]
+    for o in served:
+        np.testing.assert_array_equal(o, ref)
+    assert server.stats()["queue_depth"] == 0
+
+
+def test_stop_drains_pending_tickets():
+    idx = _fp32_index(n=1500)
+    server = SpatialQueryServer(idx, config=ServerConfig(min_batch=64))
+    wins = _fp32_windows(idx, 2e-3, 4, seed=14)
+    hostr = idx.query(wins, "intersects", backend="host")
+    server.start()
+    tickets = [server.submit(wins[q], "intersects") for q in range(4)]
+    server.stop()    # must serve what is queued, not strand the waiters
+    for q, t in enumerate(tickets):
+        np.testing.assert_array_equal(server.result(t, timeout=5.0), hostr[q])
