@@ -60,7 +60,7 @@ def refine_pipeline(csv: Csv, n: int, q: int = 128) -> dict:
             gs, GLINConfig(piece_limitation=10_000),
             EngineConfig(initial_cap=REFINE_CAP, exact_budget=REFINE_BUDGET))
         snap = idx.snapshot()
-        verts, nv, kd, mb = idx._device_payload(idx._snapshot_recs)
+        pods, mb = idx._device_payload(idx._snapshot_recs)
         wins = make_query_windows(gs, 0.0001, q, seed=2)
         wins = wins.astype(np.float32).astype(np.float64)
         wj = jnp.asarray(wins.astype(np.float32))
@@ -88,7 +88,7 @@ def refine_pipeline(csv: Csv, n: int, q: int = 128) -> dict:
             for impl in impls:
                 def run(impl=impl, wj=wj, cap=cap):
                     h, c = batch_query(
-                        snap, wj, verts, nv, kd, mb, relation=base,
+                        snap, wj, pods, mb, relation=base,
                         cap=cap, exact_budget=REFINE_BUDGET,
                         compaction=impl)
                     return h.block_until_ready(), c.block_until_ready()

@@ -271,6 +271,46 @@ def concave_refine(csv: Csv, n: int) -> dict:
     return out
 
 
+def storage(csv: Csv, n: int,
+            names: tuple = ("mixed", "cluster", "roads")) -> dict:
+    """Storage-overhead experiment for the CSR vertex-pool store.
+
+    Per dataset: live store bytes in the pooled layout (``gs.nbytes()``) vs
+    what the pre-pool dense ``(N, maxV, 2)`` padding would cost
+    (``gs.dense_nbytes()``), next to the R-Tree / Quad-Tree index structures
+    over the same records. The headline ``storage_ratio`` (dense/pooled on
+    the heavy-tailed ``mixed`` family — where every point used to pay for
+    the widest ring) is gated by ``check_bench --min-storage-ratio``.
+    """
+    import json
+
+    out: dict = {"bench": "storage", "n": n, "datasets": {}}
+    for name in names:
+        gs = dataset(name, n)
+        pooled = gs.nbytes()
+        dense = gs.dense_nbytes()
+        rt = RTree.build(gs)
+        qt = QuadTree.build(gs)
+        row = {
+            "pooled_bytes": pooled,
+            "dense_bytes": dense,
+            "dense_over_pooled": dense / pooled,
+            "rtree_bytes": rt.stats()["index_bytes"],
+            "quadtree_bytes": qt.stats()["index_bytes"],
+            "max_nverts": gs.max_nverts,
+            "mean_nverts": float(gs.nverts.mean()),
+        }
+        out["datasets"][name] = row
+        csv.emit(f"storage/pooled_bytes/{name}", pooled,
+                 f"dense={dense};x{row['dense_over_pooled']:.2f};"
+                 f"maxV={row['max_nverts']};meanV={row['mean_nverts']:.1f}")
+    out["storage_ratio"] = out["datasets"]["mixed"]["dense_over_pooled"]
+    csv.emit("storage/dense_over_pooled/mixed", 0.0,
+             f"x{out['storage_ratio']:.2f}")
+    print("BENCH " + json.dumps(out))
+    return out
+
+
 def run(csv: Csv, large: bool = False) -> None:
     n = scale_n(large)
     tab5_fig6_fig7(csv, n)

@@ -26,6 +26,10 @@ runs on shared runners) — and gate only under ``--strict-latency``
   checks, and a percentile sanity check (p999 present and
   p999 >= p99 >= p50 on every tier of every config — a harness that stops
   reporting the tail would otherwise pass the ratio gate vacuously).
+* ``BENCH_storage.json``  — the CSR vertex-pool store's bytes on the
+  heavy-tailed ``mixed`` dataset staying >= ``--min-storage-ratio`` x
+  smaller than the dense ``(N, maxV, 2)`` padding would cost (size-based,
+  so this one is machine-independent and always hard).
 
 Usage (CI bench-smoke job)::
 
@@ -53,7 +57,8 @@ def check(fresh_dir: pathlib.Path, committed_dir: pathlib.Path,
           min_maint_speedup: float, strict_latency: bool = False,
           min_sharded_speedup: float = 1.2,
           max_republish_p50_ratio: float = 4.0,
-          min_serving_qps_ratio: float = 1.05) -> list:
+          min_serving_qps_ratio: float = 1.05,
+          min_storage_ratio: float = 2.0) -> list:
     errors = []
 
     dev_new = _load(fresh_dir / "BENCH_device.json")
@@ -161,6 +166,23 @@ def check(fresh_dir: pathlib.Path, committed_dir: pathlib.Path,
                     f"serving: {cname}@{row.get('offered_qps', 0):.0f}qps "
                     f"percentiles not monotone (p50={p50:.1f} p99={p99:.1f} "
                     f"p999={p999:.1f}ms)")
+
+    # storage overhead is size-based, hence machine-independent: the pooled
+    # CSR layout must keep beating dense (N, maxV, 2) padding on the
+    # heavy-tailed mixed family by at least the floor, on every tracked
+    # dataset present in the committed baseline
+    st_new = _load(fresh_dir / "BENCH_storage.json")
+    st_old = _load(committed_dir / "BENCH_storage.json")
+    sr = st_new.get("storage_ratio", 0.0)
+    if sr < min_storage_ratio:
+        errors.append(
+            f"storage: dense/pooled ratio on mixed x{sr:.2f} < floor "
+            f"x{min_storage_ratio:g} (committed "
+            f"x{st_old.get('storage_ratio', 0):.2f}; the vertex pool no "
+            "longer pays for itself)")
+    for ds in st_old.get("datasets", {}):
+        if ds not in st_new.get("datasets", {}):
+            errors.append(f"storage: {ds} missing from fresh run")
     return errors
 
 
@@ -193,6 +215,10 @@ def main() -> None:
                          "(machine-relative; ~1.25x on a single-core "
                          "runner from micro-batch amortisation alone, more "
                          "with real overlap parallelism)")
+    ap.add_argument("--min-storage-ratio", type=float, default=2.0,
+                    help="floor for the dense/pooled store-bytes ratio on "
+                         "the heavy-tailed mixed dataset (size-based, "
+                         "machine-independent)")
     ap.add_argument("--strict-latency", action="store_true",
                     help="gate on absolute latency too (same-machine runs)")
     args = ap.parse_args()
@@ -201,7 +227,8 @@ def main() -> None:
                    strict_latency=args.strict_latency,
                    min_sharded_speedup=args.min_sharded_speedup,
                    max_republish_p50_ratio=args.max_republish_p50_ratio,
-                   min_serving_qps_ratio=args.min_serving_qps_ratio)
+                   min_serving_qps_ratio=args.min_serving_qps_ratio,
+                   min_storage_ratio=args.min_storage_ratio)
     for e in errors:
         print(f"REGRESSION {e}")
     if errors:

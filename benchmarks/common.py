@@ -18,7 +18,7 @@ from repro.core.engine import EngineConfig, SpatialIndex
 from repro.core.index import GLIN, GLINConfig
 
 SELECTIVITIES = [0.01, 0.001, 0.0001, 0.00001]  # 1% .. 0.001% of N
-DATASETS = ["cluster", "uniform", "roads", "concave"]
+DATASETS = ["cluster", "uniform", "roads", "concave", "mixed"]
 
 
 @functools.lru_cache(maxsize=16)

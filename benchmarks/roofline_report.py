@@ -12,11 +12,14 @@ import pathlib
 
 ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
 
-# Representative refinement shapes: (queries, slots, exact budget, ring width)
+# Representative refinement shapes: (queries, slots, exact budget, gather
+# width). The exact stage gathers per pow2 width-bucket from the vertex-pool
+# pods, so the width term is the WIDEST SURVIVING bucket (pow2ceil of the
+# ring width), not a store-wide dense padding.
 KERNEL_SHAPES = [
-    (512, 1 << 17, 256, 12),
-    (4096, 1 << 20, 256, 12),
-    (4096, 1 << 24, 512, 12),
+    (512, 1 << 17, 256, 16),
+    (4096, 1 << 20, 256, 16),
+    (4096, 1 << 24, 512, 64),
 ]
 # Mesh sizes for the sharded compact+refine variant (record shards)
 KERNEL_SHARDS = (4, 16)

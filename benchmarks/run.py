@@ -6,9 +6,10 @@ beyond-paper TPU-native path. Roofline artifacts are produced separately by
 launch/dryrun.py and rendered by benchmarks/roofline_report.py.
 
 ``--quick`` is the CI bench-smoke mode: reduced scale, device + maintenance
-+ sharded + serving only, and the machine-readable ``BENCH`` dicts are
-written to ``BENCH_device.json`` / ``BENCH_maintenance.json`` /
-``BENCH_sharded.json`` / ``BENCH_serving.json`` in ``--bench-dir``
++ sharded + serving + storage only, and the machine-readable ``BENCH`` dicts
+are written to ``BENCH_device.json`` / ``BENCH_maintenance.json`` /
+``BENCH_sharded.json`` / ``BENCH_serving.json`` / ``BENCH_storage.json``
+in ``--bench-dir``
 (default: the repo root — the committed perf trajectory;
 ``benchmarks.check_bench`` compares a fresh run against it).
 """
@@ -27,7 +28,7 @@ def main() -> None:
                     help="paper-scale datasets (slow on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma list: glin,device,maintenance,sharded,"
-                         "serving")
+                         "serving,storage")
     ap.add_argument("--quick", action="store_true",
                     help="CI bench-smoke: reduced scale, write BENCH_*.json")
     ap.add_argument("--bench-dir", default=str(REPO_ROOT),
@@ -36,8 +37,8 @@ def main() -> None:
 
     from .common import Csv
     csv = Csv()
-    default = ("device,maintenance,sharded,serving" if args.quick
-               else "glin,device,maintenance,sharded,serving")
+    default = ("device,maintenance,sharded,serving,storage" if args.quick
+               else "glin,device,maintenance,sharded,serving,storage")
     which = set((args.only or default).split(","))
     bench_jsons = {}
     print("name,us_per_call,derived")
@@ -66,6 +67,11 @@ def main() -> None:
         from . import bench_serving
         bench_jsons["serving"] = bench_serving.run(csv, large=args.large,
                                                    quick=args.quick)
+    if "storage" in which:
+        from . import bench_glin
+        n_store = 20_000 if args.quick else (1_000_000 if args.large
+                                             else 120_000)
+        bench_jsons["storage"] = bench_glin.storage(csv, n_store)
     if args.quick:
         out_dir = pathlib.Path(args.bench_dir)
         out_dir.mkdir(parents=True, exist_ok=True)

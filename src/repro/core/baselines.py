@@ -42,7 +42,10 @@ def _refine(gs: GeometrySet, cand: np.ndarray, window: np.ndarray,
     st.checked += int(cand.shape[0])
     if cand.shape[0] == 0:
         return np.empty(0, np.int64)
-    ok = rel.predicate(window, gs.verts[cand], gs.nverts[cand], gs.kinds[cand])
+    # gather only THIS candidate set's rings from the pool, padded to the
+    # set's own widest record — never the store-wide dense block
+    ok = rel.predicate(window, gs.padded(cand), gs.nverts[cand],
+                       gs.kinds[cand])
     return cand[ok]
 
 

@@ -14,14 +14,20 @@ the distributions the paper evaluates:
                   dominated by concave geometry; this family exercises the
                   exact (ray-cast / edge-clip) refinement predicates that the
                   convex generators never stress.
+* ``rings``     — dense boundary rings with exactly ``max_verts`` vertices
+                  (coastline/lake-shore style wide records).
+* ``mixed``     — heavy-tailed vertex-count mix: points + short polylines +
+                  convex polygons + 64-vertex rings in ONE store. This is the
+                  workload where dense ``(N, V, 2)`` padding is pathological
+                  (every point pays for the widest ring) and the vertex pool
+                  pays off.
 
 Every generator is deterministic in its seed and returns a
-:class:`GeometrySet` with padded vertex rings (see core.geometry).
+:class:`GeometrySet` in CSR vertex-pool layout (see the class docstring).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Iterable, Optional
 
 import numpy as np
 
@@ -31,47 +37,322 @@ from .zorder import ZGrid, UNIT
 __all__ = ["GeometrySet", "generate", "make_query_windows", "DATASETS"]
 
 
-@dataclasses.dataclass
 class GeometrySet:
-    """A batch of geometries in struct-of-arrays layout."""
+    """A batch of geometries in CSR vertex-pool layout.
 
-    verts: np.ndarray   # (N, V, 2) float64, padded with last valid vertex
-    nverts: np.ndarray  # (N,) int32
-    kinds: np.ndarray   # (N,) int8 (GeomKind)
-    mbrs: np.ndarray    # (N, 4) float64 [xmin, ymin, xmax, ymax]
-    grid: ZGrid
-    name: str = "synthetic"
+    The source of truth is one flat ``pool`` of ``(total_verts, 2)`` float64
+    vertices plus per-record ``(offset, nverts)``: record ``r``'s ring is
+    ``pool[offsets[r] : offsets[r] + nverts[r]]``. A point record owns one
+    pool row, a 64-vertex ring owns 64 — no record pays for the widest
+    geometry in the store, and appending a record moves O(record width)
+    bytes (amortized), not O(N·V).
 
+    Invariants:
+
+    * ``pool``/``offsets``/``nverts``/``kinds``/``mbrs`` are live views onto
+      internal capacity buffers. Growth REPLACES a buffer (never resizes it
+      in place) and appends only ever write past the live length, so a view
+      taken at time T stays valid and immutable forever — snapshot captures
+      rely on this.
+    * ``mark_dead`` tombstones a record; its ring stays readable until
+      :meth:`compact` (run at republish) rewrites the pool without it and
+      repoints the dead record at ``(offset=0, nverts=1)`` — still finite
+      and in-bounds for masked device reads.
+    * ``verts`` is a backward-compatible DENSE ``(N, maxV, 2)`` view padded
+      with the last valid vertex (the pre-pool layout), materialized lazily
+      and cached until the next mutation. Assigning ``gs.verts = dense``
+      re-imports the dense data back into the pool (same N / nverts).
+    * ``bytes_moved`` counts every byte the store copied (appends, buffer
+      doublings, compaction) — the maintenance bench and the O(width)
+      insert regression test read it.
+    """
+
+    def __init__(self, *, nverts, kinds, mbrs, grid: ZGrid,
+                 name: str = "synthetic", verts=None, pool=None,
+                 offsets=None):
+        self.grid = grid
+        self.name = name
+        nv = np.asarray(nverts, np.int32)
+        n = int(nv.shape[0])
+        self._n = n
+        self._nv = np.array(nv, np.int32)
+        self._kinds = np.array(np.asarray(kinds), np.int8)
+        self._mbrs = np.array(np.asarray(mbrs), np.float64)
+        self._dead = np.zeros(n, bool)
+        self._dirty_dead = False
+        self.pool_version = 0
+        # bumped only when EXISTING pool contents are rewritten (verts
+        # setter re-import, compaction) — appends extend the pool without
+        # touching live data, so device payload caches key on this instead
+        # of pool_version and survive insert bursts between publishes
+        self.layout_version = 0
+        self.bytes_moved = 0
+        self._dense = None
+        self._dense_version = -1
+        if pool is not None:
+            self._pool = np.asarray(pool, np.float64).reshape(-1, 2)
+            self._off = np.asarray(offsets, np.int64).reshape(-1).copy()
+            self._pool_len = int(self._pool.shape[0])
+        elif verts is not None:
+            self._import_dense(np.asarray(verts, np.float64))
+        else:
+            raise TypeError("GeometrySet needs either pool+offsets or verts")
+
+    # -- construction ------------------------------------------------------
+    def _import_dense(self, dense: np.ndarray) -> None:
+        """Build the CSR pool from a dense padded ``(N, W, 2)`` block."""
+        n = self._n
+        nv = self._nv[:n].astype(np.int64)
+        off = np.zeros(n, np.int64)
+        if n:
+            np.cumsum(nv[:-1], out=off[1:])
+        total = int(nv.sum())
+        pool = np.empty((max(total, 1), 2), np.float64)
+        if total:
+            rec_of = np.repeat(np.arange(n), nv)
+            pos = np.arange(total) - np.repeat(off, nv)
+            pool[:total] = dense[rec_of, pos]
+        else:
+            pool[:] = 0.0
+        self._pool = pool
+        self._off = off
+        self._pool_len = max(total, 1) if n else total
+        if n == 0:
+            self._pool_len = 0
+
+    @classmethod
+    def concat(cls, parts: Iterable["GeometrySet"],
+               name: str = "concat") -> "GeometrySet":
+        parts = list(parts)
+        pool = np.concatenate([p.pool for p in parts])
+        offs, base = [], 0
+        for p in parts:
+            offs.append(p.offsets + base)
+            base += p.pool.shape[0]
+        return cls(pool=pool, offsets=np.concatenate(offs),
+                   nverts=np.concatenate([p.nverts for p in parts]),
+                   kinds=np.concatenate([p.kinds for p in parts]),
+                   mbrs=np.concatenate([p.mbrs for p in parts]),
+                   grid=parts[0].grid, name=name)
+
+    # -- live views --------------------------------------------------------
     def __len__(self) -> int:
-        return self.verts.shape[0]
+        return self._n
 
-    def take(self, idx: np.ndarray) -> "GeometrySet":
-        return GeometrySet(
-            verts=self.verts[idx],
-            nverts=self.nverts[idx],
-            kinds=self.kinds[idx],
-            mbrs=self.mbrs[idx],
-            grid=self.grid,
-            name=self.name,
-        )
+    @property
+    def pool(self) -> np.ndarray:
+        return self._pool[:self._pool_len]
 
+    @property
+    def pool_len(self) -> int:
+        return self._pool_len
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return self._off[:self._n]
+
+    @property
+    def nverts(self) -> np.ndarray:
+        return self._nv[:self._n]
+
+    @property
+    def kinds(self) -> np.ndarray:
+        return self._kinds[:self._n]
+
+    @property
+    def mbrs(self) -> np.ndarray:
+        return self._mbrs[:self._n]
+
+    @mbrs.setter
+    def mbrs(self, m) -> None:
+        m = np.array(np.asarray(m), np.float64)
+        if m.shape != (self._n, 4):
+            raise ValueError(f"mbrs shape {m.shape} != ({self._n}, 4)")
+        self._mbrs = m
+
+    @property
+    def max_nverts(self) -> int:
+        return int(self._nv[:self._n].max()) if self._n else 1
+
+    # -- dense compatibility view -----------------------------------------
+    @property
+    def verts(self) -> np.ndarray:
+        """Dense ``(N, maxV, 2)`` padded-with-last-vertex view (cached)."""
+        if self._dense is None or self._dense_version != self.pool_version:
+            self._dense = self.padded()
+            self._dense_version = self.pool_version
+        return self._dense
+
+    @verts.setter
+    def verts(self, dense) -> None:
+        dense = np.asarray(dense, np.float64)
+        if dense.shape[0] != self._n or (self._n and
+                                         dense.shape[1] < self.max_nverts):
+            raise ValueError(
+                f"dense verts {dense.shape} cannot cover {self._n} records "
+                f"of up to {self.max_nverts} vertices")
+        self._import_dense(dense)
+        self.layout_version += 1
+        self._touch()
+
+    def padded(self, idx=None, width: Optional[int] = None) -> np.ndarray:
+        """Dense ``(len(idx), W, 2)`` gather of a record subset, padded with
+        each record's last valid vertex (the device-layout convention)."""
+        if idx is None:
+            off, nv = self.offsets, self.nverts
+        else:
+            idx = np.asarray(idx)
+            off, nv = self._off[idx], self._nv[idx]
+        if off.shape[0] == 0:
+            return np.empty((0, width or 1, 2), np.float64)
+        w = int(width) if width else max(int(nv.max()), 1)
+        j = np.minimum(np.arange(w)[None, :], nv[:, None].astype(np.int64) - 1)
+        return self._pool[off[:, None] + j]
+
+    def ring(self, rec: int) -> np.ndarray:
+        """The ``(nverts, 2)`` ring of one record (a pool view)."""
+        o = int(self._off[rec])
+        return self._pool[o : o + int(self._nv[rec])]
+
+    def take(self, idx) -> "GeometrySet":
+        idx = np.asarray(idx).reshape(-1)
+        counts = self._nv[idx].astype(np.int64)
+        starts = self._off[idx]
+        total = int(counts.sum())
+        off = np.zeros(idx.shape[0], np.int64)
+        if idx.shape[0]:
+            np.cumsum(counts[:-1], out=off[1:])
+        pool = np.empty((max(total, 1), 2), np.float64)
+        if total:
+            pos = np.arange(total) - np.repeat(off, counts)
+            pool[:total] = self._pool[np.repeat(starts, counts) + pos]
+        else:
+            pool[:] = 0.0
+        return GeometrySet(pool=pool[:max(total, 1)], offsets=off,
+                           nverts=self._nv[idx], kinds=self._kinds[idx],
+                           mbrs=self._mbrs[idx], grid=self.grid,
+                           name=self.name)
+
+    # -- sizes -------------------------------------------------------------
     def nbytes(self) -> int:
-        return (self.verts.nbytes + self.nverts.nbytes
+        """Live store bytes in the CSR pool layout."""
+        return (self.pool.nbytes + self.offsets.nbytes + self.nverts.nbytes
                 + self.kinds.nbytes + self.mbrs.nbytes)
 
-    def grow_vertex_capacity(self, new_vmax: int) -> None:
-        """Widen the padded vertex rings to ``new_vmax`` in place, preserving
-        the pad-with-last-valid-vertex convention for every record."""
-        old = self.verts
-        n, old_vmax = old.shape[0], old.shape[1]
-        if new_vmax <= old_vmax:
-            return
-        grown = np.empty((n, new_vmax, 2), old.dtype)
-        grown[:, :old_vmax] = old
-        if n:
-            last = old[np.arange(n), np.minimum(self.nverts - 1, old_vmax - 1)]
-            grown[:, old_vmax:] = last[:, None, :]
-        self.verts = grown
+    def dense_nbytes(self) -> int:
+        """What the pre-pool dense ``(N, maxV, 2)`` layout would cost."""
+        return (self._n * self.max_nverts * 16 + self.nverts.nbytes
+                + self.kinds.nbytes + self.mbrs.nbytes)
+
+    # -- mutation ----------------------------------------------------------
+    def _touch(self) -> None:
+        self.pool_version += 1
+        self._dense = None
+
+    def reserve(self, num_records: int, num_verts: int) -> None:
+        """Pre-grow capacity buffers (does not change live contents)."""
+        if num_verts > self._pool.shape[0]:
+            self._grow_pool(num_verts)
+        if num_records > self._off.shape[0]:
+            self._grow_records(num_records)
+
+    def _grow_pool(self, need: int) -> None:
+        cap = max(need, 2 * self._pool.shape[0], 64)
+        new = np.empty((cap, 2), np.float64)
+        new[:self._pool_len] = self._pool[:self._pool_len]
+        self.bytes_moved += self._pool_len * 16
+        self._pool = new
+
+    def _grow_records(self, need: int) -> None:
+        cap = max(need, 2 * self._off.shape[0], 64)
+        n = self._n
+
+        def grow(buf, dtype, cols=None):
+            shape = (cap,) if cols is None else (cap, cols)
+            new = np.zeros(shape, dtype)
+            new[:n] = buf[:n]
+            self.bytes_moved += buf[:n].nbytes
+            return new
+
+        self._off = grow(self._off, np.int64)
+        self._nv = grow(self._nv, np.int32)
+        self._kinds = grow(self._kinds, np.int8)
+        self._mbrs = grow(self._mbrs, np.float64, 4)
+        self._dead = grow(self._dead, bool)
+
+    def append(self, verts, nverts: int, kind: int, mbr=None) -> int:
+        """Append one record; O(record width) bytes moved, amortized."""
+        w = int(nverts)
+        ring = np.asarray(verts, np.float64).reshape(-1, 2)[:w]
+        if ring.shape[0] != w or w < 1:
+            raise ValueError(f"need {nverts} vertices, got {ring.shape[0]}")
+        if self._pool_len + w > self._pool.shape[0]:
+            self._grow_pool(self._pool_len + w)
+        if self._n + 1 > self._off.shape[0]:
+            self._grow_records(self._n + 1)
+        self._pool[self._pool_len : self._pool_len + w] = ring
+        self.bytes_moved += w * 16
+        rec = self._n
+        self._off[rec] = self._pool_len
+        self._nv[rec] = w
+        self._kinds[rec] = np.int8(kind)
+        if mbr is None:
+            mbr = mbrs_of_verts(ring[None], np.asarray([w], np.int32))[0]
+        self._mbrs[rec] = np.asarray(mbr, np.float64)
+        self._dead[rec] = False
+        self.bytes_moved += 8 + 4 + 1 + 32
+        self._pool_len += w
+        self._n += 1
+        self._touch()
+        return rec
+
+    def mark_dead(self, rec: int) -> None:
+        """Tombstone a record's storage; reclaimed at the next compact()."""
+        if not self._dead[rec]:
+            self._dead[rec] = True
+            self._dirty_dead = True
+
+    @property
+    def dead_count(self) -> int:
+        return int(self._dead[:self._n].sum())
+
+    def compact(self) -> int:
+        """Rewrite the pool without dead records' rings; returns bytes
+        reclaimed. Record ids are stable: a dead record keeps its id and is
+        repointed at ``(offset=0, nverts=1)`` — finite, in-bounds data for
+        masked reads. Replaces (never mutates) the offset/nverts buffers so
+        previously captured views stay consistent."""
+        if not self._dirty_dead:
+            return 0
+        n = self._n
+        dead = self._dead[:n]
+        live_idx = np.nonzero(~dead)[0]
+        counts = self._nv[live_idx].astype(np.int64)
+        starts = self._off[live_idx]
+        total = int(counts.sum())
+        pool = np.empty((max(total, 1), 2), np.float64)
+        seg = np.zeros(live_idx.shape[0], np.int64)
+        if live_idx.shape[0]:
+            np.cumsum(counts[:-1], out=seg[1:])
+        if total:
+            pos = np.arange(total) - np.repeat(seg, counts)
+            pool[:total] = self._pool[np.repeat(starts, counts) + pos]
+        else:
+            pool[:] = 0.0
+        self.bytes_moved += total * 16
+        reclaimed = (self._pool_len - max(total, 1)) * 16
+        off = np.zeros(n, np.int64)
+        off[live_idx] = seg
+        nv = np.ones(n, np.int32)
+        nv[live_idx] = self._nv[live_idx]
+        self._pool = pool
+        self._pool_len = max(total, 1)
+        self._off = off
+        self._nv = nv
+        self._dirty_dead = False
+        self.layout_version += 1
+        self._touch()
+        return max(reclaimed, 0)
 
 
 def _convex_polygons(rng: np.random.Generator, centers: np.ndarray, sizes: np.ndarray,
@@ -191,8 +472,37 @@ def generate(name: str, n: int, seed: int = 0, max_verts: int = 12,
         parts = _concave_polygons(rng, centers, sizes, max_verts)
     elif name == "points":
         centers = rng.uniform(0.0, 1.0, size=(n, 2))
-        verts = np.repeat(centers[:, None, :], max_verts, axis=1)
-        parts = {"verts": verts, "nverts": np.ones(n, np.int32)}
+        parts = {"verts": centers[:, None, :],
+                 "nverts": np.ones(n, np.int32)}
+    elif name == "rings":
+        # Dense boundary rings with exactly max_verts vertices each.
+        centers = rng.uniform(0.02, 0.98, size=(n, 2))
+        sizes = rng.uniform(5e-5, 5e-4, size=n)
+        angles = np.sort(rng.uniform(0.0, 2 * np.pi, (n, max_verts)), axis=1)
+        radii = sizes[:, None] * rng.uniform(0.7, 1.0, (n, max_verts))
+        parts = {"verts": np.stack(
+                     [centers[:, 0:1] + radii * np.cos(angles),
+                      centers[:, 1:2] + radii * np.sin(angles)], -1),
+                 "nverts": np.full(n, max_verts, np.int32)}
+    elif name == "mixed":
+        # Heavy-tailed vertex counts in one store: ~45% single-vertex
+        # points, 25% short polylines, 20% mid-width (concave) polygons, 10%
+        # 64-vertex rings. Mean width ~8, max 64 — dense padding makes every
+        # point pay 64 slots.
+        n_ring = max(n // 10, 1)
+        n_poly = max(n // 5, 1)
+        n_road = max(n // 4, 1)
+        n_pts = max(n - n_ring - n_poly - n_road, 1)
+        gs = GeometrySet.concat(
+            [generate("points", n_pts, seed=seed + 1, grid=grid),
+             generate("roads", n_road, seed=seed + 2, max_verts=8, grid=grid),
+             generate("concave", n_poly, seed=seed + 3, max_verts=12,
+                      grid=grid),
+             generate("rings", n_ring, seed=seed + 4, max_verts=64,
+                      grid=grid)],
+            name="mixed")
+        # shuffle so the families interleave in Zmin order too
+        return gs.take(rng.permutation(len(gs)))
     else:
         raise ValueError(f"unknown dataset {name!r}")
 
@@ -210,6 +520,7 @@ DATASETS = {
     "ROADS": ("roads", 3),
     "POINTS": ("points", 4),
     "CONCAVE": ("concave", 5),
+    "MIXED": ("mixed", 6),
 }
 
 

@@ -33,10 +33,11 @@ from .relations import get_relation
 from .zorder import (LO_LIMB_SIZE, mbr_to_zinterval_hilo, split_hilo_np,
                      z_less_hilo)
 
-__all__ = ["GLINSnapshot", "HostCapture", "snapshot_capture",
-           "snapshot_from_capture", "snapshot_from_host", "batch_probe",
-           "batch_query_bounds", "batch_query", "DeltaTable",
-           "delta_table_from_host", "batch_check_added", "input_specs_like"]
+__all__ = ["GLINSnapshot", "HostCapture", "VertexPods", "pack_pods",
+           "pods_from_store", "snapshot_capture", "snapshot_from_capture",
+           "snapshot_from_host", "batch_probe", "batch_query_bounds",
+           "batch_query", "DeltaTable", "delta_table_from_host",
+           "batch_check_added", "input_specs_like"]
 
 _I32 = jnp.int32
 _INF_HI = np.int32(2**30)  # > any valid 30-bit limb
@@ -95,6 +96,111 @@ class GLINSnapshot:
 
 
 # ---------------------------------------------------------------------------
+# Width-bucketed vertex pods (device half of the CSR vertex pool)
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class VertexPods:
+    """Device-resident ragged geometry: one flat fp32 vertex pod pool plus
+    per-record ``(off, nv)`` CSR addressing.
+
+    Records are grouped by pow2 vertex-count bucket and each record's ring
+    is padded (with its last valid vertex) to its bucket width, so every
+    bucket is a contiguous run of equal-width, slot-aligned pods. Pod memory
+    is <= 2x the tight ring total — independent of the widest geometry in
+    the store, unlike the dense ``(N, V, 2)`` block it replaces.
+
+    The exact-refine stage gathers survivors at the widest bucket PRESENT in
+    the batch (``lax.switch`` over the static width ladder ``1, 2, ...,
+    max_width``), not at the global max width: a batch of point/polyline
+    survivors never pays a 64-vertex gather because one wide ring exists
+    somewhere in the store.
+    """
+
+    pool: jax.Array    # (P, 2) float32 bucket-grouped padded pods
+    off: jax.Array     # (N,) int32 pod start of each record
+    nv: jax.Array      # (N,) int32 valid vertices of each record
+    kd: jax.Array      # (N,) int32 GeomKind of each record
+    bucket: jax.Array  # (N,) int32 pow2 bucket index (width = 1 << bucket)
+    # static pow2 width ceiling; the branch ladder is 1 << (0..log2(max))
+    max_width: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_records(self) -> int:
+        return self.off.shape[0]
+
+    @property
+    def num_buckets(self) -> int:
+        return int(math.log2(self.max_width)) + 1
+
+
+def _pow2ceil(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def pack_pods(pool: np.ndarray, offsets: np.ndarray, nverts: np.ndarray,
+              kinds: np.ndarray, *, pad_records_to: int = 0,
+              pool_pad_to: int = 0, max_width: int = 0,
+              dtype=np.float32) -> dict:
+    """Pack host CSR rings into the bucket-grouped pod layout (numpy).
+
+    Returns ``{"pool", "off", "nv", "kd", "bucket", "max_width"}``; arrays
+    are numpy so callers control the upload (replicated payload, per-shard
+    slices, tests). Records beyond ``len(nverts)`` (up to ``pad_records_to``)
+    are inert: ``off=0, nv=1, bucket=0`` — in-bounds reads, masked upstream.
+    ``max_width`` forces a wider static ladder than the data needs (sticky
+    jit-signature floors); ``pool_pad_to`` likewise floors the pod count.
+    """
+    nverts = np.asarray(nverts, np.int64)
+    n = nverts.shape[0]
+    maxw = _pow2ceil(max(int(nverts.max()) if n else 1, 1))
+    if max_width:
+        if max_width != _pow2ceil(max_width):
+            raise ValueError(f"max_width must be a power of 2, got {max_width}")
+        maxw = max(maxw, int(max_width))
+    ladder = 1 << np.arange(int(math.log2(maxw)) + 1, dtype=np.int64)
+    bucket = np.searchsorted(ladder, nverts).astype(np.int32)
+    widths = ladder[bucket]
+    order = np.argsort(bucket, kind="stable")   # bucket-grouped, stable
+    w_seq = widths[order]
+    start_seq = np.zeros(n, np.int64)
+    if n:
+        np.cumsum(w_seq[:-1], out=start_seq[1:])
+    total = int(w_seq.sum())
+    p = max(total, int(pool_pad_to), 1)
+    pod = np.zeros((p, 2), dtype)
+    if total:
+        lane = np.arange(total) - np.repeat(start_seq, w_seq)
+        src_rec = np.repeat(order, w_seq)
+        src = (np.asarray(offsets, np.int64)[src_rec]
+               + np.minimum(lane, nverts[src_rec] - 1))
+        pod[:total] = pool[src]
+    m = max(n, int(pad_records_to))
+    off = np.zeros(m, np.int32)
+    nv = np.ones(m, np.int32)
+    kd = np.zeros(m, np.int32)
+    bk = np.zeros(m, np.int32)
+    off[order] = start_seq.astype(np.int32)
+    nv[:n] = nverts
+    kd[:n] = np.asarray(kinds)
+    bk[:n] = bucket
+    return {"pool": pod, "off": off, "nv": nv, "kd": kd, "bucket": bk,
+            "max_width": maxw}
+
+
+def pods_from_store(gs, pad_records_to: int = 0, pool_pad_to: int = 0,
+                    max_width: int = 0) -> VertexPods:
+    """Pack a GeometrySet's pool into device-resident :class:`VertexPods`."""
+    p = pack_pods(gs.pool, gs.offsets, gs.nverts, gs.kinds,
+                  pad_records_to=pad_records_to, pool_pad_to=pool_pad_to,
+                  max_width=max_width)
+    return VertexPods(pool=jnp.asarray(p["pool"]), off=jnp.asarray(p["off"]),
+                      nv=jnp.asarray(p["nv"]), kd=jnp.asarray(p["kd"]),
+                      bucket=jnp.asarray(p["bucket"]),
+                      max_width=p["max_width"])
+
+
+# ---------------------------------------------------------------------------
 # Host tree -> capture -> snapshot
 #
 # The flatten is split in two so a republish can run OFF the caller's thread
@@ -110,8 +216,9 @@ class HostCapture:
     """A consistent host-side flattening of the index at one epoch.
 
     ``keys``/``recs``/``starts``/``leaf_mbrs`` are fresh copies; the geometry
-    store fields alias the store's arrays, which are immutable once created
-    (inserts replace them append-style, deletes never touch them) — so the
+    store fields alias the store's live views, which are immutable once
+    captured (the CSR pool only ever appends past the captured length, and
+    growth/compaction replace the buffer rather than mutating it) — so the
     capture stays valid while the live index keeps mutating."""
 
     keys: np.ndarray        # (N,) int64 Zmin keys in slot order
@@ -140,7 +247,8 @@ class HostCapture:
     grid_cell: float
     # geometry store at capture time (aliases; see class docstring)
     gs_mbrs: np.ndarray
-    gs_verts: np.ndarray
+    gs_pool: np.ndarray     # (P, 2) f64 CSR vertex pool (live view)
+    gs_offsets: np.ndarray  # (N,) i64 ring starts into the pool
     gs_nverts: np.ndarray
     gs_kinds: np.ndarray
     num_records: int        # store length at capture time
@@ -151,7 +259,15 @@ class HostCapture:
 
 
 def snapshot_capture(glin) -> HostCapture:
-    """Flatten the live host tree into plain numpy (synchronous part)."""
+    """Flatten the live host tree into plain numpy (synchronous part).
+
+    Also runs the store's pool compaction pass: records tombstoned since the
+    last publish give their ring storage back here, where it's safe — the
+    new snapshot's tree no longer references them, previously captured pool
+    views are untouched (compaction replaces buffers), and device payloads
+    key on the store's ``pool_version`` so they re-upload the slimmer pool.
+    """
+    glin.gs.compact()
     keys, recs, starts, mbrs = glin.all_leaf_arrays()
     leaves = glin.leaves
     L = len(leaves)
@@ -232,8 +348,8 @@ def snapshot_capture(glin) -> HostCapture:
         pw_sufmin_hi=ps_hi, pw_sufmin_lo=ps_lo,
         grid_x0=float(grid.x0), grid_y0=float(grid.y0),
         grid_cell=float(grid.cell_size),
-        gs_mbrs=gs.mbrs, gs_verts=gs.verts, gs_nverts=gs.nverts,
-        gs_kinds=gs.kinds, num_records=len(gs),
+        gs_mbrs=gs.mbrs, gs_pool=gs.pool, gs_offsets=gs.offsets,
+        gs_nverts=gs.nverts, gs_kinds=gs.kinds, num_records=len(gs),
     )
 
 
@@ -438,8 +554,8 @@ def batch_query_bounds(s: GLINSnapshot, windows: jax.Array,
 
 @partial(jax.jit, static_argnames=("relation", "cap", "exact_budget",
                                    "compaction"))
-def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
-                nverts: jax.Array, kinds: jax.Array, mbrs: jax.Array,
+def batch_query(s: GLINSnapshot, windows: jax.Array, pods: VertexPods,
+                mbrs: jax.Array,
                 relation: str = "contains", cap: int = 4096,
                 exact_budget: int = 0, compaction: str = "scan"
                 ) -> Tuple[jax.Array, jax.Array]:
@@ -460,8 +576,10 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
     stage 1 evaluates only the cheap interval + leaf-MBR + record-MBR masks;
     stage 2 compacts the survivors per query and runs exact-shape checks +
     vertex gathers on at most ``exact_budget`` candidates — the expensive
-    (Q·cap·V) gather shrinks to (Q·budget·V). Budget overflow is signalled
-    like cap overflow. ``compaction`` picks the stage-1 implementation:
+    (Q·cap·W) gather shrinks to (Q·budget·W), where W is the widest pow2
+    vertex bucket among the batch's survivors (``VertexPods``), not the
+    store's global max width. Budget overflow is signalled like cap
+    overflow. ``compaction`` picks the stage-1 implementation:
 
     * ``"pallas"`` — the fused ``refine_compact`` kernel: interval + leaf-MBR
       + record-MBR mask with in-VMEM prefix-sum compaction over the whole
@@ -483,18 +601,38 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
     def exact_for(w, vv, nn, kk):
         return rel.predicate(w, vv, nn, kk, xp=jnp)
 
-    def exact_refine_compacted(slots, kb):
+    def exact_over(rec, sel):
+        """Exact predicates over gathered records ``rec`` (Q, M) -> bool.
+
+        Gathers vertex pods at the widest pow2 bucket among the ``sel``
+        lanes: ``lax.switch`` over the static width ladder executes exactly
+        one branch, so a batch whose survivors are all points/polylines
+        never pays the widest ring's gather. Unselected lanes read real
+        (clamped, in-bounds) data and are masked by the caller.
+        """
+        off = pods.off[rec]
+        nv = pods.nv[rec]
+        kd = pods.kd[rec]
+        b = jnp.max(jnp.where(sel, pods.bucket[rec], 0))
+
+        def branch(width):
+            def run(off, nv, kd):
+                lane = jnp.minimum(jnp.arange(width, dtype=_I32),
+                                   nv[..., None] - 1)
+                idx = jnp.clip(off[..., None] + lane, 0,
+                               pods.pool.shape[0] - 1)
+                return jax.vmap(exact_for)(windows, pods.pool[idx], nv, kd)
+            return run
+
+        return jax.lax.switch(
+            b, [branch(1 << i) for i in range(pods.num_buckets)], off, nv, kd)
+
+    def exact_refine_compacted(slots):
         """Exact-shape stage over compacted survivor slots (Q, kb)."""
         taken = slots >= 0
         slotc = jnp.maximum(slots, 0)
         rec = jnp.where(taken, s.recs[slotc], 0)
-        v = verts[rec.reshape(-1)]
-        nv = nverts[rec.reshape(-1)]
-        kd = kinds[rec.reshape(-1)]
-        exact = jax.vmap(exact_for)(windows,
-                                    v.reshape(q, kb, *v.shape[1:]),
-                                    nv.reshape(q, kb), kd.reshape(q, kb))
-        fmask = taken & exact
+        fmask = taken & exact_over(rec, taken)
         hits = jnp.where(fmask, rec, -1)
         counts = fmask.sum(axis=1).astype(_I32)
         return hits, counts
@@ -513,7 +651,7 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
             slots, mbr_counts = ops.refine_compact(
                 probe_w, bounds, s.slot_lmbr, s.slot_rmbr, budget=kb,
                 prefilter=rel.prefilter_kind)
-            hits, counts = exact_refine_compacted(slots, kb)
+            hits, counts = exact_refine_compacted(slots)
             overflow = mbr_counts > kb
             # overflow encodes the TOTAL survivor count (-(survivors) - 1),
             # so the caller can size its budget ladder in one step
@@ -539,7 +677,7 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
             slots = jnp.full((q, kb), -1, _I32).at[
                 jnp.arange(q, dtype=_I32)[:, None], col
             ].set(posc, mode="drop")
-            hits, counts = exact_refine_compacted(slots, kb)
+            hits, counts = exact_refine_compacted(slots)
             surv = m32.sum(axis=1)
             runlen = end - start
             run_over = runlen > cap
@@ -560,13 +698,7 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
         order = jnp.argsort(~mask, axis=1, stable=True)[:, :kb]  # (Q, kb)
         sub_rec = jnp.take_along_axis(rec, order, axis=1)
         sub_mask = jnp.take_along_axis(mask, order, axis=1)
-        v = verts[sub_rec.reshape(-1)]
-        nv = nverts[sub_rec.reshape(-1)]
-        kd = kinds[sub_rec.reshape(-1)]
-        exact = jax.vmap(exact_for)(windows,
-                                    v.reshape(q, kb, *v.shape[1:]),
-                                    nv.reshape(q, kb), kd.reshape(q, kb))
-        fmask = sub_mask & exact
+        fmask = sub_mask & exact_over(sub_rec, sub_mask)
         hits = jnp.where(fmask, sub_rec, -1)
         counts = fmask.sum(axis=1).astype(_I32)
         surv = mask.sum(axis=1)
@@ -590,14 +722,7 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, verts: jax.Array,
     rmbr = s.slot_rmbr[posc]
     rec_ok = rel.mbr_prefilter(rmbr, wq, xp=jnp)
     mask = valid & leaf_ok & rec_ok
-
-    v = verts[rec.reshape(-1)]                   # (Q*cap, V, 2)
-    nv = nverts[rec.reshape(-1)]
-    kd = kinds[rec.reshape(-1)]
-    exact = jax.vmap(exact_for)(windows,
-                                v.reshape(q, cap, *v.shape[1:]),
-                                nv.reshape(q, cap), kd.reshape(q, cap))
-    mask = mask & exact
+    mask = mask & exact_over(rec, mask)          # (Q, cap) pod gathers
     hits = jnp.where(mask, rec, -1)
     counts = mask.sum(axis=1).astype(_I32)
     overflow = (end - start) > cap
@@ -627,9 +752,12 @@ class DeltaTable:
     zmax_hi: jax.Array   # (A,) int32 z-interval upper key
     zmax_lo: jax.Array   # (A,) int32
     mbrs: jax.Array      # (A, 4) float32
-    verts: jax.Array     # (A, V, 2) float32
+    pool: jax.Array      # (P, 2) float32 CSR vertex pool over the added set
+    off: jax.Array       # (A,) int32 ring starts (inert rows -> sentinel)
     nverts: jax.Array    # (A,) int32
     kinds: jax.Array     # (A,) int32
+    # static pow2 ceiling of the added set's widths (dense-gather width)
+    max_width: int = dataclasses.field(metadata=dict(static=True))
 
     @property
     def size(self) -> int:
@@ -654,14 +782,32 @@ def delta_table_from_host(glin, added_ids, pad_to: int = 0) -> DeltaTable:
     out_ids = np.full(m, -1, np.int32)
     out_ids[:a] = ids
     mbrs = np.full((m, 4), 2e30, np.float32)      # intersects nothing
-    verts = np.full((m, *gs.verts.shape[1:]), 2e30, np.float32)
     nverts = np.ones(m, np.int32)
     kinds = np.zeros(m, np.int32)
+    # CSR ring pool over the added set, with one far-away sentinel vertex
+    # that every inert pad row points at (intersects nothing, dwithin fails)
+    counts = gs.nverts[ids].astype(np.int64) if a else np.empty(0, np.int64)
+    off = np.zeros(m, np.int32)
+    # pow2-bucket the pool axis (with the row padding, the table's whole
+    # shape signature), so the jitted added-set check compiles once per
+    # bucket — NOT once per insert as the pool creeps one ring at a time
+    total = int(counts.sum())
+    pool_cap = 1 << max(6, total.bit_length())
+    pool = np.full((pool_cap, 2), 2e30, np.float32)
     if a:
+        starts = np.zeros(a, np.int64)
+        np.cumsum(counts[:-1], out=starts[1:])
+        pos = np.arange(total) - np.repeat(starts, counts)
+        src = gs.offsets[ids]
+        pool[:total] = gs.pool[np.repeat(src, counts) + pos]
+        off[:a] = starts
+        off[a:] = pool.shape[0] - 1               # the sentinel row
         mbrs[:a] = gs.mbrs[ids]
-        verts[:a] = gs.verts[ids]
         nverts[:a] = gs.nverts[ids]
         kinds[:a] = gs.kinds[ids]
+    else:
+        off[:] = pool.shape[0] - 1
+    max_width = _pow2ceil(int(counts.max()) if a else 1)
 
     def _padk(x, fill):
         return jnp.asarray(np.concatenate([x, np.full(pad, fill, np.int32)]))
@@ -670,8 +816,9 @@ def delta_table_from_host(glin, added_ids, pad_to: int = 0) -> DeltaTable:
         ids=jnp.asarray(out_ids),
         zmin_hi=_padk(zmin_hi, _INF_HI), zmin_lo=_padk(zmin_lo, 0),
         zmax_hi=_padk(zmax_hi, _INF_HI), zmax_lo=_padk(zmax_lo, 0),
-        mbrs=jnp.asarray(mbrs), verts=jnp.asarray(verts),
-        nverts=jnp.asarray(nverts), kinds=jnp.asarray(kinds))
+        mbrs=jnp.asarray(mbrs), pool=jnp.asarray(pool),
+        off=jnp.asarray(off), nverts=jnp.asarray(nverts),
+        kinds=jnp.asarray(kinds), max_width=max_width)
 
 
 @partial(jax.jit, static_argnames=("relation", "grid_x0", "grid_y0",
@@ -700,8 +847,12 @@ def batch_check_added(t: DeltaTable, windows: jax.Array, relation: str,
     cand = lo_ok & hi_ok & (t.ids[None, :] >= 0)
     pre = rel.mbr_prefilter(t.mbrs[None, :, :], windows[:, None, :], xp=jnp)
 
+    # one dense ragged-view materialization of the (small) added set, shared
+    # by every query row; inert pads read the far-away sentinel vertex
+    verts = geom.ragged_padded(t.pool, t.off, t.nverts, t.max_width, xp=jnp)
+
     def exact_for(w):
-        return rel.predicate(w, t.verts, t.nverts, t.kinds, xp=jnp)
+        return rel.predicate(w, verts, t.nverts, t.kinds, xp=jnp)
 
     exact = jax.vmap(exact_for)(windows)
     return cand & pre & exact

@@ -46,23 +46,62 @@ GLIN_MODEL_SPEC = P()
 # Slot-ordered record-table keys sharded over the data axes. ``lmbrs`` /
 # ``mbrs`` are the slot-aligned leaf / record MBR tables the fused
 # mask+compact stage streams (the sharded analogue of the snapshot's
-# ``slot_lmbr`` / ``slot_rmbr``).
+# ``slot_lmbr`` / ``slot_rmbr``). Vertices travel as PER-SHARD POOL SLICES:
+# ``vpool`` is each shard's local CSR vertex pool (equal length across
+# shards), ``voff`` the slot-aligned offsets INTO THAT LOCAL SLICE, and
+# ``vbucket`` each slot's pow2 width-bucket index — the exact-refine stage
+# gathers only the widest surviving bucket's width, never a global ``V``.
 TABLE_KEYS = ("keys_hi", "keys_lo", "recs", "rec_leaf", "lmbrs", "mbrs",
-              "verts", "nverts", "kinds")
+              "vpool", "voff", "vbucket", "nverts", "kinds")
+
+# per-shard pool slices are padded to this slot quantum so append-driven
+# growth between publishes rarely changes the sharded jit signature
+_POOL_QUANTUM = 1024
 
 
-def shard_arrays_from_capture(c: HostCapture,
-                              num_shards: int) -> Dict[str, np.ndarray]:
+def shard_arrays_from_capture(c: HostCapture, num_shards: int,
+                              pool_pad_to: int = 0) -> Dict[str, np.ndarray]:
     """Slot-ordered record payloads from a host capture, padded to
     ``num_shards``. Padding slots carry +inf keys, ``recs == -1`` and
     ``_NEVER`` MBRs (they intersect and contain nothing), so neither
-    prefilter shape can ever pick one up."""
+    prefilter shape can ever pick one up; their vertex pointers are inert
+    ``(voff=0, nverts=1)``.
+
+    Each shard's records' rings are gathered into a LOCAL vertex pool in
+    slot order; every local pool is padded (zeros) to one common length —
+    ``max(tightest shard, pool_pad_to)`` rounded up to ``_POOL_QUANTUM`` —
+    so the concatenated ``vpool`` shards evenly. The caller can pass the
+    previous publish's per-shard length as ``pool_pad_to`` to keep the
+    sharded jit signature stable across (compacting) republishes."""
     keys, recs = c.keys, c.recs
     n = keys.shape[0]
     pad = (-n) % num_shards
+    local_n = (n + pad) // num_shards if num_shards else 0
     rec_leaf = np.repeat(np.arange(c.num_leaves, dtype=np.int32),
                          np.diff(c.starts).astype(np.int64))
     lmbrs32 = c.leaf_mbrs.astype(np.float32)
+    nvr = c.gs_nverts[recs].astype(np.int64)
+    # local CSR offsets: exclusive cumsum of ring widths within each shard
+    cnt = np.zeros(n + pad, np.int64)
+    cnt[:n] = nvr
+    cnt2 = cnt.reshape(num_shards, local_n)
+    loc_off = np.zeros((num_shards, local_n), np.int64)
+    if local_n > 1:
+        np.cumsum(cnt2[:, :-1], axis=1, out=loc_off[:, 1:])
+    tight = int(cnt2.sum(axis=1).max()) if num_shards else 0
+    plocal = max(tight, pool_pad_to, 1)
+    plocal += (-plocal) % _POOL_QUANTUM
+    vpool = np.zeros((num_shards * plocal, 2), np.float32)
+    total = int(nvr.sum())
+    if total:
+        pos = np.arange(total) - np.repeat(
+            np.concatenate([[0], np.cumsum(nvr)[:-1]]), nvr)
+        src = np.repeat(c.gs_offsets[recs], nvr) + pos
+        loc_flat = loc_off.reshape(-1)
+        dst_base = (np.arange(n) // local_n) * plocal + loc_flat[:n]
+        vpool[np.repeat(dst_base, nvr) + pos] = \
+            c.gs_pool[src].astype(np.float32)
+    ladder = 1 << np.arange(31, dtype=np.int64)   # bucket b holds nv <= 2^b
     out = {
         "keys_hi": (keys >> 30).astype(np.int32),
         "keys_lo": (keys & (LO_LIMB_SIZE - 1)).astype(np.int32),
@@ -71,7 +110,9 @@ def shard_arrays_from_capture(c: HostCapture,
         "lmbrs": (lmbrs32[rec_leaf] if c.num_leaves
                   else np.empty((0, 4), np.float32)),
         "mbrs": c.gs_mbrs[recs].astype(np.float32),
-        "verts": c.gs_verts[recs].astype(np.float32),
+        "vpool": vpool,
+        "voff": loc_off.reshape(-1)[:n].astype(np.int32),
+        "vbucket": np.searchsorted(ladder, nvr).astype(np.int32),
         "nverts": c.gs_nverts[recs].astype(np.int32),
         "kinds": c.gs_kinds[recs].astype(np.int32),
     }
@@ -90,9 +131,9 @@ def shard_arrays_from_capture(c: HostCapture,
             [out["rec_leaf"], np.zeros(pad, np.int32)])
         out["lmbrs"] = np.concatenate([out["lmbrs"], never])
         out["mbrs"] = np.concatenate([out["mbrs"], never])
-        out["verts"] = np.concatenate(
-            [out["verts"],
-             np.zeros((pad, *c.gs_verts.shape[1:]), np.float32)])
+        out["voff"] = np.concatenate([out["voff"], np.zeros(pad, np.int32)])
+        out["vbucket"] = np.concatenate(
+            [out["vbucket"], np.zeros(pad, np.int32)])
         out["nverts"] = np.concatenate([out["nverts"], np.ones(pad, np.int32)])
         out["kinds"] = np.concatenate([out["kinds"], np.zeros(pad, np.int32)])
     return out
@@ -109,7 +150,7 @@ def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
                           cap: int = 512, exact_budget: int = 0,
-                          compaction: str = "scan"):
+                          compaction: str = "scan", max_width: int = 64):
     """Returns (step_fn, in_shardings, out_shardings) for the mesh.
 
     step(snapshot, windows, table) -> (hits, counts):
@@ -140,6 +181,12 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
     cumsum+scatter reference — the CPU path) or ``"pallas"`` (the fused
     ``refine_compact`` kernel on TPU). ``exact_budget == 0`` is the legacy
     dense single-stage path (kept as the sharded benchmark baseline).
+
+    ``max_width`` (a power of two) is the static top of the vertex-width
+    bucket ladder and MUST cover the widest record in the table
+    (``max_width >= pow2ceil(max nverts)``) — the exact stage switches on
+    the widest SURVIVING bucket per call and gathers only that width from
+    the shard-local ``vpool`` slice.
     """
     rel = get_relation(relation)
     if not rel.device_native:
@@ -153,8 +200,11 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
         raise ValueError(
             f"relation {relation!r} has a custom MBR prefilter; the fused "
             "kernel cannot evaluate it — use compaction='scan'")
+    if max_width < 1 or (max_width & (max_width - 1)):
+        raise ValueError(f"max_width must be a power of two, got {max_width}")
     daxes = _data_axes(mesh)
     kb = exact_budget if 0 < exact_budget < cap else 0
+    nbuckets = max_width.bit_length()      # widths 1, 2, ..., max_width
 
     table_spec = {k: P(daxes) for k in TABLE_KEYS}
     in_specs = (
@@ -197,18 +247,35 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
         def exact_for(w, vv, nn, kk):
             return rel.predicate(w, vv, nn, kk, xp=jnp)
 
+        def exact_switch(sel, slotc):
+            """Exact predicate over selected slots, gathering rings from the
+            shard-local pool slice at the width of the WIDEST surviving
+            bucket only: ``lax.switch`` executes exactly one width branch,
+            so a batch of points never pays a 64-wide ring gather."""
+            off = table["voff"][slotc]
+            nvs = table["nverts"][slotc]
+            kds = table["kinds"][slotc]
+            b = jnp.max(jnp.where(sel, table["vbucket"][slotc], 0))
+
+            def branch(width):
+                def run(off, nvs, kds):
+                    lane = jnp.minimum(
+                        jnp.arange(width, dtype=_I32), nvs[..., None] - 1)
+                    idx = jnp.clip(off[..., None] + lane, 0,
+                                   table["vpool"].shape[0] - 1)
+                    return jax.vmap(exact_for)(windows, table["vpool"][idx],
+                                               nvs, kds)
+                return run
+
+            return jax.lax.switch(
+                b, [branch(1 << i) for i in range(nbuckets)], off, nvs, kds)
+
         def exact_refine_compacted(slots):
             """Exact-shape stage over compacted local survivor slots."""
             taken = slots >= 0
             slotc = jnp.maximum(slots, 0)
             rec = jnp.where(taken, table["recs"][slotc], -1)
-            v = table["verts"][slotc.reshape(-1)]
-            nv = table["nverts"][slotc.reshape(-1)]
-            kd = table["kinds"][slotc.reshape(-1)]
-            exact = jax.vmap(exact_for)(windows,
-                                        v.reshape(qn, kb, *v.shape[1:]),
-                                        nv.reshape(qn, kb),
-                                        kd.reshape(qn, kb))
+            exact = exact_switch(taken, slotc)
             fmask = taken & exact & (rec >= 0)
             hits = jnp.where(fmask, rec, -1)
             return hits, fmask.sum(axis=1).astype(_I32)
@@ -262,14 +329,7 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
         rmbr = table["mbrs"][posc]
         rec_ok = rel.mbr_prefilter(rmbr, wq, xp=jnp)
         mask = valid & leaf_ok & rec_ok
-
-        v = table["verts"][posc.reshape(-1)]
-        nv = table["nverts"][posc.reshape(-1)]
-        kd = table["kinds"][posc.reshape(-1)]
-
-        exact = jax.vmap(exact_for)(windows,
-                                    v.reshape(qn, cap, *v.shape[1:]),
-                                    nv.reshape(qn, cap), kd.reshape(qn, cap))
+        exact = exact_switch(mask, posc)
         mask = mask & exact & (table["recs"][posc] >= 0)
         hits = jnp.where(mask, table["recs"][posc], -1)
         counts = mask.sum(axis=1).astype(_I32)
@@ -301,11 +361,14 @@ def _snapshot_spec_tree():
 def glin_input_specs(num_records: int, num_queries: int, mesh: Mesh,
                      num_leaves: int = 1 << 20, num_nodes: int = 1 << 14,
                      num_pieces: int = 1 << 12, max_verts: int = 12,
-                     fanout: int = 64):
+                     fanout: int = 64, pool_slots: int = 0):
     """ShapeDtypeStruct stand-ins for the dry-run (no allocation).
 
     Sizes default to a 2^30-record production index: the model tables stay
     tiny (replicated), the record table shards over pod×data.
+    ``pool_slots`` sizes the sharded CSR vertex pool (total slots across
+    shards); it defaults to ``num_records * (max_verts + 1) // 2`` — the
+    pooled layout stores the MEAN record width, not N x the max.
     """
     f32 = jnp.float32
     i32 = jnp.int32
@@ -341,6 +404,8 @@ def glin_input_specs(num_records: int, num_queries: int, mesh: Mesh,
         grid_cell=5e-7,
     )
     windows = jax.ShapeDtypeStruct((num_queries, 4), f32)
+    if not pool_slots:
+        pool_slots = num_records * (max_verts + 1) // 2
     table = {
         "keys_hi": jax.ShapeDtypeStruct((num_records,), i32),
         "keys_lo": jax.ShapeDtypeStruct((num_records,), i32),
@@ -348,7 +413,9 @@ def glin_input_specs(num_records: int, num_queries: int, mesh: Mesh,
         "rec_leaf": jax.ShapeDtypeStruct((num_records,), i32),
         "lmbrs": jax.ShapeDtypeStruct((num_records, 4), f32),
         "mbrs": jax.ShapeDtypeStruct((num_records, 4), f32),
-        "verts": jax.ShapeDtypeStruct((num_records, max_verts, 2), f32),
+        "vpool": jax.ShapeDtypeStruct((pool_slots, 2), f32),
+        "voff": jax.ShapeDtypeStruct((num_records,), i32),
+        "vbucket": jax.ShapeDtypeStruct((num_records,), i32),
         "nverts": jax.ShapeDtypeStruct((num_records,), i32),
         "kinds": jax.ShapeDtypeStruct((num_records,), i32),
     }

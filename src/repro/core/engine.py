@@ -59,8 +59,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import geometry as geom
 from .datasets import GeometrySet
-from .device import (DeltaTable, GLINSnapshot, HostCapture, batch_check_added,
-                     batch_query, batch_query_bounds, delta_table_from_host,
+from .device import (DeltaTable, GLINSnapshot, HostCapture, _pow2ceil,
+                     batch_check_added, batch_query, batch_query_bounds,
+                     delta_table_from_host, pods_from_store,
                      snapshot_capture, snapshot_from_capture)
 from .index import GLIN, GLINConfig, QueryStats
 from .index import initial_knn_radius
@@ -265,7 +266,8 @@ class SpatialIndex:
         self._dtable: Optional[DeltaTable] = None  # device added-set index
         self._dtable_epoch = -1
         self._payload = None
-        self._payload_key: Optional[Tuple[int, int]] = None  # (real rows, V)
+        self._payload_key: Optional[Tuple[int, int]] = None
+        # (real records, store layout generation)
         # adaptive candidate capacity: remembered across queries so the
         # overflow ladder (cap doubling) is walked once, not per call
         self._cap = self.config.initial_cap
@@ -279,6 +281,14 @@ class SpatialIndex:
         # keeps the jit signature stable across republishes
         self._steps_floor = 0
         self._depth_floor = 0
+        # sticky floors for the geometry payload's STATIC shapes: the pod
+        # pool may SHRINK at a compacting republish and the width ladder
+        # may shrink after wide records die — serving the larger padded
+        # shape is still correct (pad slots are never gathered) and keeps
+        # the jitted query signature stable across republishes
+        self._pool_floor = 0
+        self._width_floor = 1
+        self._shard_pool_floor = 0
         # sharded backend caches: jitted steps per (relation, cap, budget,
         # compaction); device placement (replicated model snapshot + sharded
         # record table) per publish
@@ -587,11 +597,18 @@ class SpatialIndex:
                 # on cycles the query threads leave idle — Linux applies it
                 # per native TID), falling back to plain niceness. A rebuild
                 # stretching a little is fine; query latency spiking is not.
+                # On a single-core host SCHED_IDLE is indefinite starvation
+                # (a saturated serving thread leaves no idle cycles and the
+                # swap never lands), so niceness — a weighted share, not an
+                # absolute yield — is the serve-first policy there.
                 tid = threading.get_native_id()
-                try:
-                    os.sched_setscheduler(tid, os.SCHED_IDLE,
-                                          os.sched_param(0))
-                except (AttributeError, OSError):
+                if (os.cpu_count() or 1) > 1:
+                    try:
+                        os.sched_setscheduler(tid, os.SCHED_IDLE,
+                                              os.sched_param(0))
+                    except (AttributeError, OSError):
+                        os.setpriority(os.PRIO_PROCESS, tid, 10)
+                else:
                     os.setpriority(os.PRIO_PROCESS, tid, 10)
             except (AttributeError, OSError, PermissionError):
                 pass
@@ -600,7 +617,11 @@ class SpatialIndex:
                 inf.snapshot = self._pad_snapshot(snap)
                 if shards:
                     from .distributed import shard_arrays_from_capture
-                    inf.table_np = shard_arrays_from_capture(capture, shards)
+                    # the sticky per-shard pool floor is read-only here
+                    # (committed under the lock in _sharded_placement)
+                    inf.table_np = shard_arrays_from_capture(
+                        capture, shards,
+                        pool_pad_to=self._shard_pool_floor)
             except BaseException as e:   # surfaced on the caller's thread
                 inf.error = e
             finally:
@@ -646,32 +667,42 @@ class SpatialIndex:
         return self._snapshot
 
     def _device_payload(self, needed_recs: Optional[int] = None):
-        """fp32 device copies of the geometry store, bucket-padded like the
-        snapshot (padding rows are never gathered: snapshot ``recs`` only
-        holds real record ids). Keyed on the store's (records, vertex
-        capacity) rather than the epoch, and reused as long as it covers
-        ``needed_recs`` (the store length the snapshot being served
-        references): the store is append-only and deletes never touch it, so
-        neither deletes nor inserts past the snapshot may force a multi-MB
-        re-upload."""
+        """fp32 device copy of the geometry store as width-bucketed
+        :class:`~repro.core.device.VertexPods` plus the record-MBR table,
+        bucket-padded like the snapshot (padding records are never gathered:
+        snapshot ``recs`` only holds real record ids). Keyed on (records,
+        store layout generation) rather than the epoch, and reused as long
+        as it covers ``needed_recs`` (the store length the snapshot being
+        served references): the pool is append-only between compactions, so
+        neither deletes nor inserts past the snapshot force a multi-MB
+        re-upload — only a compacting republish (layout generation bump)
+        rebuilds the payload, which is exactly when the device pool should
+        shrink."""
         gs = self.glin.gs
-        width = gs.verts.shape[1]
         need = len(gs) if needed_recs is None else needed_recs
-        if (self._payload is None or self._payload_key[1] != width
+        if (self._payload is None
+                or self._payload_key[1] != gs.layout_version
                 or self._payload_key[0] < need):
             n = len(gs)
             m = self._padded(n)
-            verts = np.zeros((m, *gs.verts.shape[1:]), np.float32)
-            verts[:n] = gs.verts
-            nverts = np.ones(m, gs.nverts.dtype)
-            nverts[:n] = gs.nverts
-            kinds = np.zeros(m, np.int32)
-            kinds[:n] = gs.kinds
+            # static pod shapes under sticky floors: the width ladder covers
+            # the widest live record, the pool covers every record's pow2
+            # bucket slots (quantum headroom absorbs insert-driven growth)
+            maxw = max(self._width_floor, _pow2ceil(gs.max_nverts))
+            nv = np.maximum(gs.nverts.astype(np.int64), 1)
+            slots = int(np.sum(np.left_shift(
+                1, np.ceil(np.log2(nv)).astype(np.int64))))
+            pool_pad = max(self._pool_floor,
+                           self._bucket(max(slots, 1),
+                                        self.config.pad_quantum))
+            pods = pods_from_store(gs, pad_records_to=m,
+                                   pool_pad_to=pool_pad, max_width=maxw)
             mbrs = np.zeros((m, 4), np.float32)
             mbrs[:n] = gs.mbrs
-            self._payload = (jnp.asarray(verts), jnp.asarray(nverts),
-                             jnp.asarray(kinds), jnp.asarray(mbrs))
-            self._payload_key = (n, width)
+            self._payload = (pods, jnp.asarray(mbrs))
+            self._payload_key = (n, gs.layout_version)
+            self._pool_floor = max(self._pool_floor, pool_pad)
+            self._width_floor = max(self._width_floor, maxw)
         return self._payload
 
     def _replica_view(self, rep: int, snap: GLINSnapshot, payload):
@@ -782,7 +813,16 @@ class SpatialIndex:
         # a belt-and-braces shape check)
         n = self._capture.keys.shape[0]
         if table_np is None or table_np["keys_hi"].shape[0] != n + (-n) % shards:
-            table_np = shard_arrays_from_capture(self._capture, shards)
+            table_np = shard_arrays_from_capture(
+                self._capture, shards, pool_pad_to=self._shard_pool_floor)
+        # sticky floors: a compacting republish may shrink the per-shard
+        # pool or retire the widest records; serving the previous padded
+        # shapes keeps the sharded jit signature stable
+        self._shard_pool_floor = max(self._shard_pool_floor,
+                                     table_np["vpool"].shape[0] // shards)
+        maxw = max(self._width_floor,
+                   _pow2ceil(int(table_np["nverts"].max())))
+        self._width_floor = max(self._width_floor, maxw)
         tsh = NamedSharding(mesh, P(_data_axes(mesh)))
         table = {k: jax.device_put(v, tsh) for k, v in table_np.items()}
         tiny_i = jnp.zeros((1,), jnp.int32)
@@ -796,19 +836,20 @@ class SpatialIndex:
         # key read AFTER the potential republish above bumped the count —
         # caching under the pre-publish key would force a rebuilt placement
         # (and its multi-MB device_put) on the very next query
-        self._shard_placement = (self._publishes, snap_repl, table, shards)
+        self._shard_placement = (self._publishes, snap_repl, table, shards,
+                                 maxw)
         return self._shard_placement[1:]
 
     def _sharded_step(self, base: str, cap: int, budget: int,
-                      compaction: str):
-        key = (base, cap, budget, compaction)
+                      compaction: str, max_width: int):
+        key = (base, cap, budget, compaction, max_width)
         fn = self._shard_steps.get(key)
         if fn is None:
             from .distributed import build_glin_query_step
 
             step, in_sh, out_sh = build_glin_query_step(
                 self.config.mesh, base, cap=cap, exact_budget=budget,
-                compaction=compaction)
+                compaction=compaction, max_width=max_width)
             fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
             self._shard_steps[key] = fn
         return fn
@@ -1095,7 +1136,7 @@ class SpatialIndex:
             live = self._freeze_live(rel)
             epoch = self._epoch
             cap, budget = self._cap, cfg.exact_budget
-        verts, nv, kd, mb = payload
+        pods, mb = payload
         q = len(batch.windows)
         wq = batch.windows.astype(np.float32)
         if cfg.pad_quantum > 0 and q:
@@ -1111,7 +1152,7 @@ class SpatialIndex:
         while True:
             use_budget = budget if 0 < budget < cap else 0
             hits, counts = batch_query(
-                snap, wj, verts, nv, kd, mb, relation=base,
+                snap, wj, pods, mb, relation=base,
                 cap=cap, exact_budget=use_budget,
                 compaction=self._compaction(base, use_budget or None))
             counts = np.asarray(counts)
@@ -1156,14 +1197,14 @@ class SpatialIndex:
             wins32 = np.concatenate(
                 [wins32, np.repeat(wins32[-1:], qpad, axis=0)])
         wj = jnp.asarray(wins32)
-        snap_repl, table, _ = self._sharded_placement()
+        snap_repl, table, _, maxw = self._sharded_placement()
         cap, budget = self._cap, cfg.exact_budget
         while True:
             use_budget = budget if 0 < budget < cap else 0
             comp = self._compaction(base, use_budget or None)
             if comp == "sort":   # legacy argsort baseline: single-device only
                 comp = "scan"
-            step = self._sharded_step(base, cap, use_budget, comp)
+            step = self._sharded_step(base, cap, use_budget, comp, maxw)
             hits, counts = step(snap_repl, wj, table)
             counts = np.asarray(counts)
             if (counts >= 0).all():
@@ -1223,7 +1264,7 @@ class SpatialIndex:
         if added.shape[0] >= self.config.delta_device_min:
             table = self._delta_table()
         elif added.shape[0]:
-            av = gs.verts[added].astype(np.float32)
+            av = gs.padded(added).astype(np.float32)
             an, ak = gs.nverts[added], gs.kinds[added]
         return (tombs, added, table, av, an, ak)
 
@@ -1336,7 +1377,8 @@ class SpatialIndex:
                 if cand.shape[0] < k:
                     continue
                 d = np.sqrt(geom.rect_geom_sqdist(
-                    wins[i], gs.verts[cand], gs.nverts[cand], gs.kinds[cand]))
+                    wins[i], gs.padded(cand), gs.nverts[cand],
+                    gs.kinds[cand]))
                 order = np.lexsort((cand, d))
                 if d[order[k - 1]] <= r:
                     sel = order[:k]

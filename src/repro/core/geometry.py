@@ -8,12 +8,19 @@ window/boundary interaction is decided per edge segment, so no predicate
 assumes convexity anywhere.
 
 All functions are array-namespace generic: pass ``xp=numpy`` (host refinement,
-float64) or ``xp=jax.numpy`` (jitted batch refinement, float32). Geometries
-are stored as padded vertex rings::
+float64) or ``xp=jax.numpy`` (jitted batch refinement, float32). Predicates
+take DENSE padded vertex blocks::
 
     verts:  (N, V, 2)  padded with the last valid vertex
     nverts: (N,)       number of valid vertices
     kind:   GeomKind   POLYGON (closed simple ring) or POLYLINE (open chain)
+
+The store itself keeps geometry in a CSR vertex pool (``datasets.GeometrySet``
+/ the device ``VertexPods``); :func:`ragged_padded` is the thin adapter that
+materializes the dense per-candidate view from ``(pool, offsets, nverts)`` at
+a chosen width, reproducing the pad-with-last convention exactly — so the
+predicates (and the fp64-host / fp32-device ``xp=`` split) are unchanged by
+the pool layout.
 
 Query windows are axis-aligned rectangles (the paper's query windows are MBRs
 of KNN result sets), given as (4,) [xmin, ymin, xmax, ymax].
@@ -44,6 +51,7 @@ __all__ = [
     "rect_dwithin_geoms",
     "rect_geom_sqdist",
     "geoms_cover_rect",
+    "ragged_padded",
 ]
 
 
@@ -82,6 +90,23 @@ def mbrs_of_verts(verts, nverts, xp=np):
     xmax = xp.max(verts[..., 0], axis=-1)
     ymax = xp.max(verts[..., 1], axis=-1)
     return xp.stack([xmin, ymin, xmax, ymax], axis=-1)
+
+
+def ragged_padded(pool, offsets, nverts, width, xp=np):
+    """CSR ragged view -> dense ``(..., width, 2)`` padded block.
+
+    ``pool`` is the flat ``(P, 2)`` vertex pool; ``offsets``/``nverts`` are
+    same-shaped integer arrays addressing rings inside it. Each ring is
+    gathered at ``width`` lanes, repeating its last valid vertex past
+    ``nverts`` — bit-identical to the legacy dense pad-with-last layout (the
+    fp32 cast commutes with a gather, so device parity is preserved).
+    Out-of-pool indices are clamped, so masked/inert records only need
+    ``offset`` to point at ANY valid pool row.
+    """
+    nverts = xp.asarray(nverts)
+    lane = xp.minimum(xp.arange(width), nverts[..., None] - 1)
+    idx = xp.clip(xp.asarray(offsets)[..., None] + lane, 0, pool.shape[0] - 1)
+    return pool[idx]
 
 
 def _valid_mask(verts, nverts, xp):

@@ -144,7 +144,9 @@ class GLIN:
                     sel = sel[keep]
                 st.checked += int(sel.shape[0])
                 if sel.shape[0]:
-                    ok = rel.predicate(window, gs.verts[sel], gs.nverts[sel],
+                    # ragged store: gather only this candidate set's widest
+                    # ring, not the global max width
+                    ok = rel.predicate(window, gs.padded(sel), gs.nverts[sel],
                                        gs.kinds[sel])
                     hits = sel[ok]
                     if hits.shape[0]:
@@ -176,9 +178,11 @@ class GLIN:
     def insert(self, verts: np.ndarray, nverts: int, kind: int) -> int:
         """Insert one geometry; returns its record id (§VII).
 
-        Geometries wider than the store's vertex capacity grow the store
-        (re-padding every record) instead of being silently truncated, so the
-        MBR and exact-shape checks always see the full input ring."""
+        The CSR vertex pool appends exactly this record's ring — O(width)
+        bytes moved (amortized), regardless of how wide the new geometry is
+        relative to the rest of the store. Nothing is re-padded and nothing
+        is truncated, so the MBR and exact-shape checks always see the full
+        input ring."""
         gs = self.gs
         verts = np.asarray(verts, np.float64)
         nverts = int(nverts)
@@ -187,19 +191,9 @@ class GLIN:
                 f"verts must be (>=nverts, 2) with nverts >= 1; got "
                 f"shape {verts.shape}, nverts={nverts}")
         keep = verts[:nverts]
-        if nverts > gs.verts.shape[1]:
-            gs.grow_vertex_capacity(nverts)
-        vmax = gs.verts.shape[1]
-        verts = np.repeat(keep[-1:], vmax, axis=0)  # pad with last valid vertex
-        verts[:nverts] = keep
         mbr = np.array([keep[:, 0].min(), keep[:, 1].min(),
                         keep[:, 0].max(), keep[:, 1].max()])
-        rec = len(gs)
-        # append to the geometry store (amortized growth)
-        gs.verts = np.concatenate([gs.verts, verts[None, :, :]], axis=0)
-        gs.nverts = np.append(gs.nverts, np.int32(nverts))
-        gs.kinds = np.append(gs.kinds, np.int8(kind))
-        gs.mbrs = np.concatenate([gs.mbrs, mbr[None, :]], axis=0)
+        rec = gs.append(keep, nverts, kind, mbr)
         zmin, zmax = mbr_to_zinterval_np(mbr[None, :], gs.grid)
         zmin, zmax = int(zmin[0]), int(zmax[0])
         self.zmin = np.append(self.zmin, np.int64(zmin))
@@ -232,7 +226,10 @@ class GLIN:
             return False
         leaf.delete_at(pos)
         # MBR intentionally NOT shrunk (§VII) — stale MBRs only add false
-        # positives, never true negatives.
+        # positives, never true negatives. The store tombstones the ring;
+        # its pool space is reclaimed by the compaction pass at the next
+        # snapshot republish (published snapshots may still read it).
+        self.gs.mark_dead(rec)
         self._maybe_merge(leaf)
         if self.pw is not None:
             self.pw.delete(zmin, int(self.zmax[rec]))
@@ -368,7 +365,7 @@ def knn(glin: GLIN, point, k: int):
                               "intersects")
         if cand.shape[0] >= k:
             d = np.sqrt(geom.rect_geom_sqdist(
-                rect, gs.verts[cand], gs.nverts[cand], gs.kinds[cand]))
+                rect, gs.padded(cand), gs.nverts[cand], gs.kinds[cand]))
             order = np.lexsort((cand, d))
             kth = d[order[k - 1]]
             if kth <= r:

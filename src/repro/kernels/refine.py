@@ -276,13 +276,19 @@ def refine_cost(kind: str, q: int, n: int, budget: int = 0,
 
     ``kind``: "mask" | "count" | "compact" | "exact" — "exact" models the
     downstream exact-shape refinement stage over the compacted (Q, budget)
-    survivors (``verts`` = padded ring width), so the roofline report covers
-    the full compact+refine pipeline, not just candidate counting.
+    survivors, so the roofline report covers the full compact+refine
+    pipeline, not just candidate counting. ``verts`` is the gather width of
+    the batch's widest surviving pow2 width-bucket (the vertex-pool pods
+    gather per-bucket, see ``core.device.VertexPods``), NOT the store-wide
+    dense padding — callers should pass ``pow2ceil`` of the surviving ring
+    width they expect.
     """
     tiles_q = -(-q // bq)
     if kind == "exact":
-        # gather + predicate over compacted survivors: verts (V,2) f32 per
-        # candidate, ~40 flops per vertex (edge clip + ray cast)
+        # per-bucket pod gather + predicate over compacted survivors:
+        # verts = widest surviving bucket width, (verts, 2) f32 rings plus
+        # the (off, nverts, kind, bucket) record header; ~40 flops per
+        # vertex (edge clip + ray cast)
         bytes_accessed = q * budget * (verts * 8 + 16) + q * budget * 4
         flops = q * budget * verts * 40
         return {"flops": float(flops), "bytes_accessed": float(bytes_accessed),

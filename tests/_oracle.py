@@ -273,27 +273,17 @@ def oracle_query(window, verts, nverts, kinds, relation, live=None):
 # Mixed store builder (convex polygons + concave rings + polylines + points)
 # ---------------------------------------------------------------------------
 def mixed_store(n, seed=0, fp32_exact=True):
-    """A GeometrySet mixing every generator family, with fp32-representable
-    coordinates by default so the fp64 host and fp32 device paths decide the
-    same geometric configurations."""
-    from repro.core.datasets import GeometrySet, generate
+    """The heavy-tailed ``mixed`` dataset family (points + short polylines +
+    convex polygons + 64-vertex rings in one CSR pool), with
+    fp32-representable coordinates by default so the fp64 host and fp32
+    device paths decide the same geometric configurations."""
+    from repro.core.datasets import generate
     from repro.core.geometry import mbrs_of_verts
 
-    kinds_n = {"uniform": n // 4, "concave": n // 4, "roads": n // 4,
-               "points": n - 3 * (n // 4)}
-    parts = [generate(name, cnt, seed=seed + i)
-             for i, (name, cnt) in enumerate(kinds_n.items()) if cnt]
-    vmax = max(p.verts.shape[1] for p in parts)
-    for p in parts:
-        p.grow_vertex_capacity(vmax)
-    verts = np.concatenate([p.verts for p in parts])
-    nverts = np.concatenate([p.nverts for p in parts])
-    kinds = np.concatenate([p.kinds for p in parts])
+    gs = generate("mixed", n, seed=seed)
     if fp32_exact:
-        verts = verts.astype(np.float32).astype(np.float64)
-    gs = GeometrySet(verts=verts, nverts=nverts, kinds=kinds,
-                     mbrs=mbrs_of_verts(verts, nverts), grid=parts[0].grid,
-                     name="mixed")
-    # shuffle so families interleave in Zmin order too
-    rng = np.random.default_rng(seed + 99)
-    return gs.take(rng.permutation(len(gs)))
+        # round-trip the pool through fp32 via the dense compatibility view
+        # (re-imports into the pool) and recompute MBRs to match
+        gs.verts = gs.verts.astype(np.float32).astype(np.float64)
+        gs.mbrs = mbrs_of_verts(gs.verts, gs.nverts)
+    return gs

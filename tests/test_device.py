@@ -9,7 +9,7 @@ import pytest
 
 from repro.core import geometry as geom
 from repro.core.datasets import generate, make_query_windows
-from repro.core.device import batch_probe, batch_query
+from repro.core.device import batch_probe, batch_query, pods_from_store
 from repro.core.engine import EngineConfig, SpatialIndex
 from repro.core.index import GLIN, GLINConfig
 from repro.core.zorder import split_hilo_np
@@ -55,8 +55,7 @@ def test_batch_query_matches_fp32_oracle(relation):
     s = _publish(g)
     wins = make_query_windows(gs, 0.005, 6, seed=4).astype(np.float32)
     hits, counts = batch_query(
-        s, jnp.asarray(wins), jnp.asarray(gs.verts.astype(np.float32)),
-        jnp.asarray(gs.nverts), jnp.asarray(gs.kinds.astype(np.int32)),
+        s, jnp.asarray(wins), pods_from_store(gs),
         jnp.asarray(gs.mbrs.astype(np.float32)), relation=relation, cap=8192)
     hits, counts = np.asarray(hits), np.asarray(counts)
     assert (counts >= 0).all(), "unexpected cap overflow"
@@ -71,8 +70,7 @@ def test_cap_overflow_is_signalled():
     s = _publish(g)
     w = np.array([[0.0, 0.0, 1.0, 1.0]], np.float32)  # whole domain
     _, counts = batch_query(
-        s, jnp.asarray(w), jnp.asarray(gs.verts.astype(np.float32)),
-        jnp.asarray(gs.nverts), jnp.asarray(gs.kinds.astype(np.int32)),
+        s, jnp.asarray(w), pods_from_store(gs),
         jnp.asarray(gs.mbrs.astype(np.float32)), relation="contains", cap=256)
     assert int(counts[0]) < 0
 
@@ -83,8 +81,7 @@ def test_two_stage_equals_one_stage():
     g = GLIN.build(gs, GLINConfig(piece_limitation=300))
     s = _publish(g)
     wins = make_query_windows(gs, 0.002, 6, seed=7).astype(np.float32)
-    args = (s, jnp.asarray(wins), jnp.asarray(gs.verts.astype(np.float32)),
-            jnp.asarray(gs.nverts), jnp.asarray(gs.kinds.astype(np.int32)),
+    args = (s, jnp.asarray(wins), pods_from_store(gs),
             jnp.asarray(gs.mbrs.astype(np.float32)))
     for rel in ("contains", "intersects"):
         h1, c1 = batch_query(*args, relation=rel, cap=8192)
@@ -102,8 +99,7 @@ def test_two_stage_budget_overflow_signalled():
     s = _publish(g)
     w = np.array([[0.0, 0.0, 1.0, 1.0]], np.float32)  # everything passes MBR
     _, counts = batch_query(
-        s, jnp.asarray(w), jnp.asarray(gs.verts.astype(np.float32)),
-        jnp.asarray(gs.nverts), jnp.asarray(gs.kinds.astype(np.int32)),
+        s, jnp.asarray(w), pods_from_store(gs),
         jnp.asarray(gs.mbrs.astype(np.float32)), relation="contains",
         cap=8192, exact_budget=128)
     assert int(counts[0]) < 0

@@ -395,7 +395,10 @@ def test_write_heavy_parity_stream():
 def test_delta_path_no_payload_reupload_between_publishes():
     """The added-set patch runs host-side: streaming inserts must NOT force
     per-query re-uploads of the multi-MB geometry payload, and deletes never
-    invalidate it. Only width growth and republish past the cached store do."""
+    invalidate it. With the CSR pool even a WIDER-than-ever insert keeps the
+    cached pods (the added record is served by the delta patch, never
+    gathered from the payload); only a compacting republish — the moment the
+    device pool should actually shrink — rebuilds it."""
     idx = _build(n=2000, config=EngineConfig(device_min_batch=1))
     wins = make_query_windows(idx.gs, 0.01, 8, seed=3)
     idx.query(wins, "intersects", backend="device")
@@ -410,13 +413,19 @@ def test_delta_path_no_payload_reupload_between_publishes():
     idx.delete(int(live[0]))
     idx.query(wins, "intersects")
     assert idx._payload is pay0
-    # width growth between publishes: payload rebuilt, snapshot NOT republished
+    # width growth between publishes: the pool appends O(width) bytes, the
+    # payload survives untouched and the snapshot is NOT republished
     publishes = idx._publishes
-    nv = idx.gs.verts.shape[1] + 4
+    nv = idx.gs.max_nverts + 4
     idx.insert(_big_polygon(rng, np.array([0.5, 0.5]), r=1e-3, nv=nv), nv, 0)
     res = idx.query(wins, "intersects")
     assert res.plan.backend == "device+delta"
-    assert idx._payload is not pay0 and idx._publishes == publishes
+    assert idx._payload is pay0 and idx._publishes == publishes
+    # a compacting republish (deletes pending) bumps the store layout
+    # generation: the next device query rebuilds the payload once
+    idx.snapshot()
+    idx.query(wins, "intersects", backend="device")
+    assert idx._payload is not pay0
 
 
 def test_delta_path_shares_adaptive_cap_ladder():

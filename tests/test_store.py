@@ -1,0 +1,226 @@
+"""CSR vertex-pool store invariants and maintenance-cost contracts.
+
+The ragged store replaces the dense padded ``(N, V, 2)`` block: one flat
+``(total_verts, 2)`` float64 pool plus per-record ``(offset, nverts)``.
+These tests pin the layout invariants the rest of the stack leans on —
+ring round-trips, padded-gather parity with the ``geometry.ragged_padded``
+adapter, O(record width) insert cost, compaction semantics (bytes
+reclaimed, ids stable, dead repointed in-bounds), the ``layout_version``
+cache-key contract, and the jit-signature stability of a republish after
+pool compaction (sticky pool/width floors in the engine).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.datasets import GeometrySet, generate, make_query_windows
+from repro.core.engine import EngineConfig, SpatialIndex
+from repro.core.geometry import ragged_padded
+from repro.core.index import GLINConfig
+
+from _oracle import mixed_store
+
+
+def _mixed(n=400, seed=0):
+    return generate("mixed", n, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# CSR layout invariants
+# ---------------------------------------------------------------------------
+def test_csr_offsets_partition_the_pool():
+    gs = _mixed()
+    off, nv = gs.offsets, gs.nverts.astype(np.int64)
+    assert gs.pool_len == int(nv.sum())
+    assert gs.pool.shape == (gs.pool_len, 2)
+    # freshly generated stores are densely packed in record order
+    np.testing.assert_array_equal(off[1:], off[:-1] + nv[:-1])
+    assert off[0] == 0
+    # every ring stays in-bounds
+    assert int((off + nv).max()) <= gs.pool_len
+
+
+def test_ring_roundtrips_through_dense_view():
+    gs = _mixed()
+    dense = gs.verts                       # dense compatibility view
+    assert dense.shape == (len(gs), gs.max_nverts, 2)
+    for rec in (0, 7, len(gs) // 2, len(gs) - 1):
+        nv = int(gs.nverts[rec])
+        np.testing.assert_array_equal(gs.ring(rec), dense[rec, :nv])
+        # padding repeats the last valid vertex
+        np.testing.assert_array_equal(
+            dense[rec, nv:], np.broadcast_to(dense[rec, nv - 1],
+                                             (gs.max_nverts - nv, 2)))
+
+
+def test_padded_subset_matches_ragged_padded_adapter():
+    gs = _mixed()
+    idx = np.asarray([3, 0, len(gs) - 1, 11, 11])   # repeats allowed
+    for width in (None, 64, 128):
+        want = gs.padded(idx, width=width)
+        got = ragged_padded(gs.pool, gs.offsets[idx], gs.nverts[idx],
+                            want.shape[1], xp=np)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_layout_version_tracks_rewrites_not_appends():
+    """Device payload caches key on ``layout_version``: appends must NOT bump
+    it (they only extend the pool), while compaction and dense re-import
+    rewrite live pool contents and must."""
+    gs = _mixed(200)
+    lv = gs.layout_version
+    pv = gs.pool_version
+    gs.append(np.zeros((3, 2)) + 0.5, 3, 0)
+    assert gs.layout_version == lv and gs.pool_version > pv
+    gs.verts = gs.verts.copy()             # dense re-import rewrites the pool
+    assert gs.layout_version == lv + 1
+    gs.mark_dead(0)
+    gs.compact()
+    assert gs.layout_version == lv + 2
+
+
+# ---------------------------------------------------------------------------
+# Insert cost: O(record width), independent of store size
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [128, 8192])
+def test_insert_moves_o_record_width_bytes(n):
+    """REGRESSION (dense-era re-pad): appending one record used to rebuild
+    the whole ``(N, V, 2)`` block when the new record was wider than the
+    current padding — O(N*V) bytes per insert. Under the pool, an append
+    with capacity available moves exactly the record's own bytes
+    (w vertices * 16B + 45B of per-record metadata), for ANY store size and
+    ANY width, including widths beyond the current maximum."""
+    gs = _mixed(n)
+    per_record_meta = 8 + 4 + 1 + 32       # offset + nverts + kind + mbr
+    wide = gs.max_nverts * 4               # wider than anything in the store
+    gs.reserve(len(gs) + 8, gs.pool_len + 8 * wide)
+    for w in (1, 5, wide):
+        ring = np.linspace(0.2, 0.4, 2 * w).reshape(w, 2)
+        before = gs.bytes_moved
+        gs.append(ring, w, 0)
+        assert gs.bytes_moved - before == w * 16 + per_record_meta
+
+
+def test_insert_amortized_without_reserve():
+    """Without pre-reserving, doubling growth keeps TOTAL bytes moved over a
+    burst linear in the payload actually appended (no per-insert re-pad)."""
+    gs = _mixed(256)
+    base = gs.bytes_moved
+    payload = 0
+    for i in range(500):
+        w = 1 + (i % 9)
+        gs.append(np.full((w, 2), 0.5), w, 0)
+        payload += w * 16 + 45
+    moved = gs.bytes_moved - base
+    # doubling amortization: each byte is copied O(1) times on average
+    assert moved < 4 * payload + gs.pool_len * 16
+
+
+# ---------------------------------------------------------------------------
+# Compaction
+# ---------------------------------------------------------------------------
+def test_compact_reclaims_bytes_and_keeps_ids_stable():
+    gs = _mixed(300)
+    # tombstone the widest decile so compaction visibly shrinks the pool
+    victims = np.argsort(gs.nverts, kind="stable")[-30:]
+    live = np.setdiff1d(np.arange(len(gs)), victims)
+    rings_before = {int(r): gs.ring(int(r)).copy() for r in live[:50]}
+    pool_before = gs.pool_len
+    for r in victims:
+        gs.mark_dead(int(r))
+    assert gs.dead_count == len(victims)
+    reclaimed = gs.compact()
+    assert reclaimed > 0
+    assert gs.pool_len < pool_before
+    assert len(gs) == 300                  # ids stable: no renumbering
+    for r, ring in rings_before.items():   # live rings byte-identical
+        np.testing.assert_array_equal(gs.ring(r), ring)
+    # dead records are repointed at finite, in-bounds placeholder storage
+    np.testing.assert_array_equal(gs.offsets[victims], 0)
+    np.testing.assert_array_equal(gs.nverts[victims], 1)
+    assert gs.compact() == 0               # idempotent when nothing is dead
+
+
+# ---------------------------------------------------------------------------
+# The mixed (heavy-tailed) family
+# ---------------------------------------------------------------------------
+def test_mixed_family_is_heavy_tailed_and_pool_pays_off():
+    gs = _mixed(2000)
+    nv = gs.nverts
+    assert int(nv.min()) == 1              # points
+    assert int(nv.max()) == 64             # dense rings
+    assert float(nv.mean()) < 16           # the tail is thin
+    assert len(np.unique(gs.kinds)) >= 2   # polygons AND polylines
+    # the headline the storage bench gates on: dense padding makes every
+    # point pay for the 64-vertex rings
+    assert gs.dense_nbytes() >= 2 * gs.nbytes()
+
+
+# ---------------------------------------------------------------------------
+# Republish after compaction keeps the jit signature (no recompile)
+# ---------------------------------------------------------------------------
+def test_republish_after_compaction_keeps_jit_signature():
+    """Deletes + compacting republish must NOT change the shapes of the
+    device payload or snapshot: the engine's sticky pool/width floors keep
+    the padded pod pool, width ladder, and snapshot arrays bit-compatible
+    with the compiled step, so the second publish re-uses the first
+    publish's compiled ``batch_query`` entry."""
+    from repro.core.device import batch_query
+
+    gs = mixed_store(600, seed=3)
+    idx = SpatialIndex.build(
+        gs, GLINConfig(piece_limitation=10_000),
+        EngineConfig(device_min_batch=1, stale_rebuild_min_batch=1,
+                     initial_cap=8192, exact_budget=256,
+                     delta_patch_max=4096, refresh_threshold=1 << 30))
+    wins = make_query_windows(gs, 0.01, 6, seed=5)
+    wins = wins.astype(np.float32).astype(np.float64)
+
+    widest = np.argsort(gs.nverts, kind="stable")[::-1]
+    for r in widest[:20]:
+        idx.delete(int(r))
+    idx.snapshot()                          # republish #1 compacts the pool
+    res1 = idx.query(wins, "intersects", backend="device")
+    host1 = idx.query(wins, "intersects", backend="host")
+    pods1, mbrs1 = idx._payload
+    shapes1 = (pods1.pool.shape, pods1.off.shape, pods1.nv.shape,
+               pods1.bucket.shape, pods1.max_width, mbrs1.shape)
+    cache1 = batch_query._cache_size()
+    assert cache1 >= 1
+
+    pool_after_first = idx.gs.pool_len
+    for r in widest[20:60]:                 # second round of deletes
+        idx.delete(int(r))
+    idx.snapshot()                          # republish #2 compacts again
+    assert idx.gs.pool_len < pool_after_first   # the pool really shrank
+    res2 = idx.query(wins, "intersects", backend="device")
+    host2 = idx.query(wins, "intersects", backend="host")
+    pods2, mbrs2 = idx._payload
+    shapes2 = (pods2.pool.shape, pods2.off.shape, pods2.nv.shape,
+               pods2.bucket.shape, pods2.max_width, mbrs2.shape)
+    assert shapes2 == shapes1               # sticky floors held every shape
+    assert batch_query._cache_size() == cache1   # hence: no recompile
+
+    # and the served results stay exact across both publishes
+    for res, host in ((res1, host1), (res2, host2)):
+        for a, b in zip(res, host):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_snapshot_capture_compacts_store():
+    gs = mixed_store(300, seed=1)
+    idx = SpatialIndex.build(gs, GLINConfig(piece_limitation=10_000),
+                             EngineConfig(refresh_threshold=1 << 30))
+    for r in range(0, 30):
+        idx.delete(r)
+    assert idx.gs.dead_count == 30
+    pool_before = idx.gs.pool_len
+    idx.snapshot()
+    # republish ran compaction: tombstoned rings left the pool, but the
+    # records kept their ids (repointed, still masked out of results)
+    assert idx.gs.pool_len < pool_before
+    assert idx.gs.dead_count == 30
+    got = idx.query(make_query_windows(gs, 0.05, 4, seed=2), "intersects")
+    for hits in got:
+        assert not set(hits.tolist()) & set(range(30))
