@@ -19,6 +19,13 @@ sustainable QPS under a p99 SLO** for two configurations:
 overlap + adaptive gather off) separating the micro-batching win from the
 overlap/replica win.
 
+After the serving ladder, a **Zipf hot-query tier** replays byte-identical
+popular windows (bounded Zipf popularity, no per-arrival jitter) through the
+live pump config: repeats land in the result cache or get coalesced inside a
+micro-batch, and the tier reports the cache-hit / coalesced telemetry deltas
+alongside its percentiles (``zipf`` in the BENCH record, gated by
+``check_bench.py``).
+
 Both configurations serve EVERY scheduled arrival (overload tiers pay the
 backlog in latency, which is what busts the SLO), and exactness is asserted
 against the host oracle through the serving path after every tier, with
@@ -238,6 +245,68 @@ def _run_tier_pump(server, pool, relations, qps, seconds, write_frac,
             "wall_s": time.perf_counter() - t0}
 
 
+def _run_tier_zipf(server, pool, relations, qps, seconds, write_frac,
+                   rng, skew: float = 1.3, tenants: int = 2) -> dict:
+    """Hot-query-skew tier: arrivals draw their window from a bounded Zipf
+    popularity law over the RAW pool — repeats are byte-identical on
+    purpose (no per-arrival jitter), so the stream exercises the result
+    cache and, whenever a write drops a generation or the hot set collides
+    inside one gather, the micro-batch coalescing path. Submission is
+    open-loop pump-mode like :func:`_run_tier_pump`."""
+    probs = 1.0 / np.arange(1.0, len(pool) + 1) ** skew
+    probs /= probs.sum()
+    sched = _schedule(qps, seconds, rng)
+    picks = rng.choice(len(pool), size=len(sched), p=probs)
+    wins = pool[picks]
+    rels = [relations[i % len(relations)] for i in range(len(sched))]
+    writes = rng.random(len(sched)) < write_frac
+    tens = [f"t{i % tenants}" for i in range(len(sched))]
+    t_submit: Dict[int, float] = {}
+    t0 = time.perf_counter()
+    for k, dt_arr in enumerate(sched):
+        t_arr = t0 + dt_arr
+        now = time.perf_counter()
+        if t_arr > now:
+            time.sleep(t_arr - now)
+        if writes[k]:
+            server.insert(_polygon(rng), 8, 0)
+        t_submit[server.submit(wins[k], rels[k], tenant=tens[k])] = t_arr
+    lat: List[float] = []
+    shed = 0
+    for t, t_arr in t_submit.items():
+        val, t_res = server.result_at(t, timeout=120.0)
+        if isinstance(val, Rejected):
+            shed += 1
+        else:
+            lat.append(t_res - t_arr)
+    row = {"offered_qps": qps, "skew": skew, "submitted": len(sched),
+           "shed": shed, "completed": len(lat),
+           "wall_s": time.perf_counter() - t0}
+    row.update(_percentiles(lat))
+    return row
+
+
+def _zipf_tier(server, idx, pool, relations, qps, seconds, write_frac,
+               csv: Csv) -> dict:
+    """Run the Zipf tier on the live serving config and report the cache /
+    coalescing telemetry it generated (deltas across the tier)."""
+    before = server.stats()
+    row = _run_tier_zipf(server, pool, relations, qps, seconds, write_frac,
+                         np.random.default_rng(41))
+    after = server.stats()
+    for key in ("cache_hits", "cache_misses", "coalesced"):
+        row[key] = after[key] - before[key]
+    served = row["cache_hits"] + row["cache_misses"]
+    row["cache_hit_rate"] = row["cache_hits"] / served if served else 0.0
+    _exactness_check(server, idx, pool[:CHECK_WINDOWS], relations, pump=True)
+    row["exact"] = True
+    csv.emit(f"serving/zipf/qps={qps:.0f}", 1e3 * row["p99_ms"],
+             f"p50={row['p50_ms']:.1f}ms;p99={row['p99_ms']:.1f}ms;"
+             f"hits={row['cache_hits']};coalesced={row['coalesced']};"
+             f"hit_rate={row['cache_hit_rate']:.2f}")
+    return row
+
+
 def _ladder(name: str, server, idx, pool, relations, tiers, seconds,
             write_frac, slo_s, csv: Csv, pump: bool) -> dict:
     rng = np.random.default_rng(17)
@@ -336,6 +405,9 @@ def run(csv: Csv, large: bool = False, quick: bool = False,
         res_serving = _ladder("serving", serving, idx_b, pool, relations,
                               tiers, seconds, write_frac, slo_s, csv,
                               pump=True)
+        # hot-query skew: byte-identical repeats through cache + coalescing
+        res_zipf = _zipf_tier(serving, idx_b, pool, relations,
+                              1.25 * peak_qps, seconds, write_frac, csv)
     finally:
         serving.stop()
 
@@ -349,6 +421,7 @@ def run(csv: Csv, large: bool = False, quick: bool = False,
         "calib_unit_ms": 1e3 * unit_s,
         "slo_ms": 1e3 * slo_s,
         "configs": {"serial_flush": res_serial, "serving": res_serving},
+        "zipf": res_zipf,
         "exact": True,
     }
 

@@ -25,7 +25,9 @@ runs on shared runners) — and gate only under ``--strict-latency``
   the same machine-relative SLO), the exactness flag from the in-run oracle
   checks, and a percentile sanity check (p999 present and
   p999 >= p99 >= p50 on every tier of every config — a harness that stops
-  reporting the tail would otherwise pass the ratio gate vacuously).
+  reporting the tail would otherwise pass the ratio gate vacuously). The
+  Zipf hot-query tier is gated too: it must stay exact and its repeats must
+  surface as cache hits and/or coalesced duplicates.
 * ``BENCH_storage.json``  — the CSR vertex-pool store's bytes on the
   heavy-tailed ``mixed`` dataset staying >= ``--min-storage-ratio`` x
   smaller than the dense ``(N, maxV, 2)`` padding would cost (size-based,
@@ -166,6 +168,33 @@ def check(fresh_dir: pathlib.Path, committed_dir: pathlib.Path,
                     f"serving: {cname}@{row.get('offered_qps', 0):.0f}qps "
                     f"percentiles not monotone (p50={p50:.1f} p99={p99:.1f} "
                     f"p999={p999:.1f}ms)")
+
+    # the Zipf hot-query tier must exist, stay exact, and actually exercise
+    # the fast paths it was built to cover: byte-identical repeats have to
+    # show up as cache hits or coalesced duplicates (both zero would mean
+    # the tier degenerated into a plain uniform load)
+    zipf = srv_new.get("zipf")
+    if not zipf:
+        errors.append("serving: zipf hot-query tier missing")
+    else:
+        if not zipf.get("exact", False):
+            errors.append("serving: zipf tier exactness flag missing/false")
+        if zipf.get("completed", 0) < 0.98 * zipf.get("submitted", 1):
+            errors.append("serving: zipf tier dropped arrivals "
+                          f"({zipf.get('completed')}/{zipf.get('submitted')})")
+        hits = zipf.get("cache_hits", 0)
+        coal = zipf.get("coalesced", 0)
+        if hits + coal <= 0:
+            errors.append("serving: zipf tier produced no cache hits and no "
+                          "coalesced duplicates — the skewed stream missed "
+                          "the cache + coalescing path entirely")
+        zp = [zipf.get("p50_ms"), zipf.get("p99_ms"), zipf.get("p999_ms")]
+        if any(p is None for p in zp):
+            errors.append("serving: zipf tier missing a latency percentile")
+        elif not (zp[2] >= zp[1] >= zp[0]):
+            errors.append(f"serving: zipf tier percentiles not monotone "
+                          f"(p50={zp[0]:.1f} p99={zp[1]:.1f} "
+                          f"p999={zp[2]:.1f}ms)")
 
     # storage overhead is size-based, hence machine-independent: the pooled
     # CSR layout must keep beating dense (N, maxV, 2) padding on the

@@ -13,6 +13,7 @@ from .relations import Relation, get_relation, register_relation, relation_names
 from .device import GLINSnapshot, snapshot_from_host, batch_query
 from .engine import (EngineConfig, QueryBatch, QueryPlan, QueryResult,
                      SpatialIndex)
+from .exec import PIPELINE_STAGES, ExecutionPlan, OverflowLadder, StageStats
 
 __all__ = [
     "GeometrySet", "generate", "make_query_windows",
@@ -20,4 +21,5 @@ __all__ = [
     "PiecewiseFunction", "GLINSnapshot", "snapshot_from_host", "batch_query",
     "Relation", "get_relation", "register_relation", "relation_names",
     "EngineConfig", "QueryBatch", "QueryPlan", "QueryResult", "SpatialIndex",
+    "PIPELINE_STAGES", "ExecutionPlan", "OverflowLadder", "StageStats",
 ]

@@ -568,9 +568,10 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, pods: VertexPods,
     outgrew ``cap`` (scan/sort window stage 1 to the cap; the magnitude
     being > cap disambiguates), else ``-(TOTAL MBR survivors) - 1`` so the
     caller can grow its ``exact_budget`` ladder straight to a sufficient
-    budget (the ``SpatialIndex`` facade does). On the single-stage dense
-    path it encodes the truncated hit count and only signals that the slot
-    run outgrew ``cap``.
+    budget (``core.exec.OverflowLadder`` — the ONE escalation policy every
+    backend's refine stage shares — does). On the single-stage dense path it
+    encodes the truncated hit count and only signals that the slot run
+    outgrew ``cap``.
 
     ``exact_budget`` > 0 enables TWO-STAGE refinement (beyond-paper, §Perf):
     stage 1 evaluates only the cheap interval + leaf-MBR + record-MBR masks;

@@ -175,7 +175,9 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
     overflowed — so the caller can tell the two apart by comparing the
     magnitude against ``cap`` and size the right ladder in one step (the
     GLOBAL probe run is a useless overestimate here: a shard only ever sees
-    its sub-run).
+    its sub-run). ``core.exec.OverflowLadder.on_sharded_overflow`` consumes
+    this encoding — the same ladder object that drives the single-device
+    path, so escalation policy lives in exactly one place.
 
     ``compaction`` picks the stage-1 implementation: ``"scan"`` (the jnp
     cumsum+scatter reference — the CPU path) or ``"pallas"`` (the fused

@@ -23,12 +23,18 @@ the device path. This facade owns all of it:
   fp32 mask) — instead of paying a full republish per write. Once the delta
   grows past ``EngineConfig.refresh_threshold`` the snapshot is republished
   (bulk re-flatten, a few ms of vectorized work, amortized O(1)/update);
-* **execution is planned**: ``plan(batch)`` picks the host loop (small or
-  stats-collecting batches, knn), the jitted device ``batch_query`` (large
-  batches, fresh or republished snapshot), or ``device+delta`` (stale
-  snapshot, small delta: snapshot query + delta patch, no republish); the
-  candidate ``cap`` doubles on overflow and is shared by all device modes,
-  and ``count_candidates`` routes through the Pallas refine kernel on TPU;
+* **execution is planned, then staged**: ``plan(batch)`` picks a backend
+  (host loop for small or stats-collecting batches and knn; jitted device
+  ``batch_query`` for large batches against a fresh or republished
+  snapshot; ``device+delta`` for a stale snapshot with a small delta;
+  ``sharded`` when a mesh is active) and ``core.exec.compile_plan`` turns
+  the choice into an :class:`~repro.core.exec.ExecutionPlan` — an ordered
+  stage composition (refine -> delta-patch -> complement-finish) with ONE
+  shared overflow-ladder/patch/complement implementation across backends
+  and per-stage telemetry on every result (``QueryResult.stages``,
+  ``stats()["stages"]``, :meth:`SpatialIndex.explain`); the adaptive
+  candidate ``cap`` is shared by all device modes, and
+  ``count_candidates`` routes through the Pallas refine kernel on TPU;
 * **precision**: host execution refines in fp64; device execution refines in
   fp32 (results can differ at exact window boundaries, by design — the probe
   interval is quantized conservatively so hits are never missed, see
@@ -57,15 +63,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from . import geometry as geom
+from . import exec as qexec
 from .datasets import GeometrySet
+# batch_query is re-exported for the exec stages (and tests), which resolve
+# it through THIS module's namespace so a monkeypatched binding is honored
+from .device import batch_query  # noqa: F401
 from .device import (DeltaTable, GLINSnapshot, HostCapture, _pow2ceil,
-                     batch_check_added, batch_query, batch_query_bounds,
-                     delta_table_from_host, pods_from_store,
-                     snapshot_capture, snapshot_from_capture)
+                     batch_query_bounds, delta_table_from_host,
+                     pods_from_store, snapshot_capture, snapshot_from_capture)
 from .index import GLIN, GLINConfig, QueryStats
-from .index import initial_knn_radius
-from .index import knn as _host_knn
 from .relations import get_relation
 
 __all__ = ["EngineConfig", "QueryBatch", "QueryPlan", "QueryResult",
@@ -193,6 +199,9 @@ class QueryResult:
     epoch: int                                  # index epoch that was served
     stats: Optional[List[QueryStats]] = None    # host path, when requested
     distances: Optional[List[np.ndarray]] = None  # knn only
+    stages: Optional[List["qexec.StageStats"]] = None  # per-stage telemetry
+    # (wall time, survivors, ladder escalations, delta sizes) of the
+    # executed ExecutionPlan, in stage order
 
     def __len__(self) -> int:
         return len(self.ids)
@@ -299,6 +308,9 @@ class SpatialIndex:
         # device_put copy of the published snapshot + payload, keyed on the
         # (publish, payload) generation it was fanned out from
         self._replica_places: Dict[int, Tuple] = {}
+        # per-(backend, stage) telemetry aggregates (stats()["stages"]):
+        # calls, wall_ms, queries, survivors, ladder escalations, delta sizes
+        self._stage_totals: Dict[str, Dict[str, Dict[str, float]]] = {}
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -323,7 +335,32 @@ class SpatialIndex:
             st["snapshot_publishes"] = self._publishes
             st["republish_inflight"] = self._inflight is not None
             st["replicas"] = max(1, self.config.replicas)
+            st["stages"] = {b: {s: dict(v) for s, v in per.items()}
+                            for b, per in self._stage_totals.items()}
             return st
+
+    def _record_stages(self, backend: str,
+                       stage_stats: List["qexec.StageStats"]) -> None:
+        """Fold one execution's per-stage telemetry into the aggregates
+        surfaced by ``stats()["stages"]`` (keyed backend -> stage label)."""
+        with self._lock:
+            per = self._stage_totals.setdefault(backend, {})
+            for ss in stage_stats:
+                ent = per.setdefault(ss.stage, {
+                    "impl": ss.impl, "calls": 0, "skipped": 0,
+                    "wall_ms": 0.0, "queries": 0, "survivors": 0,
+                    "escalations": 0, "delta_added": 0,
+                    "delta_tombstoned": 0})
+                ent["calls"] += 1
+                ent["wall_ms"] += ss.wall_ms
+                if ss.skipped:
+                    ent["skipped"] += 1
+                    continue
+                ent["queries"] += ss.queries
+                ent["survivors"] += max(ss.survivors, 0)
+                ent["escalations"] += ss.escalations
+                ent["delta_added"] += ss.delta_added
+                ent["delta_tombstoned"] += ss.delta_tombstoned
 
     # ------------------------------------------------------------ maintenance
     def insert(self, verts: np.ndarray, nverts: int, kind: int = 0) -> int:
@@ -1002,21 +1039,34 @@ class SpatialIndex:
         with self._lock:
             self._maintain_async()
             plan = self.plan(batch)
-        if batch.kind == "knn":
-            return self._run_knn(batch, plan)
-        if plan.backend == "sharded":
-            with self._lock:
-                ids = self._run_sharded(batch, plan)
-                epoch = self._epoch
-            stats = None
-        elif plan.backend in ("device", "device+delta"):
-            ids, epoch = self._run_device(batch, plan, replica or 0)
-            stats = None
-        else:
-            with self._lock:
-                ids, stats = self._run_host(batch)
-                epoch = self._epoch
-        return QueryResult(ids=ids, plan=plan, epoch=epoch, stats=stats)
+        rel = base = None
+        if batch.kind == "window":
+            rel = get_relation(batch.relation)
+            base = get_relation(rel.base_name())
+        ctx = qexec.ExecContext(index=self, batch=batch, plan=plan,
+                                rel=rel, base=base, replica=replica or 0)
+        qexec.compile_plan(plan).execute(ctx)
+        self._record_stages(plan.backend, ctx.stage_stats)
+        return QueryResult(ids=ctx.ids, plan=plan, epoch=ctx.epoch,
+                           stats=ctx.host_stats, distances=ctx.distances,
+                           stages=ctx.stage_stats)
+
+    def explain(self, batch, relation: Optional[str] = None) -> str:
+        """Pretty-print how ``batch`` WOULD execute (same input forms as
+        :meth:`query`, nothing runs): the planner's decision plus the
+        compiled stage composition — one line per stage with its
+        implementation and the canonical pipeline stages it fuses."""
+        if not isinstance(batch, QueryBatch):
+            batch = QueryBatch.window(batch, relation or "intersects")
+        with self._lock:
+            plan = self.plan(batch)
+        eplan = qexec.compile_plan(plan)
+        head = (f"QueryPlan backend={plan.backend} kind={plan.kind} "
+                f"relation={plan.relation} delta={plan.delta_size}"
+                + (" rebuild" if plan.rebuild_snapshot else ""))
+        lines = [head, f"  reason: {plan.reason}", "  stages:"]
+        lines += [f"    {row}" for row in eplan.describe()]
+        return "\n".join(lines)
 
     # ------------------------------------------------------------- estimation
     def count_candidates(self, windows, relation: str = "intersects"
@@ -1042,197 +1092,16 @@ class SpatialIndex:
                                   use_pallas=jax.default_backend() == "tpu")
         return np.asarray(counts)
 
-    # -------------------------------------------------------------- execution
-    def _run_host(self, batch: QueryBatch):
-        stats = ([QueryStats() for _ in range(len(batch))]
-                 if batch.collect_stats else None)
-        ids = []
-        for i, w in enumerate(batch.windows):
-            st = stats[i] if stats is not None else None
-            ids.append(np.sort(self.glin.query(w, batch.relation, st)))
-        return ids, stats
-
-    def _grow_cap(self, cap: int, need: int) -> int:
-        cfg = self.config
-        if cap >= cfg.max_cap or need > cfg.max_cap:
-            raise OverflowError(
-                f"candidate run of {need} exceeded max_cap="
-                f"{cfg.max_cap}; raise EngineConfig.max_cap or "
-                f"narrow the windows")
-        return min(max(cap * 2, 1 << (need - 1).bit_length()), cfg.max_cap)
-
-    def _grow_budget(self, use_budget: int, survivors: int, cap: int) -> int:
-        """The ROADMAP's budget-overflow ladder: the negative-count encoding
-        carries the TRUE survivor count, so the budget grows geometrically
-        straight past it (re-running compaction) and only falls back to the
-        single-stage dense path once the needed budget exceeds
-        ``MAX_COMPACT_BUDGET`` (or the cap — two-stage would no longer shrink
-        anything)."""
-        from repro.kernels.refine import MAX_COMPACT_BUDGET
-
-        target = max(use_budget * 2, 1 << max(survivors - 1, 0).bit_length())
-        if target > MAX_COMPACT_BUDGET or target >= cap:
-            return 0         # ladder exhausted: single-stage dense
-        return target
-
-    def _grow_after_overflow(self, counts: np.ndarray, cap: int,
-                             use_budget: int, budget: int,
-                             snap: GLINSnapshot, wj, base: str,
-                             batch_len: int) -> Tuple[int, int]:
-        """The device-path overflow ladder: given negative-count overflow,
-        return the (cap, budget) for the retry.
-
-        The overflow signal conflates run-length > cap with MBR survivors >
-        exact_budget. A cheap bounds-only probe tells them apart, so we jump
-        straight to a sufficient cap — keeping the LOGICAL ``budget``
-        (a budget the old cap disabled because ``budget >= cap`` comes back
-        into play once the cap outgrows it). When the budget itself
-        overflowed, ``_grow_budget`` takes over."""
-        start, end = batch_query_bounds(snap, wj, relation=base)
-        need = int(np.max(np.asarray(end - start))) if batch_len else 0
-        if need > cap:
-            return self._grow_cap(cap, need), budget
-        if not use_budget:
-            raise AssertionError(
-                "single-stage overflow with run <= cap")  # unreachable
-        survivors = int(-(counts.min()) - 1)
-        return cap, self._grow_budget(use_budget, survivors, cap)
-
-    def _finish_complement(self, rel, ids: List[np.ndarray],
-                           live: Optional[np.ndarray] = None
-                           ) -> List[np.ndarray]:
-        if rel.complement_of is None:
-            return ids
-        if live is None:
-            live = np.nonzero(self.glin._live_mask())[0].astype(np.int64)
-        return [np.setdiff1d(live, r) for r in ids]
-
+    # ----------------------------------------------------- execution support
+    # The execution bodies themselves live in ``core.exec`` as stage
+    # compositions (compile_plan); what remains here are the freeze helpers
+    # the stages call under ``self._lock`` to capture consistent state.
     def _freeze_live(self, rel) -> Optional[np.ndarray]:
         """Live record ids for complement finishing, frozen under the lock
         (the live mask walks the mutable host leaves)."""
-        if rel.complement_of is None:
+        if not rel.is_complement:
             return None
         return np.nonzero(self.glin._live_mask())[0].astype(np.int64)
-
-    def _run_device(self, batch: QueryBatch, plan: QueryPlan,
-                    replica: int = 0):
-        cfg = self.config
-        rel = get_relation(batch.relation)
-        base = rel.base_name()
-        patch = plan.backend == "device+delta"
-        with self._lock:
-            # freeze everything the unlocked compute below reads: the served
-            # snapshot + payload (immutable device arrays, fanned out to the
-            # requested replica placement), copies of the delta sets and the
-            # live set — a writer landing after this block changes none of
-            # them, so the answer is exact at the frozen epoch.
-            # device+delta serves the published snapshot and patches the
-            # delta on top; plain device republishes first — either way the
-            # answer reflects the frozen epoch exactly
-            snap = self._published_snapshot() if patch else self.snapshot()
-            payload = self._device_payload(self._snapshot_recs)
-            snap, payload = self._replica_view(replica, snap, payload)
-            frozen = self._freeze_delta() if patch else None
-            live = self._freeze_live(rel)
-            epoch = self._epoch
-            cap, budget = self._cap, cfg.exact_budget
-        pods, mb = payload
-        q = len(batch.windows)
-        wq = batch.windows.astype(np.float32)
-        if cfg.pad_quantum > 0 and q:
-            # bucket the query axis to a power of two: the jitted
-            # batch_query compiles per windows shape, and a serving tier
-            # draining adaptively-sized micro-batches would otherwise
-            # compile once per distinct batch size. Padding rows repeat the
-            # last window and are sliced off below.
-            qb = 1 << (q - 1).bit_length()
-            if qb > q:
-                wq = np.concatenate([wq, np.repeat(wq[-1:], qb - q, 0)])
-        wj = jnp.asarray(wq)
-        while True:
-            use_budget = budget if 0 < budget < cap else 0
-            hits, counts = batch_query(
-                snap, wj, pods, mb, relation=base,
-                cap=cap, exact_budget=use_budget,
-                compaction=self._compaction(base, use_budget or None))
-            counts = np.asarray(counts)
-            if (counts >= 0).all():
-                with self._lock:
-                    # max-merge: a concurrent query may have grown it further
-                    self._cap = max(self._cap, cap)
-                break
-            cap, budget = self._grow_after_overflow(
-                counts, cap, use_budget, budget, snap, wj, base, len(batch))
-        hits = np.asarray(hits)[:q]
-        ids = [np.sort(row[row >= 0]).astype(np.int64) for row in hits]
-        if patch:
-            ids = self._patch_delta(batch, ids, frozen, snap)
-        return self._finish_complement(rel, ids, live), epoch
-
-    def _run_sharded(self, batch: QueryBatch, plan: QueryPlan
-                     ) -> List[np.ndarray]:
-        """The mesh backend: the fused probe -> compact -> exact pipeline
-        running per record shard (``core.distributed``), query windows
-        sharded over the model axis. Serves the published snapshot; when it
-        is stale the same tombstone/added delta patch as ``device+delta``
-        restores exactness on top (``plan.rebuild_snapshot`` republishes
-        first instead). Runs entirely under the facade lock (the mesh owns
-        every device — there is nothing to overlap with)."""
-        cfg = self.config
-        rel = get_relation(batch.relation)
-        base = rel.base_name()
-        if plan.rebuild_snapshot:
-            self.snapshot()
-        else:
-            self._published_snapshot()
-        patch = self.snapshot_is_stale()
-        mesh = cfg.mesh
-        q = len(batch)
-        # pad the batch to a model-axis multiple (shard_map divides Q evenly);
-        # padded rows repeat the last window and are sliced off after
-        m = mesh.shape["model"]
-        wins32 = batch.windows.astype(np.float32)
-        qpad = (-q) % m
-        if qpad:
-            wins32 = np.concatenate(
-                [wins32, np.repeat(wins32[-1:], qpad, axis=0)])
-        wj = jnp.asarray(wins32)
-        snap_repl, table, _, maxw = self._sharded_placement()
-        cap, budget = self._cap, cfg.exact_budget
-        while True:
-            use_budget = budget if 0 < budget < cap else 0
-            comp = self._compaction(base, use_budget or None)
-            if comp == "sort":   # legacy argsort baseline: single-device only
-                comp = "scan"
-            step = self._sharded_step(base, cap, use_budget, comp, maxw)
-            hits, counts = step(snap_repl, wj, table)
-            counts = np.asarray(counts)
-            if (counts >= 0).all():
-                self._cap = max(self._cap, cap)
-                break
-            # the step encodes the exact LOCAL need: -(run length)-1 when a
-            # shard's slot run outgrew cap (magnitude > cap), else
-            # -(survivors)-1 for a budget overflow — no global bounds probe,
-            # whose run is a useless overestimate of any one shard's
-            need = int(-(counts.min()) - 1)
-            if use_budget and comp == "pallas":
-                # the kernel scans the full local run (capless): overflow is
-                # ALWAYS the budget, even when survivors exceed cap
-                budget = self._grow_budget(use_budget, need, cap)
-            elif need > cap:
-                cap = self._grow_cap(cap, need)
-            elif not use_budget:
-                raise AssertionError(
-                    "single-stage overflow with run <= cap")  # unreachable
-            else:
-                budget = self._grow_budget(use_budget, need, cap)
-        hits = np.asarray(hits)[:q]               # (Q, shards, K)
-        ids = [np.sort(row[row >= 0]).astype(np.int64)
-               for row in hits.reshape(q, -1)]
-        if patch:
-            ids = self._patch_delta(batch, ids, self._freeze_delta(),
-                                    self._snapshot)
-        return self._finish_complement(rel, ids)
 
     def _delta_table(self) -> DeltaTable:
         """The device-resident added-set side table at the current epoch,
@@ -1251,7 +1120,7 @@ class SpatialIndex:
     def _freeze_delta(self) -> Optional[Tuple]:
         """Copies of the tombstone/added delta plus the geometry slices (or
         the device :class:`DeltaTable`) the patch step needs, frozen under
-        ``self._lock`` so :meth:`_patch_delta` can run outside it while
+        ``self._lock`` so the shared delta-patch stage can run outside it while
         writers keep mutating the live sets."""
         if not (self._tombstones or self._added):
             return None
@@ -1268,125 +1137,3 @@ class SpatialIndex:
             an, ak = gs.nverts[added], gs.kinds[added]
         return (tombs, added, table, av, an, ak)
 
-    def _patch_delta(self, batch: QueryBatch, ids: List[np.ndarray],
-                     frozen: Optional[Tuple], snap: GLINSnapshot
-                     ) -> List[np.ndarray]:
-        """Restore exactness of snapshot results at the frozen epoch: mask
-        out tombstoned records and check the added set (fp32, to match the
-        device precision contract) against the *base* relation — complement
-        finishing happens after, on top of the patched ids.
-
-        ``frozen`` is the :meth:`_freeze_delta` capture; ``snap`` supplies
-        the grid parameters of the snapshot being patched (identical across
-        replica placements). Small added sets are brute-force checked in a
-        host loop; past ``EngineConfig.delta_device_min`` the check runs on
-        device through the Zmin-sorted :class:`DeltaTable` (one vectorized
-        (Q × A) pass, no per-batch host round-trip)."""
-        if frozen is None:
-            return ids
-        tombs, added, table, av, an, ak = frozen
-        base = get_relation(batch.relation).base_name()
-        added_hits: Optional[List[np.ndarray]] = None
-        if table is not None:
-            wj = jnp.asarray(batch.windows.astype(np.float32))
-            ok = np.asarray(batch_check_added(
-                table, wj, base, snap.grid_x0, snap.grid_y0, snap.grid_cell))
-            tbl_ids = np.asarray(table.ids, np.int64)
-            added_hits = [np.sort(tbl_ids[row]) for row in ok]
-        elif added.shape[0]:
-            pred = get_relation(base).predicate
-            added_hits = []
-            for qi in range(len(ids)):
-                w32 = batch.windows[qi].astype(np.float32)
-                added_hits.append(added[np.asarray(pred(w32, av, an, ak))])
-        out: List[np.ndarray] = []
-        for qi, h in enumerate(ids):
-            if tombs is not None:
-                h = h[~np.isin(h, tombs)]
-            if added_hits is not None:
-                # added ids all postdate (exceed) every snapshot id, so the
-                # concatenation stays ascending
-                h = np.concatenate([h, added_hits[qi]])
-            out.append(h)
-        return out
-
-    def _run_knn(self, batch: QueryBatch, plan: QueryPlan) -> QueryResult:
-        if plan.backend == "device":
-            return self._run_knn_device(batch, plan)
-        ids, dists = [], []
-        with self._lock:      # the host knn walks the mutable tree
-            for p in batch.points:
-                i, d = _host_knn(self.glin, p, batch.k)
-                ids.append(np.asarray(i, np.int64))
-                dists.append(np.asarray(d))
-            epoch = self._epoch
-        return QueryResult(ids=ids, plan=plan, epoch=epoch,
-                           distances=dists)
-
-    def _run_knn_device(self, batch: QueryBatch, plan: QueryPlan
-                        ) -> QueryResult:
-        """knn through ``dwithin`` (cf. LISA): every point becomes a
-        degenerate window probed with ``dwithin:<r>`` at doubling radii —
-        ONE batched facade query per radius rung, so the planner takes the
-        device path instead of Q sequential host walks. A point is done once
-        it has >= k candidates whose k-th exact distance fits inside r (the
-        dwithin candidate set is exactly {distance <= r}, so no closer
-        geometry can be missing). Radii are snapped to powers of two: each
-        rung compiles once and is shared by every knn call."""
-        pts = batch.points
-        q, k = len(batch), batch.k
-        wins = np.concatenate([pts, pts], axis=1)       # degenerate windows
-        with self._lock:      # the radius estimate reads the mutable tree
-            r = initial_knn_radius(self.glin, k)
-        r = float(2.0 ** np.ceil(np.log2(max(r, 1e-9))))
-        done = np.zeros(q, bool)
-        out_ids: List[Optional[np.ndarray]] = [None] * q
-        out_d: List[Optional[np.ndarray]] = [None] * q
-        for _ in range(64):
-            # only the still-undone points ride the next rung: finished
-            # points must not re-probe at (exponentially) wider radii, which
-            # would also inflate the shared adaptive candidate cap. The
-            # shrinking batch is padded to a power-of-two bucket (repeating
-            # the last window) so each (bucket, radius) pair compiles once,
-            # not each distinct todo-count
-            todo = np.nonzero(~done)[0]
-            sub = wins[todo]
-            bucket = 1 << max(len(sub) - 1, 0).bit_length()
-            if bucket > len(sub):
-                sub = np.concatenate(
-                    [sub, np.repeat(sub[-1:], bucket - len(sub), axis=0)])
-            try:
-                res = self.query(
-                    QueryBatch.window(sub, f"dwithin:{r:.17g}"))
-            except OverflowError:
-                # a straggler's radius outgrew max_cap: the host loop has no
-                # cap — finish the stragglers there instead of failing the
-                # whole batch
-                with self._lock:
-                    for i in todo:
-                        hi, hd = _host_knn(self.glin, pts[int(i)], k)
-                        out_ids[int(i)] = np.asarray(hi, np.int64)
-                        out_d[int(i)] = np.asarray(hd)
-                return QueryResult(ids=out_ids, plan=plan, epoch=self._epoch,
-                                   distances=out_d)
-            # the store is append-only (arrays are replaced, never mutated):
-            # a fresh reference covers every candidate id the rung returned
-            gs = self.glin.gs
-            for ti, i in enumerate(todo):
-                cand = res[ti]
-                if cand.shape[0] < k:
-                    continue
-                d = np.sqrt(geom.rect_geom_sqdist(
-                    wins[i], gs.padded(cand), gs.nverts[cand],
-                    gs.kinds[cand]))
-                order = np.lexsort((cand, d))
-                if d[order[k - 1]] <= r:
-                    sel = order[:k]
-                    out_ids[int(i)] = cand[sel].astype(np.int64)
-                    out_d[int(i)] = d[sel]
-                    done[i] = True
-            if done.all():
-                return QueryResult(ids=out_ids, plan=plan, epoch=self._epoch,
-                                   distances=out_d)
-            r *= 2.0
-        raise RuntimeError("knn did not converge")

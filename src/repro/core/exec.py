@@ -1,0 +1,628 @@
+"""The staged query-execution pipeline behind :meth:`SpatialIndex.query`.
+
+GLIN's query path is ONE pipeline regardless of where it runs::
+
+    probe -> compact -> refine -> delta-patch -> complement-finish
+                                                       (knn: -> knn-rank)
+
+What differs per backend is which *implementation* serves each stage and
+how many adjacent stages it fuses: the host loop walks the mutable tree one
+window at a time (probe+compact+refine in one pass), the jitted device
+``batch_query`` fuses the same three stages into one dispatch, and the
+sharded step runs them per record shard under a mesh. Delta patching and
+complement finishing are backend-independent — they operate on id lists
+against state frozen under the facade lock — so exactly ONE implementation
+of each exists, here.
+
+``SpatialIndex.plan()`` picks a backend; :func:`compile_plan` turns that
+:class:`QueryPlan` into an :class:`ExecutionPlan` — an ordered stage tuple —
+and :meth:`ExecutionPlan.execute` runs it, timing every stage into
+:class:`StageStats` (wall time, survivor counts, overflow-ladder
+escalations, delta sizes). The stats ride out on ``QueryResult.stages`` and
+aggregate into ``SpatialIndex.stats()["stages"]``;
+:meth:`SpatialIndex.explain` pretty-prints the compiled pipeline without
+executing it.
+
+**The overflow ladder** (:class:`OverflowLadder`) is the one shared
+cap/budget escalation policy. Device-side refinement signals overflow with
+negative counts: ``-(run length) - 1`` when a query's candidate run outgrew
+``cap`` (magnitude > cap disambiguates), else ``-(survivors) - 1`` when the
+MBR survivors outgrew ``exact_budget``. The ladder jumps the cap straight
+to a sufficient power of two (a cheap bounds-only probe tells the two
+overflows apart on the single-device path; the sharded step encodes the
+exact local need), grows the budget geometrically past the true survivor
+count, and escalates to the single-stage dense path only once the needed
+budget exceeds ``MAX_COMPACT_BUDGET`` (or the cap — two-stage would no
+longer shrink anything). One special case: the Pallas compact kernel scans
+the full local run (it is capless), so with a budget active its overflow is
+ALWAYS the budget, even when survivors exceed the cap.
+
+**Locking contract** (unchanged from the monolithic backends, now stated
+once): the host and sharded refine stages run under the facade lock — they
+walk the mutable host tree or own every mesh device — and freeze the delta
+/ live-id sets for the downstream stages in that same critical section; the
+device refine stage freezes everything it needs under the lock, then runs
+its device compute OUTSIDE it. Delta patching and complement finishing
+always run lock-free on the frozen copies, so their answers are exact at
+the frozen epoch no matter how writers interleave.
+
+A fused Pallas probe+compact+exact kernel (ROADMAP one-kernel queries)
+slots in as an alternate implementation covering the same three stages —
+the planner, the patch stage and the telemetry plumbing do not change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import geometry as geom
+from .device import batch_check_added
+from .index import QueryStats, initial_knn_radius
+from .index import knn as _host_knn
+from .relations import get_relation
+
+__all__ = ["StageStats", "ExecContext", "Stage", "ExecutionPlan",
+           "OverflowLadder", "compile_plan", "PIPELINE_STAGES"]
+
+# canonical stage order (docs/api.md "Execution pipeline")
+PIPELINE_STAGES = ("probe", "compact", "refine", "delta-patch",
+                   "complement-finish", "knn-rank")
+
+
+def _engine():
+    """The engine module namespace, resolved at call time — tests monkeypatch
+    ``repro.core.engine.batch_query`` and friends, and the stages must see
+    the patched bindings (a ``from``-import here would freeze the originals).
+    Deferred to avoid the circular import (engine imports this module)."""
+    from . import engine
+    return engine
+
+
+# --------------------------------------------------------------- observability
+@dataclasses.dataclass
+class StageStats:
+    """Per-stage telemetry for one executed query batch.
+
+    ``survivors`` is the total id count LEAVING the stage (-1 when the stage
+    does not produce ids, e.g. a skipped patch); ``escalations`` counts
+    overflow-ladder retries; ``cap``/``budget`` are the settled ladder values
+    a refine stage ended on (budget 0 = single-stage dense, -1 = n/a)."""
+
+    stage: str                       # primary canonical stage name
+    impl: str                        # "host" | "device" | "sharded" | "shared"
+    covers: Tuple[str, ...] = ()     # canonical stages this impl fuses
+    wall_ms: float = 0.0
+    queries: int = 0
+    survivors: int = -1
+    escalations: int = 0
+    cap: int = 0
+    budget: int = -1
+    delta_added: int = 0
+    delta_tombstoned: int = 0
+    skipped: bool = False            # compiled in, but a no-op this run
+    note: str = ""
+
+    def asdict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["covers"] = list(self.covers)
+        return d
+
+
+@dataclasses.dataclass
+class ExecContext:
+    """Mutable state threaded through the stages of one execution.
+
+    The refine stage freezes everything downstream stages read (``epoch``,
+    ``frozen_delta``, ``live``, ``snap``) under the facade lock; the stages
+    after it touch only this context, never the live index fields."""
+
+    index: Any                       # the SpatialIndex facade
+    batch: Any                       # QueryBatch
+    plan: Any                        # QueryPlan
+    rel: Any                         # Relation (None for knn)
+    base: Any                        # probed base Relation (None for knn)
+    replica: int = 0
+    # frozen under the facade lock by the refine stage
+    epoch: int = -1
+    frozen_delta: Optional[Tuple] = None
+    live: Optional[np.ndarray] = None
+    snap: Any = None                 # snapshot whose grid params patch uses
+    # outputs
+    ids: Optional[List[np.ndarray]] = None
+    distances: Optional[List[np.ndarray]] = None
+    host_stats: Optional[List[QueryStats]] = None
+    stage_stats: List[StageStats] = dataclasses.field(default_factory=list)
+
+
+def _total(ids: Optional[List[np.ndarray]]) -> int:
+    return -1 if ids is None else int(sum(r.shape[0] for r in ids))
+
+
+# -------------------------------------------------------------- overflow ladder
+class OverflowLadder:
+    """THE cap/budget escalation policy, shared by every refine
+    implementation (single-device and sharded). See the module docstring for
+    the negative-count encoding contract this consumes.
+
+    Holds the adaptive state for one query's retries; the settled ``cap`` is
+    max-merged back into the facade by the refine stage so the ladder is
+    walked once per workload, not once per call."""
+
+    def __init__(self, config, cap: int):
+        self.config = config
+        self.cap = int(cap)
+        self.budget = int(config.exact_budget)
+        self.escalations = 0
+
+    @property
+    def use_budget(self) -> int:
+        """The budget the next call actually uses: two-stage refinement only
+        pays for itself while the budget is positive AND below the cap."""
+        b = self.budget
+        return b if 0 < b < self.cap else 0
+
+    def grow_cap(self, need: int) -> None:
+        cfg = self.config
+        if self.cap >= cfg.max_cap or need > cfg.max_cap:
+            raise OverflowError(
+                f"candidate run of {need} exceeded max_cap="
+                f"{cfg.max_cap}; raise EngineConfig.max_cap or "
+                f"narrow the windows")
+        self.cap = min(max(self.cap * 2, 1 << (need - 1).bit_length()),
+                       cfg.max_cap)
+
+    def grow_budget(self, use_budget: int, survivors: int) -> None:
+        """Budget overflow: the negative-count encoding carries the TRUE
+        survivor count, so the budget grows geometrically straight past it
+        (re-running compaction) and only falls back to the single-stage
+        dense path (budget 0) once the needed budget exceeds
+        ``MAX_COMPACT_BUDGET`` or the cap."""
+        from repro.kernels.refine import MAX_COMPACT_BUDGET
+
+        target = max(use_budget * 2,
+                     1 << max(survivors - 1, 0).bit_length())
+        self.budget = (0 if target > MAX_COMPACT_BUDGET or target >= self.cap
+                       else target)
+
+    def on_device_overflow(self, counts: np.ndarray, use_budget: int,
+                           probe_bounds, batch_len: int) -> None:
+        """Single-device retry: the overflow signal conflates run-length >
+        cap with survivors > budget; ``probe_bounds`` (a cheap bounds-only
+        probe) tells them apart, so the cap jumps straight to sufficiency —
+        keeping the LOGICAL budget (one the old cap disabled because
+        ``budget >= cap`` comes back into play once the cap outgrows it)."""
+        self.escalations += 1
+        start, end = probe_bounds()
+        need = int(np.max(np.asarray(end - start))) if batch_len else 0
+        if need > self.cap:
+            self.grow_cap(need)
+            return
+        if not use_budget:
+            raise AssertionError(
+                "single-stage overflow with run <= cap")  # unreachable
+        self.grow_budget(use_budget, int(-(counts.min()) - 1))
+
+    def on_sharded_overflow(self, counts: np.ndarray, use_budget: int,
+                            compaction: str) -> None:
+        """Sharded retry: the step encodes the exact LOCAL need — no global
+        bounds probe, whose run is a useless overestimate of any one
+        shard's. The Pallas kernel scans the full local run (capless), so
+        with a budget active its overflow is ALWAYS the budget."""
+        self.escalations += 1
+        need = int(-(counts.min()) - 1)
+        if use_budget and compaction == "pallas":
+            self.grow_budget(use_budget, need)
+        elif need > self.cap:
+            self.grow_cap(need)
+        elif not use_budget:
+            raise AssertionError(
+                "single-stage overflow with run <= cap")  # unreachable
+        else:
+            self.grow_budget(use_budget, need)
+
+
+# ------------------------------------------------------------------- stages
+class Stage:
+    """One pipeline stage: fill ``ctx`` (and its own ``StageStats``). A
+    fused implementation covers several adjacent canonical stages —
+    ``covers`` names them for ``explain()`` and the telemetry."""
+
+    name: str = "?"
+    covers: Tuple[str, ...] = ()
+    impl: str = "?"
+
+    def run(self, ctx: ExecContext, st: StageStats) -> None:
+        raise NotImplementedError
+
+
+class HostRefineStage(Stage):
+    """fp64 probe+compact+refine: one ``GLIN.query`` walk per window over
+    the mutable host tree, under the facade lock. Queries the BASE relation
+    only — complement finishing is the shared downstream stage (the live-id
+    set it needs is frozen here, in the same critical section)."""
+
+    name = "refine"
+    covers = ("probe", "compact", "refine")
+    impl = "host"
+
+    def run(self, ctx: ExecContext, st: StageStats) -> None:
+        idx, batch = ctx.index, ctx.batch
+        stats = ([QueryStats() for _ in range(len(batch))]
+                 if batch.collect_stats else None)
+        ids: List[np.ndarray] = []
+        with idx._lock:
+            for i, w in enumerate(batch.windows):
+                s = stats[i] if stats is not None else None
+                ids.append(np.sort(idx.glin.query(w, ctx.base.name, s)))
+            ctx.live = idx._freeze_live(ctx.rel)
+            ctx.epoch = idx._epoch
+        ctx.ids = ids
+        ctx.host_stats = stats
+        st.survivors = _total(ids)
+
+
+class DeviceRefineStage(Stage):
+    """The jitted fused probe+compact+refine dispatch (fp32). Freezes the
+    served snapshot/payload (fanned to the requested replica), the delta
+    and the live-id set under the facade lock, then runs the overflow-
+    ladder retry loop OUTSIDE it — writers are never blocked by device
+    compute, and the answer is exact at the frozen epoch."""
+
+    name = "refine"
+    covers = ("probe", "compact", "refine")
+    impl = "device"
+
+    def run(self, ctx: ExecContext, st: StageStats) -> None:
+        eng = _engine()
+        idx, batch = ctx.index, ctx.batch
+        cfg = idx.config
+        patch = ctx.plan.backend == "device+delta"
+        with idx._lock:
+            # freeze everything the unlocked compute below reads: the served
+            # snapshot + payload (immutable device arrays), copies of the
+            # delta sets and the live set — a writer landing after this
+            # block changes none of them. device+delta serves the published
+            # snapshot and patches the delta on top; plain device
+            # republishes first — either way the answer reflects the frozen
+            # epoch exactly.
+            snap = idx._published_snapshot() if patch else idx.snapshot()
+            payload = idx._device_payload(idx._snapshot_recs)
+            snap, payload = idx._replica_view(ctx.replica, snap, payload)
+            ctx.frozen_delta = idx._freeze_delta() if patch else None
+            ctx.live = idx._freeze_live(ctx.rel)
+            ctx.epoch = idx._epoch
+            ladder = OverflowLadder(cfg, idx._cap)
+        ctx.snap = snap
+        pods, mb = payload
+        q = len(batch.windows)
+        wq = batch.windows.astype(np.float32)
+        if cfg.pad_quantum > 0 and q:
+            # bucket the query axis to a power of two: the jitted
+            # batch_query compiles per windows shape, and a serving tier
+            # draining adaptively-sized micro-batches would otherwise
+            # compile once per distinct batch size. Padding rows repeat the
+            # last window and are sliced off below.
+            qb = 1 << (q - 1).bit_length()
+            if qb > q:
+                wq = np.concatenate([wq, np.repeat(wq[-1:], qb - q, 0)])
+        wj = jnp.asarray(wq)
+        base = ctx.base.name
+        while True:
+            ub = ladder.use_budget
+            hits, counts = eng.batch_query(
+                snap, wj, pods, mb, relation=base,
+                cap=ladder.cap, exact_budget=ub,
+                compaction=idx._compaction(base, ub or None))
+            counts = np.asarray(counts)
+            if (counts >= 0).all():
+                with idx._lock:
+                    # max-merge: a concurrent query may have grown it further
+                    idx._cap = max(idx._cap, ladder.cap)
+                break
+            ladder.on_device_overflow(
+                counts, ub,
+                lambda: eng.batch_query_bounds(snap, wj, relation=base), q)
+        hits = np.asarray(hits)[:q]
+        ctx.ids = [np.sort(row[row >= 0]).astype(np.int64) for row in hits]
+        st.survivors = _total(ctx.ids)
+        st.escalations = ladder.escalations
+        st.cap, st.budget = ladder.cap, ladder.use_budget
+
+
+class ShardedRefineStage(Stage):
+    """Per-record-shard fused probe+compact+refine over the mesh
+    (``core.distributed``), query windows sharded over the model axis. Runs
+    entirely under the facade lock (the mesh owns every device — there is
+    nothing to overlap with) and freezes the delta + live-id sets in that
+    same critical section for the downstream shared stages."""
+
+    name = "refine"
+    covers = ("probe", "compact", "refine")
+    impl = "sharded"
+
+    def run(self, ctx: ExecContext, st: StageStats) -> None:
+        idx, batch = ctx.index, ctx.batch
+        cfg = idx.config
+        with idx._lock:
+            if ctx.plan.rebuild_snapshot:
+                idx.snapshot()
+            else:
+                idx._published_snapshot()
+            patch = idx.snapshot_is_stale()
+            q = len(batch)
+            # pad the batch to a model-axis multiple (shard_map divides Q
+            # evenly); padded rows repeat the last window, sliced off after
+            m = cfg.mesh.shape["model"]
+            wins32 = batch.windows.astype(np.float32)
+            qpad = (-q) % m
+            if qpad:
+                wins32 = np.concatenate(
+                    [wins32, np.repeat(wins32[-1:], qpad, axis=0)])
+            wj = jnp.asarray(wins32)
+            snap_repl, table, _, maxw = idx._sharded_placement()
+            ladder = OverflowLadder(cfg, idx._cap)
+            base = ctx.base.name
+            while True:
+                ub = ladder.use_budget
+                comp = idx._compaction(base, ub or None)
+                if comp == "sort":  # legacy argsort baseline: 1-device only
+                    comp = "scan"
+                step = idx._sharded_step(base, ladder.cap, ub, comp, maxw)
+                hits, counts = step(snap_repl, wj, table)
+                counts = np.asarray(counts)
+                if (counts >= 0).all():
+                    idx._cap = max(idx._cap, ladder.cap)
+                    break
+                ladder.on_sharded_overflow(counts, ub, comp)
+            hits = np.asarray(hits)[:q]              # (Q, shards, K)
+            ctx.ids = [np.sort(row[row >= 0]).astype(np.int64)
+                       for row in hits.reshape(q, -1)]
+            ctx.frozen_delta = idx._freeze_delta() if patch else None
+            ctx.live = idx._freeze_live(ctx.rel)
+            ctx.epoch = idx._epoch
+            ctx.snap = idx._snapshot
+        st.survivors = _total(ctx.ids)
+        st.escalations = ladder.escalations
+        st.cap, st.budget = ladder.cap, ladder.use_budget
+
+
+class DeltaPatchStage(Stage):
+    """Restore exactness of snapshot results at the frozen epoch: mask out
+    tombstoned records and check the added set (fp32, matching the device
+    precision contract) against the *base* relation — complement finishing
+    happens after, on top of the patched ids.
+
+    Operates only on the ``ExecContext`` freeze (the refine stage captured
+    the delta under the lock), so it runs lock-free on every backend —
+    THE one patch implementation. Small added sets are brute-force checked
+    in a host loop; past ``EngineConfig.delta_device_min`` the check runs on
+    device through the Zmin-sorted :class:`~repro.core.device.DeltaTable`
+    (one vectorized (Q x A) pass, no per-batch host round-trip)."""
+
+    name = "delta-patch"
+    covers = ("delta-patch",)
+    impl = "shared"
+
+    def run(self, ctx: ExecContext, st: StageStats) -> None:
+        frozen = ctx.frozen_delta
+        if frozen is None:
+            st.skipped = True
+            st.note = "no delta against the served snapshot"
+            return
+        tombs, added, table, av, an, ak = frozen
+        st.delta_added = int(added.shape[0])
+        st.delta_tombstoned = 0 if tombs is None else int(tombs.shape[0])
+        batch, snap = ctx.batch, ctx.snap
+        base = ctx.base.name
+        added_hits: Optional[List[np.ndarray]] = None
+        if table is not None:
+            wj = jnp.asarray(batch.windows.astype(np.float32))
+            ok = np.asarray(batch_check_added(
+                table, wj, base, snap.grid_x0, snap.grid_y0, snap.grid_cell))
+            tbl_ids = np.asarray(table.ids, np.int64)
+            added_hits = [np.sort(tbl_ids[row]) for row in ok]
+        elif added.shape[0]:
+            pred = get_relation(base).predicate
+            added_hits = []
+            for qi in range(len(ctx.ids)):
+                w32 = batch.windows[qi].astype(np.float32)
+                added_hits.append(added[np.asarray(pred(w32, av, an, ak))])
+        out: List[np.ndarray] = []
+        for qi, h in enumerate(ctx.ids):
+            if tombs is not None:
+                h = h[~np.isin(h, tombs)]
+            if added_hits is not None:
+                # added ids all postdate (exceed) every snapshot id, so the
+                # concatenation stays ascending
+                h = np.concatenate([h, added_hits[qi]])
+            out.append(h)
+        ctx.ids = out
+        st.survivors = _total(out)
+
+
+class ComplementFinishStage(Stage):
+    """Complement relations (e.g. ``disjoint``): subtract the base hits from
+    the live-id set the refine stage froze under the lock — THE one
+    complement implementation, identical lock story on every backend."""
+
+    name = "complement-finish"
+    covers = ("complement-finish",)
+    impl = "shared"
+
+    def run(self, ctx: ExecContext, st: StageStats) -> None:
+        rel = ctx.rel
+        if not rel.is_complement:
+            st.skipped = True
+            st.note = "relation is not a complement"
+            return
+        live = ctx.live
+        if live is None:   # refine stages freeze it whenever rel needs it
+            with ctx.index._lock:
+                live = ctx.index._freeze_live(rel)
+        ctx.ids = [np.setdiff1d(live, r) for r in ctx.ids]
+        if ctx.host_stats is not None:
+            # candidates/checked/leaves_* honestly describe the base
+            # probe's work, but the hit count must be the complement's
+            for s, r in zip(ctx.host_stats, ctx.ids):
+                s.results = int(r.shape[0])
+        st.survivors = _total(ctx.ids)
+
+
+class KnnHostStage(Stage):
+    """knn on the mutable host tree, one point at a time under the lock."""
+
+    name = "knn-rank"
+    covers = ("probe", "refine", "knn-rank")
+    impl = "host"
+
+    def run(self, ctx: ExecContext, st: StageStats) -> None:
+        idx, batch = ctx.index, ctx.batch
+        ids, dists = [], []
+        with idx._lock:      # the host knn walks the mutable tree
+            for p in batch.points:
+                i, d = _host_knn(idx.glin, p, batch.k)
+                ids.append(np.asarray(i, np.int64))
+                dists.append(np.asarray(d))
+            ctx.epoch = idx._epoch
+        ctx.ids, ctx.distances = ids, dists
+        st.survivors = _total(ids)
+
+
+class KnnDeviceStage(Stage):
+    """knn through ``dwithin`` (cf. LISA): every point becomes a degenerate
+    window probed with ``dwithin:<r>`` at doubling radii — ONE batched
+    facade query per radius rung, so the planner takes the device path
+    instead of Q sequential host walks. A point is done once it has >= k
+    candidates whose k-th exact distance fits inside r (the dwithin
+    candidate set is exactly {distance <= r}, so no closer geometry can be
+    missing). Radii are snapped to powers of two: each rung compiles once
+    and is shared by every knn call. ``escalations`` counts the extra rungs
+    past the first."""
+
+    name = "knn-rank"
+    covers = ("probe", "compact", "refine", "knn-rank")
+    impl = "device"
+
+    def run(self, ctx: ExecContext, st: StageStats) -> None:
+        idx, batch = ctx.index, ctx.batch
+        pts = batch.points
+        q, k = len(batch), batch.k
+        wins = np.concatenate([pts, pts], axis=1)    # degenerate windows
+        with idx._lock:    # the radius estimate reads the mutable tree
+            r = initial_knn_radius(idx.glin, k)
+        r = float(2.0 ** np.ceil(np.log2(max(r, 1e-9))))
+        done = np.zeros(q, bool)
+        out_ids: List[Optional[np.ndarray]] = [None] * q
+        out_d: List[Optional[np.ndarray]] = [None] * q
+        for rung in range(64):
+            # only the still-undone points ride the next rung: finished
+            # points must not re-probe at (exponentially) wider radii, which
+            # would also inflate the shared adaptive candidate cap. The
+            # shrinking batch is padded to a power-of-two bucket (repeating
+            # the last window) so each (bucket, radius) pair compiles once,
+            # not each distinct todo-count
+            todo = np.nonzero(~done)[0]
+            sub = wins[todo]
+            bucket = 1 << max(len(sub) - 1, 0).bit_length()
+            if bucket > len(sub):
+                sub = np.concatenate(
+                    [sub, np.repeat(sub[-1:], bucket - len(sub), axis=0)])
+            eng = _engine()
+            try:
+                res = idx.query(
+                    eng.QueryBatch.window(sub, f"dwithin:{r:.17g}"))
+            except OverflowError:
+                # a straggler's radius outgrew max_cap: the host loop has
+                # no cap — finish the stragglers there instead of failing
+                # the whole batch
+                st.note = "straggler radius outgrew max_cap: host fallback"
+                with idx._lock:
+                    for i in todo:
+                        hi, hd = _host_knn(idx.glin, pts[int(i)], k)
+                        out_ids[int(i)] = np.asarray(hi, np.int64)
+                        out_d[int(i)] = np.asarray(hd)
+                    ctx.epoch = idx._epoch
+                ctx.ids, ctx.distances = out_ids, out_d
+                st.escalations = rung
+                st.survivors = _total(out_ids)
+                return
+            # the store is append-only (arrays are replaced, never
+            # mutated): a fresh reference covers every candidate id the
+            # rung returned
+            gs = idx.glin.gs
+            for ti, i in enumerate(todo):
+                cand = res[ti]
+                if cand.shape[0] < k:
+                    continue
+                d = np.sqrt(geom.rect_geom_sqdist(
+                    wins[i], gs.padded(cand), gs.nverts[cand],
+                    gs.kinds[cand]))
+                order = np.lexsort((cand, d))
+                if d[order[k - 1]] <= r:
+                    sel = order[:k]
+                    out_ids[int(i)] = cand[sel].astype(np.int64)
+                    out_d[int(i)] = d[sel]
+                    done[i] = True
+            if done.all():
+                ctx.ids, ctx.distances = out_ids, out_d
+                ctx.epoch = idx._epoch
+                st.escalations = rung
+                st.survivors = _total(out_ids)
+                return
+            r *= 2.0
+        raise RuntimeError("knn did not converge")
+
+
+# ------------------------------------------------------------- execution plan
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """The compiled stage composition for one planned backend."""
+
+    backend: str
+    stages: Tuple[Stage, ...]
+
+    def execute(self, ctx: ExecContext) -> ExecContext:
+        for stage in self.stages:
+            st = StageStats(stage=stage.name, impl=stage.impl,
+                            covers=stage.covers, queries=len(ctx.batch))
+            t0 = time.perf_counter()
+            stage.run(ctx, st)
+            st.wall_ms = 1e3 * (time.perf_counter() - t0)
+            ctx.stage_stats.append(st)
+        return ctx
+
+    def describe(self) -> List[str]:
+        return [f"{i}. {s.name:<18} impl={s.impl:<8} "
+                f"covers={'+'.join(s.covers)}"
+                for i, s in enumerate(self.stages)]
+
+
+def compile_plan(plan) -> ExecutionPlan:
+    """``QueryPlan`` -> ordered stage tuple. Every backend ends in the SAME
+    shared delta-patch / complement-finish implementations; conditional
+    stages (an empty delta, a non-complement relation) stay compiled in and
+    no-op with ``skipped=True`` so the pipeline shape is static per
+    backend."""
+    if plan.kind == "knn":
+        stage = KnnDeviceStage() if plan.backend == "device" \
+            else KnnHostStage()
+        return ExecutionPlan(plan.backend, (stage,))
+    if plan.backend == "host":
+        return ExecutionPlan("host", (HostRefineStage(),
+                                      ComplementFinishStage()))
+    if plan.backend == "device":
+        return ExecutionPlan("device", (DeviceRefineStage(),
+                                        ComplementFinishStage()))
+    if plan.backend == "device+delta":
+        return ExecutionPlan("device+delta", (DeviceRefineStage(),
+                                              DeltaPatchStage(),
+                                              ComplementFinishStage()))
+    if plan.backend == "sharded":
+        return ExecutionPlan("sharded", (ShardedRefineStage(),
+                                         DeltaPatchStage(),
+                                         ComplementFinishStage()))
+    raise ValueError(f"unknown backend {plan.backend!r}")

@@ -85,6 +85,13 @@ class Relation:
         """Relation whose candidate interval is actually probed."""
         return self.complement_of if self.complement_of else self.name
 
+    @property
+    def is_complement(self) -> bool:
+        """True when hits are ``live \\ base`` — the execution pipeline
+        queries :meth:`base_name` and the shared complement-finish stage
+        subtracts the base hits from the frozen live-id set."""
+        return self.complement_of is not None
+
     def probe_window(self, window, xp=np):
         """The window used for probing and MBR-level pruning: the query
         window itself, expanded by ``probe_pad`` on every side for relations

@@ -4,7 +4,12 @@
 spatial serving tier (``repro.serve.SpatialQueryServer``) with a short
 open-loop demo load (Poisson arrivals, mixed relations, a write fraction)
 and dump ``server.stats()`` as JSON: queue depth, shed count, per-tenant
-admitted/rejected/served, batch-size histogram, per-replica query counts.
+admitted/rejected/served, batch-size histogram, per-replica query counts,
+coalesced duplicates, and the facade's per-stage execution telemetry
+(``engine_stages``: wall time, survivors, ladder escalations and delta sizes
+per pipeline stage). ``--explain`` additionally pretty-prints the compiled
+execution plan (``SpatialIndex.explain``) for each demo relation before the
+load starts.
 
 ``python -m repro.launch.serve lm ...`` — the continuous-batching LM demo:
 ``--slots`` concurrent sequences in a fixed decode batch, each arriving
@@ -95,6 +100,9 @@ def main_spatial(args) -> int:
 
     relations = ["intersects", "contains", "dwithin:0.003"]
     pool = make_query_windows(gs, 1e-4, 256, seed=args.seed + 1)
+    if args.explain:
+        for rel in relations:
+            print(index.explain(pool[:cfg.min_batch], rel), flush=True)
     tenants = [f"tenant{i}" for i in range(max(args.tenants, 1))]
     print(f"[serve] {args.dataset} n={args.n}: {args.qps:.0f} qps offered "
           f"for {args.seconds:.0f}s over {len(tenants)} tenant(s), "
@@ -214,6 +222,8 @@ def main(argv=None) -> int:
     sp.add_argument("--max-batch", type=int, default=4096)
     sp.add_argument("--workers", type=int, default=None)
     sp.add_argument("--no-overlap", action="store_true")
+    sp.add_argument("--explain", action="store_true",
+                    help="print the compiled execution plan per relation")
     sp.add_argument("--seed", type=int, default=0)
 
     lm = sub.add_parser("lm", help="continuous-batching LM demo")

@@ -133,6 +133,13 @@ class SpatialQueryServer:
     the facade backends; ``cache_hits`` / ``cache_misses`` give the raw
     telemetry.
 
+    **Request coalescing.** Within one relation group of a micro-batch,
+    duplicate windows (byte-identical) are folded into a single engine row
+    before the facade call — under hot-query skew the engine sees the
+    distinct working set, not the arrival stream. Each caller still gets an
+    independent writable result array, and the ``coalesced`` counter tracks
+    how many duplicates were folded.
+
     ``async_republish=True`` flips the facade's double-buffering on at
     construction: under a write-heavy stream, snapshot republishes build on
     a background thread while ``flush``/``query`` keep serving the current
@@ -186,6 +193,7 @@ class SpatialQueryServer:
         self._cache_gen: Tuple[int, int] = (-1, -1)
         self.cache_hits = 0
         self.cache_misses = 0
+        self.coalesced = 0      # duplicate windows folded within a group
 
     # ------------------------------------------------------------------ cache
     def _record_plan(self, res) -> None:
@@ -343,8 +351,23 @@ class SpatialQueryServer:
 
     def _run_group(self, rel: str, items: List[_Pending]):
         """One facade query for one relation group, routed to the
-        least-loaded replica. Returns ``(res, replica, seconds)``."""
-        windows = np.stack([w for _, _, _, w in items])
+        least-loaded replica. Duplicate windows within the group are
+        coalesced into one engine row; every caller still receives its own
+        writable ids array (the first claim gets the engine's array, each
+        duplicate a copy). Returns ``(res, per_item, ncoal, replica,
+        seconds)`` with ``per_item`` aligned to ``items``."""
+        uniq: Dict[bytes, int] = {}
+        slot: List[int] = []
+        rows: List[np.ndarray] = []
+        for _, _, _, w in items:
+            k = w.tobytes()
+            mi = uniq.get(k)
+            if mi is None:
+                mi = uniq[k] = len(rows)
+                rows.append(w)
+            slot.append(mi)
+        ncoal = len(items) - len(rows)
+        windows = np.stack(rows)
         with self._lock:
             rep = self._pick_replica_locked()
         t0 = time.perf_counter()
@@ -361,7 +384,12 @@ class SpatialQueryServer:
                                       else a * dt + (1 - a) * self._service_ewma)
                 self._query_ewma = (dtq if self._query_ewma is None
                                     else a * dtq + (1 - a) * self._query_ewma)
-        return res, rep, dt
+        claimed = [False] * len(rows)
+        per_item: List[np.ndarray] = []
+        for mi in slot:
+            per_item.append(res[mi].copy() if claimed[mi] else res[mi])
+            claimed[mi] = True
+        return res, per_item, ncoal, rep, dt
 
     @staticmethod
     def _hist_bucket(n: int) -> int:
@@ -418,12 +446,13 @@ class SpatialQueryServer:
             raise
         # ---- commit: every group succeeded ----
         with self._cond:
-            for rel, g, (res, rep, _dt) in results:
-                for (ticket, tenant, r, w), ids in zip(g, res):
+            for rel, g, (res, per_item, ncoal, rep, _dt) in results:
+                for (ticket, tenant, r, w), ids in zip(g, per_item):
                     out[ticket] = ids
                     self._cache_store(gen, w, r, ids)
                     self._tenant(tenant)["served"] += 1
                 self._record_plan(res)
+                self.coalesced += ncoal
                 self.replica_queries[rep] += len(g)
                 b = self._hist_bucket(len(g))
                 self.batch_hist[b] = self.batch_hist.get(b, 0) + 1
@@ -601,14 +630,15 @@ class SpatialQueryServer:
                 self._cond.notify_all()
             if not todo:
                 return
-            res, rep, _dt = self._run_group(rel, todo)
+            res, per_item, ncoal, rep, _dt = self._run_group(rel, todo)
             now = time.perf_counter()
             with self._cond:
-                for (ticket, tenant, r, w), ids in zip(todo, res):
+                for (ticket, tenant, r, w), ids in zip(todo, per_item):
                     self._cache_store(gen, w, r, ids)
                     self._done[ticket] = (ids, now)
                     self._tenant(tenant)["served"] += 1
                 self._record_plan(res)
+                self.coalesced += ncoal
                 self.cache_misses += len(todo)
                 self.served_queries += len(todo)
                 self.served_batches += 1
@@ -630,7 +660,12 @@ class SpatialQueryServer:
 
     # ------------------------------------------------------------- telemetry
     def stats(self) -> dict:
-        """One JSON-serializable snapshot of the serving tier."""
+        """One JSON-serializable snapshot of the serving tier. Includes the
+        facade's per-stage execution telemetry (``engine_stages``) so one
+        stats call covers the whole pipeline: queue → stage → replica."""
+        # grab engine telemetry before taking the server lock (the facade
+        # has its own lock; never hold both)
+        eng_stages = self.index.stats().get("stages", {})
         with self._lock:
             return {
                 "queue_depth": self._depth,
@@ -649,6 +684,8 @@ class SpatialQueryServer:
                 "backend_counts": dict(self.backend_counts),
                 "cache_hits": self.cache_hits,
                 "cache_misses": self.cache_misses,
+                "coalesced": self.coalesced,
+                "engine_stages": eng_stages,
                 "served_queries": self.served_queries,
                 "served_batches": self.served_batches,
                 "write_ops": self.write_ops,

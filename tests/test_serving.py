@@ -376,3 +376,65 @@ def test_stop_drains_pending_tickets():
     server.stop()    # must serve what is queued, not strand the waiters
     for q, t in enumerate(tickets):
         np.testing.assert_array_equal(server.result(t, timeout=5.0), hostr[q])
+
+
+# ------------------------------------------------------------- coalescing ---
+def test_flush_coalesces_duplicates_into_independent_results():
+    """Duplicate (window, relation) submissions in one micro-batch reach the
+    engine as ONE row (`coalesced` counts the folded duplicates), yet every
+    caller gets its own writable array — mutating one result must not leak
+    into a sibling's or into the cache."""
+    idx = _fp32_index(n=2000)
+    server = SpatialQueryServer(idx)
+    w = _fp32_windows(idx, 2e-3, 2, seed=31)
+    engine_rows = []
+    real_query = idx.query
+
+    def spy(batch, relation=None, **kw):
+        engine_rows.append(len(batch))
+        return real_query(batch, relation, **kw)
+
+    idx.query = spy
+    try:
+        dup = [server.submit(w[0], "intersects", tenant=t)
+               for t in ("a", "b", "c")]
+        other = server.submit(w[1], "intersects", tenant="a")
+        out = server.flush()
+    finally:
+        idx.query = real_query
+    assert engine_rows == [2]          # 4 submissions, 2 distinct windows
+    assert server.stats()["coalesced"] == 2
+    ref = idx.query(w[0][None], "intersects", backend="host")[0]
+    results = [out[t] for t in dup]
+    for r in results:
+        np.testing.assert_array_equal(r, ref)
+        assert r.flags.writeable
+    assert len({id(r) for r in results}) == 3   # independent arrays
+    results[0][:] = -7                          # vandalize one caller's copy
+    np.testing.assert_array_equal(results[1], ref)
+    np.testing.assert_array_equal(results[2], ref)
+    # the cache stored a frozen copy, untouched by the vandalism
+    t2 = server.submit(w[0], "intersects")
+    np.testing.assert_array_equal(server.flush()[t2], ref)
+    assert not isinstance(out[other], Rejected)
+
+
+def test_pump_mode_coalesces_and_counts():
+    idx = _fp32_index(n=1500)
+    server = SpatialQueryServer(idx, config=ServerConfig(min_batch=64))
+    w = _fp32_windows(idx, 2e-3, 1, seed=33)[0]
+    tickets = [server.submit(w, "disjoint") for _ in range(6)]  # pre-queued
+    server.start()
+    server.stop()    # drain: all six land in one gather -> one engine row
+    outs = [server.result(t, timeout=10.0) for t in tickets]
+    ref = idx.query(w[None], "disjoint", backend="host")[0]
+    for o in outs:
+        np.testing.assert_array_equal(o, ref)
+    st = server.stats()
+    # every submission resolved through the cache or an engine group, and at
+    # least one duplicate was folded before reaching the engine (the rest
+    # may have been cache hits across batches — either way none ran twice)
+    assert st["cache_hits"] + st["cache_misses"] == len(tickets)
+    assert st["coalesced"] + st["cache_hits"] >= len(tickets) - 1
+    assert st["coalesced"] >= 1
+    assert "engine_stages" in st and st["engine_stages"]
