@@ -4,11 +4,15 @@ mode executes kernel bodies in Python and is not a timing proxy).
 
 ``refine_pipeline`` is the perf-trajectory anchor: it times the OLD
 refinement (legacy stable-argsort compaction over chained per-query MBR
-gathers, ``compaction="sort"``) against the NEW fused pipeline (slot-aligned
-MBR tables + cumsum/scatter compaction, ``compaction="scan"`` — the jnp
-reference semantics of the fused Pallas kernel, which is the TPU path) per
-dataset and relation, asserts exactness against ``query_bruteforce`` every
-time, and emits the ``BENCH {json}`` line committed as ``BENCH_device.json``.
+gathers, ``compaction="sort"``), the staged pipeline (slot-aligned MBR
+tables + cumsum/scatter compaction, ``compaction="scan"``) and the
+ONE-dispatch fused path (``batch_query_fused`` — its "reference" XLA
+composition on CPU, the Pallas kernel itself on TPU) per dataset and
+relation, asserts exactness against ``query_bruteforce`` every time, and
+emits the ``BENCH {json}`` line committed as ``BENCH_device.json``. The
+Pallas kernel columns are only *measured* on TPU; elsewhere they are
+emitted as ``null`` and listed in each row's ``"unmeasured"`` marker so the
+committed trajectory never silently conflates backends.
 """
 from __future__ import annotations
 
@@ -19,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.datasets import generate, make_query_windows
-from repro.core.device import batch_query, batch_query_bounds
+from repro.core.device import (batch_query, batch_query_bounds,
+                               batch_query_fused)
 from repro.core.engine import EngineConfig, SpatialIndex
 from repro.core.geometry import mbrs_of_verts
 from repro.core.index import GLINConfig
@@ -47,9 +52,13 @@ def _fp32_dataset(name: str, n: int, seed: int = 0):
 def refine_pipeline(csv: Csv, n: int, q: int = 128) -> dict:
     """Old-vs-new refinement per dataset × relation at the tracked config
     (cap=4096, budget=256). ``refine_us`` isolates the refinement stage:
-    total batched query time minus the (shared) probe time."""
-    impls = ["sort", "scan"]
-    if jax.default_backend() == "tpu":
+    total batched query time minus the (shared) probe time. ``fused`` is the
+    one-dispatch ``batch_query_fused`` path — the Pallas kernel on TPU, its
+    bit-identical "reference" XLA composition elsewhere (interpret mode is a
+    correctness tool, not a timing proxy)."""
+    on_tpu = jax.default_backend() == "tpu"
+    impls = ["sort", "scan", "fused"]
+    if on_tpu:
         impls.append("pallas")
     out: dict = {"bench": "device_refine", "n": n, "q": q, "cap": REFINE_CAP,
                  "budget": REFINE_BUDGET, "backend": jax.default_backend(),
@@ -86,12 +95,23 @@ def refine_pipeline(csv: Csv, n: int, q: int = 128) -> dict:
                          "max_run": need}
             ref_hits = None
             for impl in impls:
-                def run(impl=impl, wj=wj, cap=cap):
-                    h, c = batch_query(
-                        snap, wj, pods, mb, relation=base,
-                        cap=cap, exact_budget=REFINE_BUDGET,
-                        compaction=impl)
-                    return h.block_until_ready(), c.block_until_ready()
+                if impl == "fused":
+                    def run(wj=wj):
+                        # one dispatch end-to-end (probe included), so the
+                        # probe_us subtraction below still isolates the
+                        # refinement delta fairly vs the staged columns
+                        h, c = batch_query_fused(
+                            snap, wj, pods, relation=base,
+                            exact_budget=REFINE_BUDGET,
+                            mode="pallas" if on_tpu else "reference")
+                        return h.block_until_ready(), c.block_until_ready()
+                else:
+                    def run(impl=impl, wj=wj, cap=cap):
+                        h, c = batch_query(
+                            snap, wj, pods, mb, relation=base,
+                            cap=cap, exact_budget=REFINE_BUDGET,
+                            compaction=impl)
+                        return h.block_until_ready(), c.block_until_ready()
                 hits, counts = run()   # compile outside the timed region
                 counts = np.asarray(counts)
                 assert (counts >= 0).all(), \
@@ -110,16 +130,29 @@ def refine_pipeline(csv: Csv, n: int, q: int = 128) -> dict:
                 else:
                     for a, b in zip(ids, ref_hits):   # impls agree exactly
                         np.testing.assert_array_equal(a, b)
+            if not on_tpu:
+                # the Pallas kernel columns exist on every row of the
+                # committed trajectory but are only measurable on TPU:
+                # null + an explicit marker beats silent omission
+                row["pallas_us"] = None
+                row["refine_pallas_us"] = None
+                row["unmeasured"] = ["pallas"]
             row["speedup_refine"] = (row["refine_sort_us"]
                                      / max(row["refine_scan_us"], 1e-9))
+            row["speedup_fused"] = (row["refine_scan_us"]
+                                    / max(row["refine_fused_us"], 1e-9))
             out["datasets"][name][rel_name] = row
             csv.emit(
-                f"device/refine/{name}/{rel_name}_us", row["refine_scan_us"],
+                f"device/refine/{name}/{rel_name}_us", row["refine_fused_us"],
+                f"scan={row['refine_scan_us']:.0f}us;"
                 f"old_sort={row['refine_sort_us']:.0f}us;"
                 f"probe={probe_us:.0f}us;"
-                f"speedup=x{row['speedup_refine']:.2f};exact=True")
+                f"speedup=x{row['speedup_refine']:.2f};"
+                f"fused=x{row['speedup_fused']:.2f};exact=True")
     out["speedup_cluster"] = (
         out["datasets"]["cluster"]["intersects"]["speedup_refine"])
+    out["speedup_fused_cluster"] = (
+        out["datasets"]["cluster"]["intersects"]["speedup_fused"])
     print("BENCH " + json.dumps(out))
     return out
 

@@ -27,11 +27,14 @@ KERNEL_SHARDS = (4, 16)
 
 def kernel_rows(shapes=None, shards=KERNEL_SHARDS):
     """Roofline terms of the refinement pipeline from the analytic bytes/flops
-    model in ``repro.kernels.refine.refine_cost`` — covering the fused
-    compact kernel, the downstream exact-shape stage over the compacted
-    survivors, AND the sharded variant (``sharded_refine_cost``: per-shard
-    compact+refine plus the cross-shard survivor all-gather bytes), matching
-    what ``core.distributed.build_glin_query_step`` actually executes."""
+    model in ``repro.kernels.refine.refine_cost`` — covering the compact
+    kernel, the downstream exact-shape stage over the compacted survivors,
+    the staged compact+refine pipeline sum, the ONE-dispatch ``fused``
+    probe+compact+exact kernel (same work minus the staged pipeline's
+    inter-dispatch HBM round trips), AND the sharded variant
+    (``sharded_refine_cost``: per-shard compact+refine plus the cross-shard
+    survivor all-gather bytes), matching what
+    ``core.distributed.build_glin_query_step`` actually executes."""
     from repro.kernels.refine import refine_cost, sharded_refine_cost
     from repro.utils import roofline
 
@@ -49,6 +52,7 @@ def kernel_rows(shapes=None, shards=KERNEL_SHARDS):
                                + stages["exact"]["bytes_accessed"]),
         }
         stages["compact+refine"] = pipeline
+        stages["fused"] = refine_cost("fused", q, n, budget, verts=verts)
         for s in shards:
             stages[f"sharded[{s}]"] = sharded_refine_cost(
                 q, n, budget, shards=s, verts=verts)
@@ -100,7 +104,7 @@ def main():
     ap.add_argument("--markdown", action="store_true")
     ap.add_argument("--kernels", action="store_true",
                     help="analytic roofline of the GLIN refinement kernels "
-                         "(count / compact / exact / compact+refine)")
+                         "(count / compact / exact / compact+refine / fused)")
     args = ap.parse_args()
     if args.kernels:
         for name, detail in kernel_rows():

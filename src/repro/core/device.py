@@ -36,7 +36,8 @@ from .zorder import (LO_LIMB_SIZE, mbr_to_zinterval_hilo, split_hilo_np,
 __all__ = ["GLINSnapshot", "HostCapture", "VertexPods", "pack_pods",
            "pods_from_store", "snapshot_capture", "snapshot_from_capture",
            "snapshot_from_host", "batch_probe", "batch_query_bounds",
-           "batch_query", "DeltaTable", "delta_table_from_host",
+           "batch_query", "batch_query_fused", "DeltaTable",
+           "delta_table_from_host",
            "batch_check_added", "input_specs_like"]
 
 _I32 = jnp.int32
@@ -510,24 +511,34 @@ def _augment(s: GLINSnapshot, q_hi, q_lo):
     return jnp.where(take, m_hi, q_hi), jnp.where(take, m_lo, q_lo)
 
 
-def query_keys(s: GLINSnapshot, windows: jax.Array, relation: str
-               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Windows (Q,4) -> ((zmin', ub) hi/lo limbs): the probe key (augmented
-    per the relation's rule) and the exclusive upper key zmax+1."""
+def _raw_query_keys(s: GLINSnapshot, windows: jax.Array, rel
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Window quantization WITHOUT the augmentation rewrite: (zmin, ub=
+    zmax+1) hi/lo limbs. The fused kernel consumes these directly (its
+    suffix-min search runs in-kernel); ``query_keys`` layers ``_augment``
+    on top for the staged path."""
     from .zorder import ZGrid
 
-    rel = _device_relation(relation)
     grid = ZGrid(s.grid_x0, s.grid_y0, s.grid_cell)
     # probe with the relation's (possibly padded) window; conservative fp32
     # quantization on top (never lose a candidate)
     (zmin_hi, zmin_lo), (zmax_hi, zmax_lo) = mbr_to_zinterval_hilo(
         rel.probe_window(windows, xp=jnp), grid,
         guard=ZGrid.FP32_GUARD_CELLS)
-    if rel.augment:
-        zmin_hi, zmin_lo = _augment(s, zmin_hi, zmin_lo)
     carry = (zmax_lo + 1) >= LO_LIMB_SIZE
     ub_hi = zmax_hi + carry.astype(_I32)
     ub_lo = jnp.where(carry, 0, zmax_lo + 1)
+    return zmin_hi, zmin_lo, ub_hi, ub_lo
+
+
+def query_keys(s: GLINSnapshot, windows: jax.Array, relation: str
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Windows (Q,4) -> ((zmin', ub) hi/lo limbs): the probe key (augmented
+    per the relation's rule) and the exclusive upper key zmax+1."""
+    rel = _device_relation(relation)
+    zmin_hi, zmin_lo, ub_hi, ub_lo = _raw_query_keys(s, windows, rel)
+    if rel.augment:
+        zmin_hi, zmin_lo = _augment(s, zmin_hi, zmin_lo)
     return zmin_hi, zmin_lo, ub_hi, ub_lo
 
 
@@ -550,6 +561,54 @@ def batch_query_bounds(s: GLINSnapshot, windows: jax.Array,
     start = batch_probe(s, zmin_hi, zmin_lo)
     end = batch_probe(s, ub_hi, ub_lo)
     return start, end
+
+
+def _exact_over(rel, windows: jax.Array, pods: VertexPods, rec: jax.Array,
+                sel: jax.Array) -> jax.Array:
+    """Exact predicates over gathered records ``rec`` (Q, M) -> bool.
+
+    Gathers vertex pods at the widest pow2 bucket among the ``sel`` lanes:
+    ``lax.switch`` over the static width ladder executes exactly one
+    branch, so a batch whose survivors are all points/polylines never pays
+    the widest ring's gather. Unselected lanes read real (clamped,
+    in-bounds) data and are masked by the caller. Shared by every exact
+    stage — ``batch_query``'s three compaction paths and the dense path —
+    and mirrored inside the fused kernel (which runs the same ladder over
+    its VMEM-resident pod pool, per query tile)."""
+    off = pods.off[rec]
+    nv = pods.nv[rec]
+    kd = pods.kd[rec]
+    b = jnp.max(jnp.where(sel, pods.bucket[rec], 0))
+
+    def exact_for(w, vv, nn, kk):
+        return rel.predicate(w, vv, nn, kk, xp=jnp)
+
+    def branch(width):
+        def run(off, nv, kd):
+            lane = jnp.minimum(jnp.arange(width, dtype=_I32),
+                               nv[..., None] - 1)
+            idx = jnp.clip(off[..., None] + lane, 0,
+                           pods.pool.shape[0] - 1)
+            return jax.vmap(exact_for)(windows, pods.pool[idx], nv, kd)
+        return run
+
+    return jax.lax.switch(
+        b, [branch(1 << i) for i in range(pods.num_buckets)], off, nv, kd)
+
+
+def _exact_refine_compacted(rel, windows: jax.Array, s: GLINSnapshot,
+                            pods: VertexPods, slots: jax.Array
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Exact-shape stage over compacted survivor slots (Q, kb) -> (hits,
+    counts). Shared by the two-stage ``batch_query`` paths and the fused
+    reference composition."""
+    taken = slots >= 0
+    slotc = jnp.maximum(slots, 0)
+    rec = jnp.where(taken, s.recs[slotc], 0)
+    fmask = taken & _exact_over(rel, windows, pods, rec, taken)
+    hits = jnp.where(fmask, rec, -1)
+    counts = fmask.sum(axis=1).astype(_I32)
+    return hits, counts
 
 
 @partial(jax.jit, static_argnames=("relation", "cap", "exact_budget",
@@ -599,44 +658,11 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, pods: VertexPods,
     start, end = batch_query_bounds(s, windows, relation)
     q = windows.shape[0]
 
-    def exact_for(w, vv, nn, kk):
-        return rel.predicate(w, vv, nn, kk, xp=jnp)
-
     def exact_over(rec, sel):
-        """Exact predicates over gathered records ``rec`` (Q, M) -> bool.
-
-        Gathers vertex pods at the widest pow2 bucket among the ``sel``
-        lanes: ``lax.switch`` over the static width ladder executes exactly
-        one branch, so a batch whose survivors are all points/polylines
-        never pays the widest ring's gather. Unselected lanes read real
-        (clamped, in-bounds) data and are masked by the caller.
-        """
-        off = pods.off[rec]
-        nv = pods.nv[rec]
-        kd = pods.kd[rec]
-        b = jnp.max(jnp.where(sel, pods.bucket[rec], 0))
-
-        def branch(width):
-            def run(off, nv, kd):
-                lane = jnp.minimum(jnp.arange(width, dtype=_I32),
-                                   nv[..., None] - 1)
-                idx = jnp.clip(off[..., None] + lane, 0,
-                               pods.pool.shape[0] - 1)
-                return jax.vmap(exact_for)(windows, pods.pool[idx], nv, kd)
-            return run
-
-        return jax.lax.switch(
-            b, [branch(1 << i) for i in range(pods.num_buckets)], off, nv, kd)
+        return _exact_over(rel, windows, pods, rec, sel)
 
     def exact_refine_compacted(slots):
-        """Exact-shape stage over compacted survivor slots (Q, kb)."""
-        taken = slots >= 0
-        slotc = jnp.maximum(slots, 0)
-        rec = jnp.where(taken, s.recs[slotc], 0)
-        fmask = taken & exact_over(rec, taken)
-        hits = jnp.where(fmask, rec, -1)
-        counts = fmask.sum(axis=1).astype(_I32)
-        return hits, counts
+        return _exact_refine_compacted(rel, windows, s, pods, slots)
 
     if exact_budget and exact_budget < cap:
         kb = exact_budget
@@ -729,6 +755,126 @@ def batch_query(s: GLINSnapshot, windows: jax.Array, pods: VertexPods,
     overflow = (end - start) > cap
     counts = jnp.where(overflow, -counts - 1, counts)  # signal truncation
     return hits, counts
+
+
+def _fused_operands(s: GLINSnapshot) -> Tuple[jax.Array, ...]:
+    """Pack the snapshot's model tables into the fused kernel's VMEM-resident
+    column layouts (``kernels.refine.refine_fused_pallas`` documents them).
+    Empty tables (a one-leaf tree has no internal nodes; a non-augmenting
+    build has no pieces) pad to one zero row so every BlockSpec stays
+    non-degenerate — the kernel never reads them (depth loops self-terminate
+    on a done flag; ``augment=False`` skips the piecewise search)."""
+    zi = jnp.zeros((1,), _I32)
+    keys = jnp.stack([s.keys_hi, s.keys_lo], axis=1)
+    recs = s.recs[:, None]
+    leaf_i = jnp.stack([
+        s.leaf_start, s.leaf_dlo_hi, s.leaf_dlo_lo,
+        jnp.concatenate([s.leaf_k0_hi, zi]),
+        jnp.concatenate([s.leaf_k0_lo, zi]),
+    ], axis=1)
+    leaf_f = jnp.stack([
+        jnp.concatenate([s.leaf_slope, jnp.zeros((1,), jnp.float32)]),
+        jnp.concatenate([s.leaf_icpt, jnp.zeros((1,), jnp.float32)]),
+    ], axis=1)
+    if s.node_dlo_hi.shape[0]:
+        node_i = jnp.stack([s.node_dlo_hi, s.node_dlo_lo, s.node_fanout,
+                            s.node_child_base], axis=1)
+        node_f = s.node_scale[:, None]
+    else:
+        node_i = jnp.zeros((1, 4), _I32)
+        node_f = jnp.zeros((1, 1), jnp.float32)
+    codes = (s.child_codes[:, None] if s.child_codes.shape[0]
+             else jnp.zeros((1, 1), _I32))
+    if s.pw_zmax_hi.shape[0]:
+        pw = jnp.stack([s.pw_zmax_hi, s.pw_zmax_lo,
+                        s.pw_sufmin_hi, s.pw_sufmin_lo], axis=1)
+    else:
+        pw = jnp.zeros((1, 4), _I32)
+    return keys, recs, leaf_i, leaf_f, node_i, node_f, codes, pw
+
+
+@partial(jax.jit, static_argnames=("relation", "exact_budget", "mode"))
+def batch_query_fused(s: GLINSnapshot, windows: jax.Array, pods: VertexPods,
+                      relation: str = "contains", exact_budget: int = 256,
+                      mode: str = "reference"
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """ONE-dispatch batched query: learned-index probe + MBR prefilter with
+    in-VMEM compaction + exact-shape refinement in a single kernel launch
+    (vs ``batch_query``'s probe -> compact -> exact sequence).
+
+    ``mode`` picks the execution vehicle, all three bit-identical to
+    ``batch_query(..., compaction="scan")``:
+
+    * ``"pallas"``    — the fused Pallas kernel (TPU; auto-interpret off-TPU).
+    * ``"interpret"`` — force the kernel through interpret mode (the CI
+      correctness path: same kernel body, CPU execution).
+    * ``"reference"`` — single-jit XLA composition of the same three stages
+      (probe bounds + cumsum/searchsorted compaction + shared exact stage).
+      Usable on any backend; what the CPU benchmarks time.
+
+    Returns ``(hits (Q, budget) i32 [-1 padded], counts (Q,) i32)``. The
+    fused path is CAPLESS — the prefilter mask spans the whole slot table —
+    so a negative count always means budget overflow and encodes the total
+    MBR-survivor count ``-(survivors) - 1``
+    (``core.exec.OverflowLadder.on_fused_overflow`` sizes the retry budget
+    from it in one step, no disambiguating bounds probe needed)."""
+    if mode not in ("pallas", "interpret", "reference"):
+        raise ValueError(f"unknown fused mode {mode!r}")
+    rel = _device_relation(relation)
+    if rel.prefilter_kind == "custom":
+        raise ValueError(
+            f"relation {relation!r} has a custom MBR prefilter; the fused "
+            "path cannot evaluate it — use the staged batch_query")
+    if exact_budget <= 0:
+        raise ValueError("the fused path is two-stage only: exact_budget "
+                         "must be > 0")
+    kb = exact_budget
+    probe_w = rel.probe_window(windows, xp=jnp)
+
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import ops
+
+        zmin_hi, zmin_lo, ub_hi, ub_lo = _raw_query_keys(s, windows, rel)
+        qkeys = jnp.stack([zmin_hi, zmin_lo, ub_hi, ub_lo], axis=1)
+        pod_i = jnp.stack([pods.off, pods.nv, pods.kd, pods.bucket], axis=1)
+        return ops.refine_fused(
+            windows, probe_w, qkeys, *_fused_operands(s), pod_i, pods.pool,
+            s.slot_lmbr, s.slot_rmbr, budget=kb,
+            prefilter=rel.prefilter_kind,
+            predicate=lambda w, vv, nn, kk: rel.predicate(w, vv, nn, kk,
+                                                          xp=jnp),
+            augment=bool(rel.augment) and s.pw_zmax_hi.shape[0] > 0,
+            search_steps=s.search_steps, depth=s.depth,
+            num_buckets=pods.num_buckets,
+            interpret=True if mode == "interpret" else None)
+
+    # "reference": the same probe + capless mask + (Q, kb) compaction +
+    # exact stage as one XLA program. Compaction is cumsum + per-row
+    # searchsorted for the k-th survivor position — no (Q, N) scatter, which
+    # is what makes this composition beat the (Q, cap)-windowed scan path
+    # on CPU as well
+    start, end = batch_query_bounds(s, windows, relation)
+    n = s.num_slots
+    slot = jnp.arange(n, dtype=_I32)[None, :]
+    in_run = (slot >= start[:, None]) & (slot < end[:, None])
+    leaf_ok = geom.mbr_intersects(s.slot_lmbr[None, :, :],
+                                  probe_w[:, None, :], xp=jnp)
+    if rel.prefilter_kind == "contains":
+        rec_ok = geom.mbr_contains(s.slot_rmbr[None, :, :],
+                                   probe_w[:, None, :], xp=jnp)
+    else:
+        rec_ok = geom.mbr_intersects(s.slot_rmbr[None, :, :],
+                                     probe_w[:, None, :], xp=jnp)
+    mask = in_run & leaf_ok & rec_ok
+    m32 = mask.astype(_I32)
+    cum = jnp.cumsum(m32, axis=1)
+    mbr_counts = cum[:, -1]
+    kth = jnp.arange(1, kb + 1, dtype=_I32)
+    pos = jax.vmap(
+        lambda c: jnp.searchsorted(c, kth, side="left"))(cum)
+    slots = jnp.where(pos < n, pos.astype(_I32), -1)
+    hits, counts = _exact_refine_compacted(rel, windows, s, pods, slots)
+    return hits, jnp.where(mbr_counts > kb, -mbr_counts - 1, counts)
 
 
 # ---------------------------------------------------------------------------

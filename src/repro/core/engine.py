@@ -67,7 +67,7 @@ from . import exec as qexec
 from .datasets import GeometrySet
 # batch_query is re-exported for the exec stages (and tests), which resolve
 # it through THIS module's namespace so a monkeypatched binding is honored
-from .device import batch_query  # noqa: F401
+from .device import batch_query, batch_query_fused  # noqa: F401
 from .device import (DeltaTable, GLINSnapshot, HostCapture, _pow2ceil,
                      batch_query_bounds, delta_table_from_host,
                      pods_from_store, snapshot_capture, snapshot_from_capture)
@@ -95,6 +95,18 @@ class EngineConfig:
                                       # "scan" (jnp reference), "sort"
                                       # (legacy argsort); None = pallas on
                                       # TPU, scan elsewhere
+    fusion: Optional[str] = None      # one-kernel probe+compact+refine:
+                                      # "pallas" (fused kernel; interpret
+                                      # off-TPU), "interpret" (force the
+                                      # kernel through interpret mode — CI
+                                      # correctness), "reference" (single-jit
+                                      # XLA composition, any backend), "off";
+                                      # None = auto: pallas on TPU, off
+                                      # elsewhere. Custom-prefilter relations,
+                                      # budgets outside (0, MAX_COMPACT_
+                                      # BUDGET] and stores past the kernel's
+                                      # VMEM envelope fall back to the staged
+                                      # pipeline automatically
     delta_device_min: int = 64        # added-set size at which device+delta
                                       # patching moves from the host loop to
                                       # the device-resident DeltaTable
@@ -188,6 +200,8 @@ class QueryPlan:
     rebuild_snapshot: bool        # device path will republish the snapshot
     reason: str
     delta_size: int = 0           # added + tombstoned records vs the snapshot
+    fused: bool = False           # device refine compiles to the one-dispatch
+                                  # FusedDeviceStage (EngineConfig.fusion)
 
 
 @dataclasses.dataclass
@@ -349,16 +363,20 @@ class SpatialIndex:
                 ent = per.setdefault(ss.stage, {
                     "impl": ss.impl, "calls": 0, "skipped": 0,
                     "wall_ms": 0.0, "queries": 0, "survivors": 0,
-                    "escalations": 0, "delta_added": 0,
+                    "escalations": 0, "dispatches": 0, "delta_added": 0,
                     "delta_tombstoned": 0})
                 ent["calls"] += 1
                 ent["wall_ms"] += ss.wall_ms
+                # the executing impl may differ per call (staged vs fused
+                # refine share the "refine" label): report the latest
+                ent["impl"] = ss.impl
                 if ss.skipped:
                     ent["skipped"] += 1
                     continue
                 ent["queries"] += ss.queries
                 ent["survivors"] += max(ss.survivors, 0)
                 ent["escalations"] += ss.escalations
+                ent["dispatches"] += ss.dispatches
                 ent["delta_added"] += ss.delta_added
                 ent["delta_tombstoned"] += ss.delta_tombstoned
 
@@ -794,6 +812,43 @@ class SpatialIndex:
                 mode = "scan"
         return mode
 
+    def _fusion_mode(self, base_relation: str, budget: Optional[int] = None,
+                     snap: Optional[GLINSnapshot] = None,
+                     pods=None) -> Optional[str]:
+        """Resolve ``EngineConfig.fusion`` to a ``batch_query_fused`` mode,
+        or ``None`` when the fused one-dispatch path cannot (or should not)
+        serve the call and the staged pipeline must: fusion off, a
+        custom-prefilter relation (no static kernel mask shape), a budget
+        outside the two-stage envelope ``(0, MAX_COMPACT_BUDGET]``, or —
+        for the kernel modes, when ``snap``/``pods`` are at hand — a store
+        whose resident tables outgrow ``FUSED_VMEM_LIMIT``."""
+        from repro.kernels.refine import (FUSED_VMEM_LIMIT,
+                                          MAX_COMPACT_BUDGET,
+                                          fused_vmem_bytes)
+
+        mode = self.config.fusion
+        if mode is None:
+            mode = ("pallas" if jax.default_backend() == "tpu" else "off")
+        if mode == "off":
+            return None
+        if mode not in ("pallas", "interpret", "reference"):
+            raise ValueError(f"unknown fusion mode {mode!r}")
+        if get_relation(base_relation).prefilter_kind == "custom":
+            return None
+        b = self.config.exact_budget if budget is None else budget
+        if not 0 < b <= MAX_COMPACT_BUDGET:
+            return None
+        if (mode in ("pallas", "interpret") and snap is not None
+                and pods is not None
+                and fused_vmem_bytes(
+                    snap.num_slots, snap.num_leaves,
+                    snap.node_dlo_hi.shape[0], snap.child_codes.shape[0],
+                    snap.pw_zmax_hi.shape[0], pods.num_records,
+                    pods.pool.shape[0], b, pods.max_width)
+                > FUSED_VMEM_LIMIT):
+            return None
+        return mode
+
     # ---------------------------------------------------------------- sharded
     def _sharded_available(self) -> bool:
         """A mesh is configured and shaped for the sharded backend (a loud
@@ -932,13 +987,17 @@ class SpatialIndex:
             return QueryPlan("host", "window", rel.name, base.name, False,
                              reason, delta)
 
+        fused = self._fusion_mode(base.name) is not None
+        fnote = "; fused one-kernel refine" if fused else ""
+
         def device(reason):
             return QueryPlan("device", "window", rel.name, base.name, stale,
-                             reason, delta)
+                             reason + fnote, delta, fused=fused)
 
         def patched(reason):
             return QueryPlan("device+delta", "window", rel.name, base.name,
-                             self._snapshot is None, reason, delta)
+                             self._snapshot is None, reason + fnote, delta,
+                             fused=fused)
 
         def sharded(reason, rebuild=False):
             return QueryPlan("sharded", "window", rel.name, base.name,

@@ -8,8 +8,11 @@ GLIN's query path is ONE pipeline regardless of where it runs::
 What differs per backend is which *implementation* serves each stage and
 how many adjacent stages it fuses: the host loop walks the mutable tree one
 window at a time (probe+compact+refine in one pass), the jitted device
-``batch_query`` fuses the same three stages into one dispatch, and the
-sharded step runs them per record shard under a mesh. Delta patching and
+``batch_query`` composes the same three stages as THREE device dispatches
+(probe, compact kernel, exact gather+check), ``batch_query_fused`` collapses
+them into ONE (:class:`FusedDeviceStage`, selected by
+``EngineConfig.fusion``), and the sharded step runs them per record shard
+under a mesh. Delta patching and
 complement finishing are backend-independent — they operate on id lists
 against state frozen under the facade lock — so exactly ONE implementation
 of each exists, here.
@@ -33,9 +36,11 @@ overflows apart on the single-device path; the sharded step encodes the
 exact local need), grows the budget geometrically past the true survivor
 count, and escalates to the single-stage dense path only once the needed
 budget exceeds ``MAX_COMPACT_BUDGET`` (or the cap — two-stage would no
-longer shrink anything). One special case: the Pallas compact kernel scans
-the full local run (it is capless), so with a budget active its overflow is
-ALWAYS the budget, even when survivors exceed the cap.
+longer shrink anything). One special case: the Pallas compact kernel and
+the fused one-dispatch path scan the full local run (they are capless), so
+with a budget active their overflow is ALWAYS the budget, even when
+survivors exceed the cap — the fused retry therefore needs no
+disambiguating bounds probe (:meth:`OverflowLadder.on_fused_overflow`).
 
 **Locking contract** (unchanged from the monolithic backends, now stated
 once): the host and sharded refine stages run under the facade lock — they
@@ -46,9 +51,12 @@ its device compute OUTSIDE it. Delta patching and complement finishing
 always run lock-free on the frozen copies, so their answers are exact at
 the frozen epoch no matter how writers interleave.
 
-A fused Pallas probe+compact+exact kernel (ROADMAP one-kernel queries)
-slots in as an alternate implementation covering the same three stages —
-the planner, the patch stage and the telemetry plumbing do not change.
+**Dispatch telemetry**: every stage counts the device dispatches it issued
+into ``StageStats.dispatches`` (a staged two-stage attempt is 3 — probe,
+compact, exact; a dense attempt 2; a fused attempt 1; each disambiguating
+bounds probe adds 1). The counter is how the 3 -> 1 collapse of the fused
+path is *asserted*, not just assumed — a regression that silently re-splits
+the pipeline shows up in ``stats()["stages"]`` and ``explain()``.
 """
 from __future__ import annotations
 
@@ -90,15 +98,20 @@ class StageStats:
     ``survivors`` is the total id count LEAVING the stage (-1 when the stage
     does not produce ids, e.g. a skipped patch); ``escalations`` counts
     overflow-ladder retries; ``cap``/``budget`` are the settled ladder values
-    a refine stage ended on (budget 0 = single-stage dense, -1 = n/a)."""
+    a refine stage ended on (budget 0 = single-stage dense, -1 = n/a);
+    ``dispatches`` counts device dispatches issued (staged two-stage attempt
+    = 3, dense = 2, fused = 1, +1 per disambiguating bounds probe — 0 for
+    host/shared stages that launch no device work)."""
 
     stage: str                       # primary canonical stage name
-    impl: str                        # "host" | "device" | "sharded" | "shared"
+    impl: str                        # "host" | "device" | "fused" |
+                                     # "sharded" | "shared"
     covers: Tuple[str, ...] = ()     # canonical stages this impl fuses
     wall_ms: float = 0.0
     queries: int = 0
     survivors: int = -1
     escalations: int = 0
+    dispatches: int = 0
     cap: int = 0
     budget: int = -1
     delta_added: int = 0
@@ -206,6 +219,18 @@ class OverflowLadder:
                 "single-stage overflow with run <= cap")  # unreachable
         self.grow_budget(use_budget, int(-(counts.min()) - 1))
 
+    def on_fused_overflow(self, counts: np.ndarray, use_budget: int) -> None:
+        """Fused-path retry: the one-dispatch kernel is capless (its mask
+        spans the whole slot table), so a negative count is ALWAYS budget
+        overflow carrying the total survivor count — the budget jumps
+        straight past it with no disambiguating bounds probe. A zeroed
+        budget hands the retry to the staged dense path."""
+        self.escalations += 1
+        if not use_budget:
+            raise AssertionError(
+                "fused overflow without an active budget")  # unreachable
+        self.grow_budget(use_budget, int(-(counts.min()) - 1))
+
     def on_sharded_overflow(self, counts: np.ndarray, use_budget: int,
                             compaction: str) -> None:
         """Sharded retry: the step encodes the exact LOCAL need — no global
@@ -229,11 +254,15 @@ class OverflowLadder:
 class Stage:
     """One pipeline stage: fill ``ctx`` (and its own ``StageStats``). A
     fused implementation covers several adjacent canonical stages —
-    ``covers`` names them for ``explain()`` and the telemetry."""
+    ``covers`` names them for ``explain()`` and the telemetry.
+    ``dispatches`` is the static per-attempt device-dispatch count of the
+    implementation (what ``explain()`` prints before execution; the
+    executed count lands in ``StageStats.dispatches``)."""
 
     name: str = "?"
     covers: Tuple[str, ...] = ()
     impl: str = "?"
+    dispatches: int = 0
 
     def run(self, ctx: ExecContext, st: StageStats) -> None:
         raise NotImplementedError
@@ -275,6 +304,7 @@ class DeviceRefineStage(Stage):
     name = "refine"
     covers = ("probe", "compact", "refine")
     impl = "device"
+    dispatches = 3
 
     def run(self, ctx: ExecContext, st: StageStats) -> None:
         eng = _engine()
@@ -317,15 +347,97 @@ class DeviceRefineStage(Stage):
                 snap, wj, pods, mb, relation=base,
                 cap=ladder.cap, exact_budget=ub,
                 compaction=idx._compaction(base, ub or None))
+            st.dispatches += 3 if ub else 2   # probe/compact/exact vs dense
             counts = np.asarray(counts)
             if (counts >= 0).all():
                 with idx._lock:
                     # max-merge: a concurrent query may have grown it further
                     idx._cap = max(idx._cap, ladder.cap)
                 break
+            st.dispatches += 1                # disambiguating bounds probe
             ladder.on_device_overflow(
                 counts, ub,
                 lambda: eng.batch_query_bounds(snap, wj, relation=base), q)
+        hits = np.asarray(hits)[:q]
+        ctx.ids = [np.sort(row[row >= 0]).astype(np.int64) for row in hits]
+        st.survivors = _total(ctx.ids)
+        st.escalations = ladder.escalations
+        st.cap, st.budget = ladder.cap, ladder.use_budget
+
+
+class FusedDeviceStage(Stage):
+    """ONE-dispatch probe+compact+refine: the whole staged pipeline of
+    :class:`DeviceRefineStage` executed by a single fused kernel launch
+    (``core.device.batch_query_fused``). Same freeze/retry/epilogue
+    contract; what changes is the vehicle — and ``dispatches`` telemetry
+    asserting the 3 -> 1 collapse.
+
+    The fused path is two-stage only and VMEM-bounded, so the stage
+    re-resolves ``SpatialIndex._fusion_mode`` every ladder step: a zeroed
+    budget (dense escalation) or an envelope the store outgrew falls back
+    to the staged ``batch_query`` for that attempt — correctness never
+    depends on fusion being available."""
+
+    name = "refine"
+    covers = ("probe", "compact", "refine")
+    impl = "fused"
+    dispatches = 1
+
+    def run(self, ctx: ExecContext, st: StageStats) -> None:
+        eng = _engine()
+        idx, batch = ctx.index, ctx.batch
+        cfg = idx.config
+        patch = ctx.plan.backend == "device+delta"
+        with idx._lock:
+            snap = idx._published_snapshot() if patch else idx.snapshot()
+            payload = idx._device_payload(idx._snapshot_recs)
+            snap, payload = idx._replica_view(ctx.replica, snap, payload)
+            ctx.frozen_delta = idx._freeze_delta() if patch else None
+            ctx.live = idx._freeze_live(ctx.rel)
+            ctx.epoch = idx._epoch
+            ladder = OverflowLadder(cfg, idx._cap)
+        ctx.snap = snap
+        pods, mb = payload
+        q = len(batch.windows)
+        wq = batch.windows.astype(np.float32)
+        if cfg.pad_quantum > 0 and q:
+            qb = 1 << (q - 1).bit_length()
+            if qb > q:
+                wq = np.concatenate([wq, np.repeat(wq[-1:], qb - q, 0)])
+        wj = jnp.asarray(wq)
+        base = ctx.base.name
+        while True:
+            ub = ladder.use_budget
+            mode = idx._fusion_mode(base, ub or None, snap=snap, pods=pods)
+            if mode is None:
+                # budget ladder left the fused envelope (dense escalation /
+                # budget past the VMEM bound): staged fallback this attempt
+                hits, counts = eng.batch_query(
+                    snap, wj, pods, mb, relation=base,
+                    cap=ladder.cap, exact_budget=ub,
+                    compaction=idx._compaction(base, ub or None))
+                st.dispatches += 3 if ub else 2
+                st.note = "fused envelope exceeded: staged fallback"
+                counts = np.asarray(counts)
+                if (counts >= 0).all():
+                    with idx._lock:
+                        idx._cap = max(idx._cap, ladder.cap)
+                    break
+                st.dispatches += 1            # disambiguating bounds probe
+                ladder.on_device_overflow(
+                    counts, ub,
+                    lambda: eng.batch_query_bounds(snap, wj, relation=base),
+                    q)
+                continue
+            hits, counts = eng.batch_query_fused(
+                snap, wj, pods, relation=base, exact_budget=ub, mode=mode)
+            st.dispatches += 1
+            counts = np.asarray(counts)
+            if (counts >= 0).all():
+                with idx._lock:
+                    idx._cap = max(idx._cap, ladder.cap)
+                break
+            ladder.on_fused_overflow(counts, ub)   # capless: no bounds probe
         hits = np.asarray(hits)[:q]
         ctx.ids = [np.sort(row[row >= 0]).astype(np.int64) for row in hits]
         st.survivors = _total(ctx.ids)
@@ -343,6 +455,7 @@ class ShardedRefineStage(Stage):
     name = "refine"
     covers = ("probe", "compact", "refine")
     impl = "sharded"
+    dispatches = 3
 
     def run(self, ctx: ExecContext, st: StageStats) -> None:
         idx, batch = ctx.index, ctx.batch
@@ -373,6 +486,7 @@ class ShardedRefineStage(Stage):
                     comp = "scan"
                 step = idx._sharded_step(base, ladder.cap, ub, comp, maxw)
                 hits, counts = step(snap_repl, wj, table)
+                st.dispatches += 3 if ub else 2
                 counts = np.asarray(counts)
                 if (counts >= 0).all():
                     idx._cap = max(idx._cap, ladder.cap)
@@ -421,6 +535,7 @@ class DeltaPatchStage(Stage):
         added_hits: Optional[List[np.ndarray]] = None
         if table is not None:
             wj = jnp.asarray(batch.windows.astype(np.float32))
+            st.dispatches += 1           # device DeltaTable added-set check
             ok = np.asarray(batch_check_added(
                 table, wj, base, snap.grid_x0, snap.grid_y0, snap.grid_cell))
             tbl_ids = np.asarray(table.ids, np.int64)
@@ -598,6 +713,7 @@ class ExecutionPlan:
     def describe(self) -> List[str]:
         return [f"{i}. {s.name:<18} impl={s.impl:<8} "
                 f"covers={'+'.join(s.covers)}"
+                + (f" dispatches={s.dispatches}" if s.dispatches else "")
                 for i, s in enumerate(self.stages)]
 
 
@@ -615,10 +731,13 @@ def compile_plan(plan) -> ExecutionPlan:
         return ExecutionPlan("host", (HostRefineStage(),
                                       ComplementFinishStage()))
     if plan.backend == "device":
-        return ExecutionPlan("device", (DeviceRefineStage(),
-                                        ComplementFinishStage()))
+        refine = (FusedDeviceStage() if getattr(plan, "fused", False)
+                  else DeviceRefineStage())
+        return ExecutionPlan("device", (refine, ComplementFinishStage()))
     if plan.backend == "device+delta":
-        return ExecutionPlan("device+delta", (DeviceRefineStage(),
+        refine = (FusedDeviceStage() if getattr(plan, "fused", False)
+                  else DeviceRefineStage())
+        return ExecutionPlan("device+delta", (refine,
                                               DeltaPatchStage(),
                                               ComplementFinishStage()))
     if plan.backend == "sharded":

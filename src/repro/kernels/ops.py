@@ -17,7 +17,7 @@ from . import ref
 from .flash_attention import flash_attention_pallas
 from .morton import LANES, morton_encode_pallas
 from .refine import (refine_compact_pallas, refine_count_pallas,
-                     refine_mask_pallas)
+                     refine_fused_pallas, refine_mask_pallas)
 from .ssd_scan import ssd_scan_pallas
 
 
@@ -73,6 +73,26 @@ def refine_compact(windows: jax.Array, bounds: jax.Array,
                                       budget, prefilter)
     return refine_compact_pallas(windows, bounds, leaf_mbrs, rec_mbrs,
                                  budget, prefilter, interpret=not _on_tpu())
+
+
+def refine_fused(windows, probe_w, qkeys, keys, recs, leaf_i, leaf_f, node_i,
+                 node_f, codes, pw, pod_i, pool, leaf_mbrs, rec_mbrs, *,
+                 budget, prefilter, predicate, augment, search_steps, depth,
+                 num_buckets, interpret=None):
+    """One-dispatch probe + compact + exact refine (``refine_fused_pallas``
+    operand layout — see ``core.device.batch_query_fused`` for the packing).
+    ``interpret=None`` selects interpret mode automatically off-TPU like the
+    jitted wrappers above; pass ``True`` to force it (the CI parity suite).
+    Not jitted here: ``predicate`` is a traced-through callable, and the one
+    caller (``batch_query_fused``) is already the jit boundary."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return refine_fused_pallas(
+        windows, probe_w, qkeys, keys, recs, leaf_i, leaf_f, node_i, node_f,
+        codes, pw, pod_i, pool, leaf_mbrs, rec_mbrs, budget=budget,
+        prefilter=prefilter, predicate=predicate, augment=augment,
+        search_steps=search_steps, depth=depth, num_buckets=num_buckets,
+        interpret=interpret)
 
 
 # ------------------------------------------------------------- attention ----

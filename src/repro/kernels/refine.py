@@ -6,18 +6,29 @@ with the Z-interval slot test (``start <= slot < end``), so a (BQ × BN) tile
 of candidates is disposed of per grid step without materializing gathers in
 HBM.
 
-Three entry points (all pad internally — arbitrary Q and N just work):
+Four entry points (all pad internally — arbitrary Q and N just work):
 
 * ``refine_mask_pallas``    — full (Q, N) int8 mask.
 * ``refine_count_pallas``   — (Q,) int32 match counts via grid-axis
   accumulation (selectivity estimation at device speed).
-* ``refine_compact_pallas`` — THE refinement front-end: fused interval +
-  leaf-MBR + record-MBR mask with in-VMEM prefix-sum compaction. Emits the
-  per-query compacted candidate slots ``(Q, budget)`` plus survivor counts,
-  replacing both the dense ``(Q, cap)`` mask materialization and the
-  ``O(Q·cap·log cap)`` argsort compaction in ``core.device.batch_query``:
-  only ``Q·budget`` slot ids ever reach HBM, and the expensive exact-shape
-  vertex gathers downstream shrink from ``(Q·cap·V)`` to ``(Q·budget·V)``.
+* ``refine_compact_pallas`` — the two-dispatch refinement front-end: fused
+  interval + leaf-MBR + record-MBR mask with in-VMEM prefix-sum compaction.
+  Emits the per-query compacted candidate slots ``(Q, budget)`` plus
+  survivor counts, replacing both the dense ``(Q, cap)`` mask
+  materialization and the ``O(Q·cap·log cap)`` argsort compaction in
+  ``core.device.batch_query``: only ``Q·budget`` slot ids ever reach HBM,
+  and the expensive exact-shape vertex gathers downstream shrink from
+  ``(Q·cap·V)`` to ``(Q·budget·V)``.
+* ``refine_fused_pallas``   — the ONE-dispatch query (ROADMAP one-kernel
+  queries): the learned-index probe (piecewise suffix-min augmentation,
+  model traversal, bounded binary search — all model tables VMEM-resident),
+  the compact stage above, AND the exact rect-vs-geometry tests over the
+  ``VertexPods`` pool, in a single kernel. The ``(Q, 2)`` probe bounds and
+  ``(Q, budget)`` survivor slots never round-trip HBM; only the final
+  record-id hits and counts leave the chip. Bit-identical to composing
+  ``batch_query_bounds`` + the compact stage + the exact stage
+  (``core.device.batch_query_fused(mode="reference")`` is that composition
+  in one jit).
 
 ``refine_cost`` is the analytic bytes/flops model of each kernel (used both
 as the ``pl.CostEstimate`` handed to the compiler and by
@@ -25,6 +36,7 @@ as the ``pl.CostEstimate`` handed to the compiler and by
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
@@ -40,6 +52,13 @@ MAX_COMPACT_BUDGET = 1024   # (bq=8, bn=256, budget=1024) int32 = 8 MB — the
                             # the streamed tiles; larger budgets must take
                             # the jnp "scan" path (no VMEM constraint)
 _NEVER = 2e30         # padding MBR coordinate: intersects nothing
+_LO_LIMB_F = float(1 << 30)   # fp32 weight of the hi limb (zorder.LO_LIMB_SIZE)
+_LIMB_MAX = (1 << 30) - 1     # largest valid limb value: key padding that
+                              # preserves sorted order past the true table
+_INF_HI = 2 ** 30             # hi-limb +inf sentinel (zorder._INF_HI)
+FUSED_VMEM_LIMIT = 12 << 20   # budget for the fused kernel's VMEM residency
+                              # (model tables + pods + scatter block); past it
+                              # the engine falls back to the staged pipeline
 
 
 def _tile_mask(win_ref, mbr_ref, bounds_ref, nb, bn):
@@ -144,6 +163,184 @@ def _compact_kernel(win_ref, bounds_ref, lmbr_ref, rmbr_ref,
     written = (hot * (slot + 1)[:, :, None]).sum(axis=1)   # 0 where no write
     slots_ref[...] = jnp.where(written > 0, written - 1, slots_ref[...])
     count_ref[...] = base + m32.sum(axis=1)
+
+
+def _z_less(a_hi, a_lo, b_hi, b_lo):
+    """a < b on (hi, lo) Z-address limb pairs (zorder.z_less_hilo)."""
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))
+
+
+def _fused_probe(qk, keys_hi, keys_lo, li, lf, ni, nf, codes, pw, *,
+                 augment, search_steps, depth):
+    """In-kernel port of ``core.device`` ``_augment`` + ``batch_probe`` over
+    the VMEM-resident packed model tables — same fp32 op order, so the probe
+    bounds are bit-identical to ``batch_query_bounds``.
+
+    ``qk`` is (BQ, 4) int32 ``[zmin_hi, zmin_lo, ub_hi, ub_lo]`` PRE-
+    augmentation query keys (the O(Q) window quantization stays outside the
+    kernel); table layouts are documented on ``refine_fused_pallas``.
+    Returns the ``[start, end)`` slot run per query row."""
+    zmin_hi, zmin_lo = qk[:, 0], qk[:, 1]
+    ub_hi, ub_lo = qk[:, 2], qk[:, 3]
+
+    if augment:
+        # suffix-min piecewise augmentation: first piece with zmax >= zmin,
+        # then take its suffix-min Zmin when it precedes the query key
+        p = pw.shape[0]
+        steps = max(1, math.ceil(math.log2(p + 1)))
+        alo = jnp.zeros_like(zmin_hi)
+        ahi = jnp.full_like(zmin_hi, p)
+
+        def astep(_, st):
+            lo_i, hi_i = st
+            mid = (lo_i + hi_i) >> 1
+            less = _z_less(pw[mid, 0], pw[mid, 1], zmin_hi, zmin_lo)
+            return jnp.where(less, mid + 1, lo_i), jnp.where(less, hi_i, mid)
+
+        alo, _ = jax.lax.fori_loop(0, steps, astep, (alo, ahi))
+        in_range = alo < p
+        idx = jnp.minimum(alo, p - 1)
+        m_hi = jnp.where(in_range, pw[idx, 2], _INF_HI)
+        m_lo = jnp.where(in_range, pw[idx, 3], 0)
+        take = _z_less(m_hi, m_lo, zmin_hi, zmin_lo)
+        zmin_hi = jnp.where(take, m_hi, zmin_hi)
+        zmin_lo = jnp.where(take, m_lo, zmin_lo)
+
+    num_leaves = li.shape[0] - 1
+
+    def find_leaf(q_hi, q_lo):
+        def body(_, state):
+            node, leaf, done = state
+            dh = (q_hi - ni[node, 0]).astype(jnp.float32)
+            dl = (q_lo - ni[node, 1]).astype(jnp.float32)
+            key_f = dh * jnp.float32(_LO_LIMB_F) + dl
+            cell_f = jnp.clip(jnp.floor(key_f * nf[node, 0]), 0.0,
+                              (ni[node, 2] - 1).astype(jnp.float32))
+            cell = cell_f.astype(jnp.int32)
+            code = codes[ni[node, 3] + cell, 0]
+            is_leaf = code < 0
+            new_leaf = jnp.where(is_leaf & ~done, -code - 1, leaf)
+            new_node = jnp.where(is_leaf | done, node, code)
+            return new_node, new_leaf, done | is_leaf
+
+        node0 = jnp.zeros_like(q_hi)
+        leaf0 = jnp.zeros_like(q_hi)
+        done0 = jnp.zeros(q_hi.shape, bool)
+        _, leaf, _ = jax.lax.fori_loop(0, depth, body, (node0, leaf0, done0))
+        # fp32 routing fix-up against exact integer leaf-domain boundaries
+        for _ in range(2):
+            too_low = _z_less(q_hi, q_lo, li[leaf, 1], li[leaf, 2])
+            leaf = jnp.maximum(leaf - too_low.astype(jnp.int32), 0)
+            too_high = ~_z_less(q_hi, q_lo, li[leaf + 1, 1], li[leaf + 1, 2])
+            leaf = jnp.minimum(leaf + too_high.astype(jnp.int32),
+                               num_leaves - 1)
+        return leaf
+
+    def probe(q_hi, q_lo):
+        leaf = find_leaf(q_hi, q_lo)
+        start = li[leaf, 0]
+        end = li[leaf + 1, 0]
+        size = end - start
+        key_f = ((q_hi - li[leaf, 3]).astype(jnp.float32)
+                 * jnp.float32(_LO_LIMB_F)
+                 + (q_lo - li[leaf, 4]).astype(jnp.float32))
+        pred = jnp.rint(lf[leaf, 0] * key_f + lf[leaf, 1]).astype(jnp.int32)
+        pred = jnp.clip(pred, 0, jnp.maximum(size - 1, 0))
+        err = (1 << search_steps) // 2 + 2
+        lo = jnp.maximum(pred - err, 0) + start
+        hi = jnp.minimum(pred + err, size) + start
+
+        def bstep(_, st):
+            lo_i, hi_i = st
+            live = lo_i < hi_i  # converged lanes must not move
+            mid = (lo_i + hi_i) >> 1
+            less = _z_less(keys_hi[mid], keys_lo[mid], q_hi, q_lo) & live
+            return (jnp.where(less, mid + 1, lo_i),
+                    jnp.where(less | ~live, hi_i, mid))
+
+        lo, _ = jax.lax.fori_loop(0, search_steps + 2, bstep, (lo, hi))
+        return lo
+
+    return probe(zmin_hi, zmin_lo), probe(ub_hi, ub_lo)
+
+
+def _fused_kernel(win_ref, pwin_ref, qk_ref, keys_ref, recs_ref, leaf_i_ref,
+                  leaf_f_ref, node_i_ref, node_f_ref, codes_ref, pw_ref,
+                  pod_ref, pool_ref, lmbr_ref, rmbr_ref,
+                  slots_ref, count_ref, bounds_ref, *,
+                  bn, budget, lanes, prefilter, predicate, augment,
+                  search_steps, depth, num_buckets):
+    """Grid step (i, j) of the one-dispatch query.
+
+    j == 0: probe the learned index for the (BQ,) query tile and park the
+    slot runs in the revisited ``bounds_ref`` output block (outputs double
+    as cross-step state, like ``_compact_kernel``'s count). Every j: mask +
+    prefix-sum compact the (BQ, BN) slot tile exactly as ``_compact_kernel``
+    — except survivors index with the TRUE budget, not the lane-aligned
+    block width, so the in-kernel exact stage sees exactly the (Q, budget)
+    survivor prefix the two-dispatch reference sees. j == last: gather the
+    survivors' records and vertex pods (at the widest pow2 bucket among the
+    tile's survivors) and overwrite the slot block with final record-id hits
+    and the count block with exact-hit counts — or ``-(survivors) - 1`` on
+    budget overflow (the fused path is capless, so overflow is ALWAYS the
+    budget)."""
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _probe():
+        start, end = _fused_probe(
+            qk_ref[...], keys_ref[:, 0], keys_ref[:, 1], leaf_i_ref[...],
+            leaf_f_ref[...], node_i_ref[...], node_f_ref[...],
+            codes_ref[...], pw_ref[...], augment=augment,
+            search_steps=search_steps, depth=depth)
+        bounds_ref[...] = jnp.stack([start, end], axis=1)
+        slots_ref[...] = jnp.full_like(slots_ref, -1)
+        count_ref[...] = jnp.zeros_like(count_ref)
+
+    mask = _compact_tile_mask(pwin_ref, lmbr_ref, rmbr_ref, bounds_ref, nb,
+                              bn, prefilter)
+    m32 = mask.astype(jnp.int32)
+    base = count_ref[...]
+    excl = jnp.cumsum(m32, axis=1) - m32
+    pos = base[:, None] + excl
+    sel = mask & (pos < budget)
+    slot = nb * bn + jax.lax.broadcasted_iota(jnp.int32, mask.shape, 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (mask.shape[0], bn, lanes), 2)
+    hot = (pos[:, :, None] == cols) & sel[:, :, None]
+    written = (hot * (slot + 1)[:, :, None]).sum(axis=1)
+    slots_ref[...] = jnp.where(written > 0, written - 1, slots_ref[...])
+    count_ref[...] = base + m32.sum(axis=1)
+
+    @pl.when(nb == pl.num_programs(1) - 1)
+    def _exact():
+        slots = slots_ref[...]
+        total = count_ref[...]
+        taken = slots >= 0
+        slotc = jnp.maximum(slots, 0)
+        rec = jnp.where(taken, recs_ref[:, 0][slotc], 0)
+        pod = pod_ref[...]
+        off = pod[:, 0][rec]
+        nv = pod[:, 1][rec]
+        kd = pod[:, 2][rec]
+        b = jnp.max(jnp.where(taken, pod[:, 3][rec], 0))
+        pool = pool_ref[...]
+        w = win_ref[...]
+
+        def branch(width):
+            def run(off, nv, kd):
+                lane = jnp.minimum(
+                    jax.lax.broadcasted_iota(jnp.int32, off.shape + (width,),
+                                             off.ndim),
+                    nv[..., None] - 1)
+                idx = jnp.clip(off[..., None] + lane, 0, pool.shape[0] - 1)
+                return jax.vmap(predicate)(w, pool[idx], nv, kd)
+            return run
+
+        fmask = taken & jax.lax.switch(
+            b, [branch(1 << i) for i in range(num_buckets)], off, nv, kd)
+        slots_ref[...] = jnp.where(fmask, rec, -1)
+        count_ref[...] = jnp.where(total > budget, -total - 1,
+                                   fmask.sum(axis=1).astype(jnp.int32))
 
 
 def _grids(q, n, bq, bn):
@@ -266,6 +463,130 @@ def refine_compact_pallas(windows: jax.Array, bounds: jax.Array,
     return slots[:q, :budget], counts[:q]
 
 
+def refine_fused_pallas(windows: jax.Array, probe_w: jax.Array,
+                        qkeys: jax.Array, keys: jax.Array, recs: jax.Array,
+                        leaf_i: jax.Array, leaf_f: jax.Array,
+                        node_i: jax.Array, node_f: jax.Array,
+                        codes: jax.Array, pw: jax.Array, pod_i: jax.Array,
+                        pool: jax.Array, leaf_mbrs: jax.Array,
+                        rec_mbrs: jax.Array, *, budget: int, prefilter: str,
+                        predicate, augment: bool, search_steps: int,
+                        depth: int, num_buckets: int, bq: int = DEFAULT_BQ,
+                        bn: int = COMPACT_BN, interpret: bool = False):
+    """One-dispatch probe + compact + exact refine.
+
+    Per-query inputs (Q rows): ``windows``/``probe_w`` (Q, 4) f32 raw and
+    relation-padded windows, ``qkeys`` (Q, 4) i32 pre-augmentation
+    ``[zmin_hi, zmin_lo, ub_hi, ub_lo]`` query keys. VMEM-resident tables
+    (packed by ``core.device._fused_operands``): ``keys`` (N, 2) i32 limb
+    pairs, ``recs`` (N, 1) i32 record ids, ``leaf_i`` (L+1, 5) i32
+    ``[start, dlo_hi, dlo_lo, k0_hi, k0_lo]``, ``leaf_f`` (L+1, 2) f32
+    ``[slope, icpt]``, ``node_i`` (M, 4) i32 ``[dlo_hi, dlo_lo, fanout,
+    child_base]``, ``node_f`` (M, 1) f32 scale, ``codes`` (C, 1) i32,
+    ``pw`` (P, 4) i32 ``[zmax_hi, zmax_lo, sufmin_hi, sufmin_lo]``,
+    ``pod_i`` (R, 4) i32 ``[off, nv, kind, bucket]`` pod headers and
+    ``pool`` (V, 2) f32 vertex pods. ``leaf_mbrs``/``rec_mbrs`` are the
+    (N, 4) slot-aligned MBR tables, streamed in (BN, 4) tiles.
+
+    ``predicate`` is the relation's exact test ``(window, verts, nv, kind)
+    -> bool`` already bound to ``xp=jnp``; ``augment`` statically enables
+    the in-kernel suffix-min search (pass False when the relation does not
+    augment OR the piecewise table is empty).
+
+    Returns ``(hits (Q, budget) i32 record ids [-1 padded], counts (Q,)
+    i32)`` — identical to ``batch_query``'s two-stage paths, except the
+    fused path is capless so a negative count is ALWAYS budget overflow
+    encoding the total MBR-survivor count (``-(survivors) - 1``).
+    """
+    if prefilter not in ("intersects", "contains"):
+        raise ValueError(f"unsupported prefilter {prefilter!r}")
+    if not 0 < budget <= MAX_COMPACT_BUDGET:
+        raise ValueError(
+            f"budget {budget} outside (0, MAX_COMPACT_BUDGET="
+            f"{MAX_COMPACT_BUDGET}]: the fused kernel is two-stage only and "
+            "its one-hot scatter block must fit VMEM — use the staged "
+            "batch_query for budget 0 or larger budgets")
+    q, n = windows.shape[0], keys.shape[0]
+    lanes = max(128, -(-budget // 128) * 128)   # lane-aligned survivor block
+    qp, np_ = (-q) % bq, (-n) % bn
+    if qp:
+        # padded query rows carry zero windows and zero keys: an empty
+        # [lower_bound(0), lower_bound(0)) run, no survivors, sliced off
+        windows = jnp.pad(windows, ((0, qp), (0, 0)))
+        probe_w = jnp.pad(probe_w, ((0, qp), (0, 0)))
+        qkeys = jnp.pad(qkeys, ((0, qp), (0, 0)))
+    if np_:
+        # padded slots: sorted-order-preserving max keys, record 0, MBRs
+        # that intersect nothing (and can never contain a window)
+        keys = jnp.pad(keys, ((0, np_), (0, 0)), constant_values=_LIMB_MAX)
+        recs = jnp.pad(recs, ((0, np_), (0, 0)))
+        leaf_mbrs = jnp.pad(leaf_mbrs, ((0, np_), (0, 0)),
+                            constant_values=_NEVER)
+        rec_mbrs = jnp.pad(rec_mbrs, ((0, np_), (0, 0)),
+                           constant_values=_NEVER)
+    qpad, npad = windows.shape[0], keys.shape[0]
+
+    def full(a):
+        return pl.BlockSpec(a.shape, lambda i, j, nd=a.ndim: (0,) * nd)
+
+    hits, counts, _bounds = pl.pallas_call(
+        partial(_fused_kernel, bn=bn, budget=budget, lanes=lanes,
+                prefilter=prefilter, predicate=predicate, augment=augment,
+                search_steps=search_steps, depth=depth,
+                num_buckets=num_buckets),
+        grid=_grids(qpad, npad, bq, bn),
+        in_specs=[
+            pl.BlockSpec((bq, 4), lambda i, j: (i, 0)),   # raw windows
+            pl.BlockSpec((bq, 4), lambda i, j: (i, 0)),   # probe windows
+            pl.BlockSpec((bq, 4), lambda i, j: (i, 0)),   # query z-keys
+            full(keys), full(recs), full(leaf_i), full(leaf_f),
+            full(node_i), full(node_f), full(codes), full(pw),
+            full(pod_i), full(pool),
+            pl.BlockSpec((bn, 4), lambda i, j: (j, 0)),   # leaf MBR tile
+            pl.BlockSpec((bn, 4), lambda i, j: (j, 0)),   # record MBR tile
+        ],
+        out_specs=(
+            pl.BlockSpec((bq, lanes), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq, 2), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((qpad, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((qpad,), jnp.int32),
+            # probe bounds live in a revisited output block (cross-grid-step
+            # state, like the running count); callers discard them
+            jax.ShapeDtypeStruct((qpad, 2), jnp.int32),
+        ),
+        cost_estimate=_cost_estimate("fused", qpad, npad, budget),
+        interpret=interpret,
+    )(windows, probe_w, qkeys, keys, recs, leaf_i, leaf_f, node_i, node_f,
+      codes, pw, pod_i, pool, leaf_mbrs, rec_mbrs)
+    return hits[:q, :budget], counts[:q]
+
+
+def fused_vmem_bytes(n_slots: int, n_leaves: int, n_nodes: int, n_codes: int,
+                     n_pieces: int, n_records: int, pool_rows: int,
+                     budget: int, max_width: int, bq: int = DEFAULT_BQ,
+                     bn: int = COMPACT_BN) -> int:
+    """Worst-case VMEM residency of one fused-kernel grid step: the
+    replicated model tables + pods (resident for the whole dispatch), the
+    streamed MBR tiles, the one-hot scatter block and the widest-bucket
+    vertex gather. The engine compares this against ``FUSED_VMEM_LIMIT``
+    and falls back to the staged pipeline when the store outgrows it."""
+    lanes = max(128, -(-budget // 128) * 128)
+    resident = (n_slots * 12                 # keys (2) + recs (1) int32
+                + (n_leaves + 1) * 28        # leaf_i (5) + leaf_f (2)
+                + n_nodes * 20               # node_i (4) + node_f (1)
+                + n_codes * 4
+                + n_pieces * 16              # pw (4) int32
+                + n_records * 16             # pod headers (4) int32
+                + pool_rows * 8)             # (V, 2) f32 vertex pods
+    streamed = 2 * bn * 16 + bq * 56         # MBR tiles + query rows/bounds
+    scatter = bq * bn * lanes * 4            # one-hot compaction block
+    gather = bq * lanes * (max_width * 8 + 16)   # widest-bucket pod gather
+    return resident + streamed + scatter + gather
+
+
 # ---------------------------------------------------------------------------
 # Analytic cost model (compiler CostEstimate + roofline_report --kernels)
 # ---------------------------------------------------------------------------
@@ -274,16 +595,40 @@ def refine_cost(kind: str, q: int, n: int, budget: int = 0,
                 bn: int = DEFAULT_BN) -> dict:
     """Bytes/flops model of one kernel invocation.
 
-    ``kind``: "mask" | "count" | "compact" | "exact" — "exact" models the
-    downstream exact-shape refinement stage over the compacted (Q, budget)
-    survivors, so the roofline report covers the full compact+refine
-    pipeline, not just candidate counting. ``verts`` is the gather width of
-    the batch's widest surviving pow2 width-bucket (the vertex-pool pods
-    gather per-bucket, see ``core.device.VertexPods``), NOT the store-wide
-    dense padding — callers should pass ``pow2ceil`` of the surviving ring
-    width they expect.
+    ``kind``: "mask" | "count" | "compact" | "exact" | "fused" — "exact"
+    models the downstream exact-shape refinement stage over the compacted
+    (Q, budget) survivors, so the roofline report covers the full
+    compact+refine pipeline, not just candidate counting; "fused" models
+    the one-dispatch probe+compact+exact kernel: the compact and exact
+    terms plus one key-limb stream per query tile for the in-kernel binary
+    searches, MINUS the (Q, budget) survivor-slot and (Q, 2) bounds HBM
+    round trips the staged pipeline pays between dispatches. ``verts`` is
+    the gather width of the batch's widest surviving pow2 width-bucket (the
+    vertex-pool pods gather per-bucket, see ``core.device.VertexPods``),
+    NOT the store-wide dense padding — callers should pass ``pow2ceil`` of
+    the surviving ring width they expect.
     """
     tiles_q = -(-q // bq)
+    if kind == "fused":
+        c = refine_cost("compact", q, n, budget, bq=bq, bn=bn)
+        e = refine_cost("exact", q, n, budget, verts=verts, bq=bq, bn=bn)
+        # staged-pipeline intermediates that never touch HBM in one
+        # dispatch: compact writes + exact reads of the (Q, budget) slots,
+        # plus the (Q, 2) probe bounds each stage re-reads
+        saved = q * (2.0 * max(budget, 1) + 5.0) * 4.0
+        # in-kernel probe: the keys limb pairs are VMEM-resident for the
+        # whole dispatch (constant-index BlockSpec — fetched from HBM once,
+        # not per query tile); ~2 searches x (steps ~ 18) x ~12 flops of
+        # limb compares + model arithmetic per query
+        probe_bytes = n * 8.0 + q * 32.0
+        probe_flops = q * 2.0 * 18.0 * 12.0
+        return {
+            "flops": c["flops"] + e["flops"] + probe_flops,
+            "bytes_accessed": max(
+                c["bytes_accessed"] + e["bytes_accessed"]
+                + probe_bytes - saved, 0.0),
+            "transcendentals": 0,
+        }
     if kind == "exact":
         # per-bucket pod gather + predicate over compacted survivors:
         # verts = widest surviving bucket width, (verts, 2) f32 rings plus
