@@ -9,7 +9,10 @@ tables + cumsum/scatter compaction, ``compaction="scan"``) and the
 ONE-dispatch fused path (``batch_query_fused`` — its "reference" XLA
 composition on CPU, the Pallas kernel itself on TPU) per dataset and
 relation, asserts exactness against ``query_bruteforce`` every time, and
-emits the ``BENCH {json}`` line committed as ``BENCH_device.json``. The
+emits the ``BENCH {json}`` line committed as ``BENCH_device.json``.
+``knn_pipeline`` adds the ``"knn"`` row: the device-complete knn batch
+(CDF-seeded radii + device top-k) against the host-ranked rung ladder it
+replaced, both asserted exact against the fp64 brute-force oracle. The
 Pallas kernel columns are only *measured* on TPU; elsewhere they are
 emitted as ``null`` and listed in each row's ``"unmeasured"`` marker so the
 committed trajectory never silently conflates backends.
@@ -153,8 +156,110 @@ def refine_pipeline(csv: Csv, n: int, q: int = 128) -> dict:
         out["datasets"]["cluster"]["intersects"]["speedup_refine"])
     out["speedup_fused_cluster"] = (
         out["datasets"]["cluster"]["intersects"]["speedup_fused"])
-    print("BENCH " + json.dumps(out))
     return out
+
+
+def knn_pipeline(csv: Csv, n: int, q: int = 64, k: int = 10) -> dict:
+    """Device-complete knn vs the host-ranked rung ladder it replaced.
+
+    Baseline = the old shape: batched device ``dwithin`` probes at blindly
+    doubling radii, then PER-POINT host ranking — gather every candidate's
+    vertices to the host (``gs.padded``), exact fp64 distances, lexsort
+    top-k. New = ``QueryBatch.knn`` on the device backend: CDF-seeded
+    per-point radii, exact squared distances on the pooled VertexPods
+    survivors and a device top-k; only the final ``(Q, k)`` comes home.
+    Both run fresh on the same index; BOTH are asserted exact against the
+    fp64 brute-force oracle every run, and the payload carries the median
+    rung depth seeded vs blind (``check_bench`` gates seeded <= 2)."""
+    import dataclasses
+
+    from repro.core import geometry as geom
+    from repro.core.engine import QueryBatch
+    from repro.core.index import initial_knn_radius
+
+    gs = _fp32_dataset("cluster", n)
+    idx = SpatialIndex.build(
+        gs, GLINConfig(piece_limitation=10_000),
+        EngineConfig(initial_cap=REFINE_CAP, exact_budget=REFINE_BUDGET))
+    idx.snapshot()
+    rng = np.random.default_rng(7)
+    lo, hi = gs.mbrs[:, :2].min(0), gs.mbrs[:, 2:].max(0)
+    pts = lo + (hi - lo) * rng.uniform(0.1, 0.9, (q, 2))
+    pts = pts.astype(np.float32).astype(np.float64)
+
+    # fp64 brute-force oracle, ranked by the shared (distance, id) contract
+    all_ids = np.arange(n, dtype=np.int64)
+    pad, nv, kd = gs.padded(all_ids), gs.nverts, gs.kinds
+
+    def exact_rank(p, ids, vv, nvv, kdd):
+        rect = np.array([p[0], p[1], p[0], p[1]])
+        d2 = geom.rect_geom_sqdist(rect, vv, nvv, kdd, xp=np)
+        return geom.rank_knn(ids, np.sqrt(np.maximum(d2, 0.0)), k)[0]
+
+    want = [exact_rank(p, all_ids, pad, nv, kd) for p in pts]
+
+    # ---- baseline: blind doubling ladder, candidates ranked on the host
+    r0 = initial_knn_radius(idx.glin, k)
+    r0 = float(np.power(2.0, np.ceil(np.log2(max(r0, 1e-9)))))
+
+    def host_ladder():
+        done = np.zeros(q, bool)
+        out = [None] * q
+        r = r0
+        while not done.all():
+            sel = np.nonzero(~done)[0]
+            w = np.concatenate([pts[sel], pts[sel]], axis=1)
+            res = idx.query(QueryBatch.window(
+                w, f"dwithin:{r:.17g}", backend="device"))
+            for j, i in enumerate(sel):
+                hits = np.asarray(res.ids[j])
+                if len(hits) >= min(k, n):
+                    out[i] = exact_rank(pts[i], hits, gs.padded(hits),
+                                        nv[hits], kd[hits])
+                    done[i] = True
+            r *= 2.0
+        return out
+
+    base_ids = host_ladder()   # compile every rung's query bucket
+    host_us = timeit(host_ladder, repeats=3)
+
+    # ---- new: one device-complete knn batch
+    batch = QueryBatch.knn(pts, k, backend="device")
+    res = idx.query(batch)     # compile + walk the adaptive cap up
+    assert res.plan.backend == "device"
+    idx.query(batch)           # second warm: the first call grew the cap
+    #                            mid-flight, so rung shapes recompile once
+    #                            at the settled cap before the timed region
+    dev_us = timeit(lambda: idx.query(batch), repeats=3)
+
+    for qi in range(q):        # exactness of BOTH paths, every run
+        np.testing.assert_array_equal(np.asarray(res.ids[qi]), want[qi])
+        np.testing.assert_array_equal(np.asarray(base_ids[qi]), want[qi])
+
+    def med_rungs(stage):
+        probes = np.repeat(np.arange(1, stage.rungs + 1),
+                           np.asarray(stage.rung_hist, np.int64))
+        return float(np.median(probes)) if probes.size else 0.0
+
+    seeded = res.stages[-1]
+    cfg0 = idx.config
+    try:                       # same batch, blind global seed radius
+        idx.config = dataclasses.replace(cfg0, knn_seed="global")
+        blind = idx.query(QueryBatch.knn(pts, k, backend="device")).stages[-1]
+    finally:
+        idx.config = cfg0
+    row = {"n": n, "q": q, "k": k,
+           "host_ladder_us": host_us, "device_us": dev_us,
+           "speedup_knn": host_us / max(dev_us, 1e-9),
+           "rungs_median_seeded": med_rungs(seeded),
+           "rungs_median_blind": med_rungs(blind),
+           "seed_hits": int(seeded.seed_hits), "exact": True}
+    csv.emit("device/knn_us", dev_us,
+             f"host_ladder={host_us:.0f}us;"
+             f"speedup=x{row['speedup_knn']:.2f};"
+             f"rungs_med={row['rungs_median_seeded']:.1f}"
+             f"(blind={row['rungs_median_blind']:.1f});exact=True")
+    return row
 
 
 def device_batch_query(csv: Csv, n: int) -> None:
@@ -238,9 +343,14 @@ def kernels(csv: Csv) -> None:
 
 def run(csv: Csv, large: bool = False, quick: bool = False) -> dict:
     if quick:
-        return refine_pipeline(csv, n=30_000, q=64)
+        bench = refine_pipeline(csv, n=30_000, q=64)
+        bench["knn"] = knn_pipeline(csv, n=30_000, q=64)
+        print("BENCH " + json.dumps(bench))
+        return bench
     n = min(scale_n(large), 200_000)
     bench = refine_pipeline(csv, n=min(n, 120_000))
+    bench["knn"] = knn_pipeline(csv, n=min(n, 60_000), q=64)
+    print("BENCH " + json.dumps(bench))
     device_batch_query(csv, n)
     kernels(csv)
     return bench

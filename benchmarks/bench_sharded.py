@@ -9,6 +9,8 @@ dense path, kept in ``build_glin_query_step`` as the baseline) — on a
 host-device CPU mesh (``--xla_force_host_platform_device_count``), per
 dataset x relation, asserting exactness against ``query_bruteforce`` every
 run, and emits the ``BENCH {json}`` line committed as ``BENCH_sharded.json``.
+Each mesh also times the device-complete knn tier (shard-local top-k + the
+one-collective k-merge) on the cluster dataset, exact vs the fp64 host loop.
 
 Device count is fixed per process, so the orchestrating ``run()`` spawns one
 ``--inner`` subprocess per mesh size (the full matrix on the 4-way mesh, a
@@ -104,6 +106,33 @@ def _inner(csv: Csv, devices: int, n: int, q: int, full: bool) -> dict:
                      row["fused_us"],
                      f"dense={row['dense_us']:.0f}us;"
                      f"speedup=x{row['speedup']:.2f};exact=True")
+        if name == "cluster":
+            # device-complete knn over the mesh: shard-local top-k + the
+            # one-collective k-merge, exact vs the fp64 host loop every run
+            from repro.core.index import knn as host_knn
+            kq = 10
+            pts = (wins[:, :2] + wins[:, 2:]) / 2.0
+            pts = pts.astype(np.float32).astype(np.float64)
+            kb = QueryBatch.knn(pts, kq)
+
+            def runk(idx=fused, kb=kb):
+                return idx.query(kb)
+
+            resk = runk()   # compile + settle
+            assert resk.plan.backend == "sharded"
+            knn_us = timeit(runk, repeats=3)
+            for qi, p in enumerate(pts):
+                hi, _ = host_knn(fused.glin, p, kq)
+                np.testing.assert_array_equal(resk.ids[qi],
+                                              np.asarray(hi, np.int64))
+            stage = resk.stages[-1]
+            out["knn"] = {"k": kq, "q": int(len(pts)), "knn_us": knn_us,
+                          "merge_bytes": int(stage.merge_bytes),
+                          "rungs": int(stage.rungs),
+                          "seed_hits": int(stage.seed_hits), "exact": True}
+            csv.emit(f"sharded/{devices}way/knn_us", knn_us,
+                     f"k={kq};merge_bytes={stage.merge_bytes};"
+                     f"rungs={stage.rungs};exact=True")
     return out
 
 

@@ -11,8 +11,13 @@ runs on shared runners) — and gate only under ``--strict-latency``
 * ``BENCH_device.json``   — per dataset×relation ``refine_scan_us`` vs the
   baseline, ``speedup_cluster`` (two-stage refinement vs the legacy argsort
   pipeline at cap=4096 / budget=256) staying >= ``--min-refine-speedup``,
-  and ``speedup_fused_cluster`` (the one-dispatch fused path vs the staged
-  scan pipeline) staying >= ``--min-fused-speedup``. Columns a row lists in
+  ``speedup_fused_cluster`` (the one-dispatch fused path vs the staged
+  scan pipeline) staying >= ``--min-fused-speedup``, and the ``knn`` row:
+  the device-complete knn batch staying >= ``--min-knn-speedup`` x faster
+  than the host-ranked rung ladder it replaced (both measured fresh in the
+  same run), exact vs the fp64 brute-force oracle, with the CDF-seeded
+  median rung depth <= 2 (the radius model still lands within one
+  doubling). Columns a row lists in
   its ``"unmeasured"`` marker (e.g. the Pallas kernel timings off-TPU) are
   warned about, never gated — the backend they need is absent, not slow.
 * ``BENCH_maintenance.json`` — ``speedup_vs_republish`` (delta patching vs
@@ -22,7 +27,10 @@ runs on shared runners) — and gate only under ``--strict-latency``
   (``republish.p50_ratio`` — the stream used to block for the full rebuild).
 * ``BENCH_sharded.json``  — fused-vs-dense per-shard refinement speedup on
   the host-device CPU mesh staying >= ``--min-sharded-speedup`` on EVERY
-  tracked dataset x relation x mesh cell (``min_speedup``).
+  tracked dataset x relation x mesh cell (``min_speedup``), plus the knn
+  tier on every fresh mesh: present, exact vs the fp64 host loop, and
+  actually moving cross-shard merge bytes (a zero would mean the k-merge
+  silently fell back to a host merge).
 * ``BENCH_serving.json``  — the serving tier's max sustainable QPS under
   the p99 SLO staying >= ``--min-serving-qps-ratio`` x the serial-flush
   baseline's (``qps_ratio``, both measured fresh on the same host against
@@ -63,6 +71,7 @@ def check(fresh_dir: pathlib.Path, committed_dir: pathlib.Path,
           min_maint_speedup: float, strict_latency: bool = False,
           min_sharded_speedup: float = 1.2,
           min_fused_speedup: float = 1.2,
+          min_knn_speedup: float = 1.2,
           max_republish_p50_ratio: float = 4.0,
           min_serving_qps_ratio: float = 1.05,
           min_storage_ratio: float = 2.0) -> list:
@@ -108,6 +117,25 @@ def check(fresh_dir: pathlib.Path, committed_dir: pathlib.Path,
             f"device: one-dispatch fused speedup on cluster x{sf:.2f} < "
             f"floor x{min_fused_speedup:g} (committed x"
             f"{dev_old.get('speedup_fused_cluster', 0):.2f})")
+    knn = dev_new.get("knn")
+    if not knn:
+        errors.append("device: knn row missing from fresh run")
+    else:
+        sk = knn.get("speedup_knn", 0.0)
+        if sk < min_knn_speedup:
+            errors.append(
+                f"device: device-complete knn x{sk:.2f} < floor "
+                f"x{min_knn_speedup:g} vs the host-ranked rung ladder "
+                f"(committed x"
+                f"{dev_old.get('knn', {}).get('speedup_knn', 0):.2f})")
+        if not knn.get("exact", False):
+            errors.append("device: knn exactness flag missing/false")
+        rm = knn.get("rungs_median_seeded")
+        if rm is None or rm > 2.0:
+            errors.append(
+                f"device: CDF-seeded knn median rung depth {rm} > 2 — "
+                "the radius model no longer lands within one doubling "
+                f"(blind baseline: {knn.get('rungs_median_blind')})")
 
     mnt_new = _load(fresh_dir / "BENCH_maintenance.json")
     sv = mnt_new.get("speedup_vs_republish", 0.0)
@@ -158,6 +186,18 @@ def check(fresh_dir: pathlib.Path, committed_dir: pathlib.Path,
                     else:
                         print(f"WARNING {msg} (cross-machine; not gating — "
                               "pass --strict-latency to enforce)")
+        sknn = new_payload.get("knn")
+        if not sknn:
+            errors.append(f"sharded: {mesh}-way knn tier missing from "
+                          "fresh run")
+        else:
+            if not sknn.get("exact", False):
+                errors.append(f"sharded: {mesh}-way knn exactness flag "
+                              "missing/false")
+            if sknn.get("merge_bytes", 0) <= 0:
+                errors.append(
+                    f"sharded: {mesh}-way knn moved no cross-shard merge "
+                    "bytes — the k-merge fell back off the device")
 
     srv_new = _load(fresh_dir / "BENCH_serving.json")
     qr = srv_new.get("qps_ratio", 0.0)
@@ -246,6 +286,11 @@ def main() -> None:
                          "staged scan pipeline on cluster/intersects "
                          "(machine-relative: both sides measured in the "
                          "same fresh run)")
+    ap.add_argument("--min-knn-speedup", type=float, default=1.2,
+                    help="floor for the device-complete knn batch vs the "
+                         "host-ranked rung ladder on cluster "
+                         "(machine-relative: both sides measured in the "
+                         "same fresh run)")
     ap.add_argument("--min-maint-speedup", type=float, default=1.5)
     ap.add_argument("--min-sharded-speedup", type=float, default=1.2,
                     help="floor for fused-vs-dense sharded refinement on "
@@ -278,6 +323,7 @@ def main() -> None:
                    strict_latency=args.strict_latency,
                    min_sharded_speedup=args.min_sharded_speedup,
                    min_fused_speedup=args.min_fused_speedup,
+                   min_knn_speedup=args.min_knn_speedup,
                    max_republish_p50_ratio=args.max_republish_p50_ratio,
                    min_serving_qps_ratio=args.min_serving_qps_ratio,
                    min_storage_ratio=args.min_storage_ratio)

@@ -38,7 +38,8 @@ __all__ = ["GLINSnapshot", "HostCapture", "VertexPods", "pack_pods",
            "snapshot_from_host", "batch_probe", "batch_query_bounds",
            "batch_query", "batch_query_fused", "DeltaTable",
            "delta_table_from_host",
-           "batch_check_added", "input_specs_like"]
+           "batch_check_added", "knn_seed_radii", "batch_knn_rank",
+           "input_specs_like"]
 
 _I32 = jnp.int32
 _INF_HI = np.int32(2**30)  # > any valid 30-bit limb
@@ -596,6 +597,35 @@ def _exact_over(rel, windows: jax.Array, pods: VertexPods, rec: jax.Array,
         b, [branch(1 << i) for i in range(pods.num_buckets)], off, nv, kd)
 
 
+def _sqdist_over(windows: jax.Array, pods: VertexPods, rec: jax.Array,
+                 sel: jax.Array) -> jax.Array:
+    """Exact squared window-to-geometry distances over gathered records
+    ``rec`` (Q, M) -> f32: the distance twin of ``_exact_over``. Same
+    widest-surviving-bucket pod gather (one ``lax.switch`` branch executes),
+    with ``geometry.rect_geom_sqdist`` in place of the boolean predicate.
+    Unselected lanes read real (clamped, in-bounds) data and are masked by
+    the caller."""
+    off = pods.off[rec]
+    nv = pods.nv[rec]
+    kd = pods.kd[rec]
+    b = jnp.max(jnp.where(sel, pods.bucket[rec], 0))
+
+    def dist_for(w, vv, nn, kk):
+        return geom.rect_geom_sqdist(w, vv, nn, kk, xp=jnp)
+
+    def branch(width):
+        def run(off, nv, kd):
+            lane = jnp.minimum(jnp.arange(width, dtype=_I32),
+                               nv[..., None] - 1)
+            idx = jnp.clip(off[..., None] + lane, 0,
+                           pods.pool.shape[0] - 1)
+            return jax.vmap(dist_for)(windows, pods.pool[idx], nv, kd)
+        return run
+
+    return jax.lax.switch(
+        b, [branch(1 << i) for i in range(pods.num_buckets)], off, nv, kd)
+
+
 def _exact_refine_compacted(rel, windows: jax.Array, s: GLINSnapshot,
                             pods: VertexPods, slots: jax.Array
                             ) -> Tuple[jax.Array, jax.Array]:
@@ -1003,6 +1033,122 @@ def batch_check_added(t: DeltaTable, windows: jax.Array, relation: str,
 
     exact = jax.vmap(exact_for)(windows)
     return cand & pre & exact
+
+
+# ---------------------------------------------------------------------------
+# Device-complete kNN: CDF-seeded radii + exact-distance top-k ranking
+# ---------------------------------------------------------------------------
+_ID_PAD = np.int32(2**31 - 1)     # sorts after every real record id
+
+
+@jax.jit
+def knn_seed_radii(s: GLINSnapshot, windows: jax.Array, k: jax.Array
+                   ) -> jax.Array:
+    """CDF-seeded initial kNN radii: degenerate windows (Q, 4) -> (Q,) f32.
+
+    The published learned index doubles as a density estimate (cf. "Spatial
+    Interpolation-based Learned Index", PAPERS.md 2102.06789): each query
+    point routes through the model to its leaf (``_find_leaf``); the leaf's
+    record count over its aggregate-MBR area is the local intensity rho, and
+    the expected k-th-neighbour distance of a planar process of intensity
+    rho is ``sqrt(k / (pi * rho))``, offset by the point's distance to the
+    leaf's aggregate MBR — a point routed to a leaf it doesn't touch (empty
+    space between clusters) must at least REACH the data before density
+    matters, so the gap keeps it from crawling the doubling ladder across
+    the void. This is an ESTIMATE only — the growth ladder above it is the
+    correctness backstop (an under-estimate costs extra rungs, never hits);
+    the settlement test is always the exact within-radius count from
+    :func:`batch_knn_rank`."""
+    from .zorder import ZGrid
+
+    grid = ZGrid(s.grid_x0, s.grid_y0, s.grid_cell)
+    (zmin_hi, zmin_lo), _ = mbr_to_zinterval_hilo(
+        windows, grid, guard=ZGrid.FP32_GUARD_CELLS)
+    leaf = _find_leaf(s, zmin_hi, zmin_lo)
+    count = (s.leaf_start[leaf + 1] - s.leaf_start[leaf]).astype(jnp.float32)
+    m = s.leaf_mbr[leaf]
+    area = jnp.maximum((m[:, 2] - m[:, 0]) * (m[:, 3] - m[:, 1]),
+                       jnp.float32(1e-12))
+    rho = jnp.maximum(count, 1.0) / area
+    gx = jnp.maximum(jnp.maximum(m[:, 0] - windows[:, 0],
+                                 windows[:, 0] - m[:, 2]), 0.0)
+    gy = jnp.maximum(jnp.maximum(m[:, 1] - windows[:, 1],
+                                 windows[:, 1] - m[:, 3]), 0.0)
+    gap = jnp.sqrt(gx * gx + gy * gy)
+    return gap + jnp.sqrt(k.astype(jnp.float32) / (jnp.float32(math.pi) * rho))
+
+
+@partial(jax.jit, static_argnames=("k", "impl"))
+def batch_knn_rank(windows: jax.Array, pods: VertexPods, hits: jax.Array,
+                   radius: jax.Array, k: int, impl: str = "sort",
+                   tombstones=None, delta=None
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Device top-k over dwithin survivors: (Q, B) hit ids -> ((Q, k) ids,
+    (Q, k) distances, (Q,) within-radius candidate counts).
+
+    ``hits`` is the refine stage's -1-padded id matrix; exact distances come
+    from ONE widest-surviving-bucket pod gather (``_sqdist_over``), so the
+    candidate set never leaves the device — only the (Q, k) result does.
+
+    Ordering is the shared ``geometry.rank_knn`` (distance, id) contract.
+    The selection sorts SQUARED distances (monotonic in the distance, and
+    one rounding step more precise): ``impl="sort"`` is the XLA reference —
+    a two-key ``lax.sort`` over ``[d2, ids]`` (plain ``lax.top_k`` cannot
+    tie-break on ids); ``impl="pallas"`` routes the same selection through
+    the ``kernels.refine.knn_topk_pallas`` partial-sort kernel (TPU target,
+    interpret elsewhere; worthwhile once B is large), identical ordering.
+
+    ``radius`` ((Q,) f32) is each point's OWN probe radius this rung — the
+    caller probes every still-undone point in one dispatch at per-point
+    inflated square windows, so the radius is per-row, not per-batch. The
+    returned count is |{candidates with d2 <= radius^2}| over snapshot AND
+    delta rows — compared in squared form, exactly the dwithin predicate's
+    test, so the ladder's settlement rule (done once count >= k: dwithin
+    candidacy is exact, no closer record can be missing) never over-counts.
+
+    ``tombstones`` (T,) i32 masks deleted-but-published ids out of the
+    ranking; ``delta`` (a :class:`DeltaTable`) merges the unpublished added
+    set by exact distance before the top-k, so ``device+delta`` kNN ranks
+    inserted records without a republish (added ids postdate snapshot ids —
+    the two id sets never collide)."""
+    q = windows.shape[0]
+    inf = jnp.float32(jnp.inf)
+    valid = hits >= 0
+    rec = jnp.maximum(hits, 0)
+    d2 = _sqdist_over(windows, pods, rec, valid)
+    d2 = jnp.where(valid, d2, inf)
+    ids = jnp.where(valid, hits, _ID_PAD)
+    if tombstones is not None and tombstones.shape[0]:
+        dead = (hits[:, :, None] == tombstones[None, None, :]).any(axis=2)
+        d2 = jnp.where(dead, inf, d2)
+        ids = jnp.where(dead, _ID_PAD, ids)
+    if delta is not None:
+        verts = geom.ragged_padded(delta.pool, delta.off, delta.nverts,
+                                   delta.max_width, xp=jnp)
+        ad2 = jax.vmap(lambda w: geom.rect_geom_sqdist(
+            w, verts, delta.nverts, delta.kinds, xp=jnp))(windows)
+        live = delta.ids[None, :] >= 0
+        ad2 = jnp.where(live, ad2, inf)
+        aid = jnp.where(live, delta.ids[None, :], _ID_PAD)
+        d2 = jnp.concatenate([d2, ad2], axis=1)
+        ids = jnp.concatenate(
+            [ids, jnp.broadcast_to(aid, (q, delta.size))], axis=1)
+    counts = (d2 <= (radius * radius)[:, None]).sum(axis=1).astype(_I32)
+    if d2.shape[1] < k:                    # k > budget(+delta): pad columns
+        padw = k - d2.shape[1]
+        d2 = jnp.concatenate([d2, jnp.full((q, padw), inf)], axis=1)
+        ids = jnp.concatenate([ids, jnp.full((q, padw), _ID_PAD, _I32)],
+                              axis=1)
+    if impl == "pallas":
+        from repro.kernels import ops
+
+        d2k, idk = ops.knn_topk(d2, ids, k=k)
+    else:
+        d2s, idss = jax.lax.sort([d2, ids], num_keys=2)
+        d2k, idk = d2s[:, :k], idss[:, :k]
+    dk = jnp.sqrt(jnp.maximum(d2k, 0.0))
+    idk = jnp.where(jnp.isinf(d2k), -1, idk)
+    return idk, dk, counts
 
 
 def input_specs_like(num_queries: int):

@@ -33,8 +33,8 @@ from .zorder import LO_LIMB_SIZE
 from repro.utils.compat import shard_map as compat_shard_map
 
 __all__ = ["shard_glin_arrays", "shard_arrays_from_capture",
-           "build_glin_query_step", "glin_input_specs", "GLIN_MODEL_SPEC",
-           "TABLE_KEYS"]
+           "build_glin_query_step", "build_glin_knn_step",
+           "glin_input_specs", "GLIN_MODEL_SPEC", "TABLE_KEYS"]
 
 _I32 = jnp.int32
 _NEVER = 2e30          # padding MBR coordinate: intersects/contains nothing
@@ -348,6 +348,197 @@ def build_glin_query_step(mesh: Mesh, relation: str = "intersects",
         {k: NamedSharding(mesh, s) for k, s in table_spec.items()},
     )
     out_shardings = tuple(NamedSharding(mesh, s) for s in out_specs)
+    return step, in_shardings, out_shardings
+
+
+def build_glin_knn_step(mesh: Mesh, relation: str, k: int, cap: int = 512,
+                        exact_budget: int = 0, compaction: str = "scan",
+                        max_width: int = 64):
+    """Device-complete sharded kNN: shard-local top-k + cross-shard k-merge.
+
+    Returns (step_fn, in_shardings, out_shardings) like
+    :func:`build_glin_query_step`; ``relation`` must be a bound
+    ``dwithin:<r>`` (the probe radius rides on ``rel.probe_pad``).
+
+    step(snapshot, windows, table) -> (ids, dists, counts):
+      ids   (Q, k) int32   — merged global record ids, ascending
+                             (distance, id), -1 past the candidate count
+      dists (Q, k) float32 — matching exact point-to-geometry distances
+      counts(Q, n_data_shards) int32 — per-shard within-radius candidate
+                             counts; negative = the shard's overflow signal
+                             (same encoding as the window step, consumed by
+                             ``OverflowLadder.on_sharded_overflow``)
+
+    Inside the shard_map each shard selects its dwithin candidates exactly
+    like the window step (same compaction ladder, same overflow encoding),
+    then gathers exact SQUARED distances from its local vertex pool at the
+    widest surviving width bucket and partial-sorts its own block to a
+    local ``(Q, k)`` top-k by ascending ``(d2, global id)`` — candidate
+    sets never leave their shard. The cross-shard merge is ONE collective:
+    reshaping the ``(Q, shards, k)`` output across the data axes
+    all-gathers every shard's block, and a replicated two-key sort takes
+    the global k — ``q * shards * (k*8 + 4)`` bytes on the wire (the
+    collective term of ``kernels.refine.sharded_knn_cost``), independent of
+    the candidate counts.
+
+    The within-radius counts are compared in squared form — exactly the
+    dwithin predicate's test — so the caller's settlement rule (done once
+    the summed counts reach k) never over-counts. Snapshot records only: no
+    tombstone/delta merge here — the caller republishes a stale snapshot
+    first (the sharded k-merge exactness contract)."""
+    rel = get_relation(relation)
+    if not relation.startswith("dwithin:") or rel.parametric:
+        raise ValueError(f"knn step needs a bound dwithin relation, got "
+                         f"{relation!r}")
+    if compaction not in ("scan", "pallas"):
+        raise ValueError(f"unsupported sharded compaction {compaction!r} "
+                         "(use 'scan' or 'pallas')")
+    if max_width < 1 or (max_width & (max_width - 1)):
+        raise ValueError(f"max_width must be a power of two, got {max_width}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    r2 = jnp.float32(float(rel.probe_pad) ** 2)
+    daxes = _data_axes(mesh)
+    kb = exact_budget if 0 < exact_budget < cap else 0
+    nbuckets = max_width.bit_length()
+    id_pad = jnp.int32(2**31 - 1)     # sorts after every real record id
+
+    table_spec = {kk: P(daxes) for kk in TABLE_KEYS}
+    in_specs = (GLIN_MODEL_SPEC, P("model"), table_spec)
+    out_specs = (P("model", daxes), P("model", daxes), P("model", daxes))
+
+    def local_step(snapshot: GLINSnapshot, windows, table):
+        # candidate selection: the window step's per-shard slot compaction,
+        # verbatim (see build_glin_query_step for the commentary)
+        shard_id = jax.lax.axis_index(daxes[0])
+        if len(daxes) == 2:
+            shard_id = (shard_id * jax.lax.axis_size(daxes[1])
+                        + jax.lax.axis_index(daxes[1]))
+        local_n = table["keys_hi"].shape[0]
+        offset = shard_id.astype(_I32) * local_n
+
+        zmin_hi, zmin_lo, ub_hi, ub_lo = query_keys(snapshot, windows,
+                                                    relation)
+
+        def local_lb(q_hi, q_lo):
+            lo_g, hi_g = model_window(snapshot, q_hi, q_lo)
+            lo_l = jnp.clip(lo_g - offset, 0, local_n)
+            hi_l = jnp.clip(hi_g - offset, 0, local_n)
+            return lower_bound_in_window(table["keys_hi"], table["keys_lo"],
+                                         q_hi, q_lo, lo_l, hi_l,
+                                         snapshot.search_steps + 2)
+
+        lstart = local_lb(zmin_hi, zmin_lo)
+        lend = local_lb(ub_hi, ub_lo)
+        qn = windows.shape[0]
+        probe_w = rel.probe_window(windows, xp=jnp)
+
+        if kb:
+            if compaction == "pallas":
+                from repro.kernels import ops
+
+                bounds = jnp.stack([lstart, lend], axis=1)
+                slots, surv = ops.refine_compact(
+                    probe_w, bounds, table["lmbrs"], table["mbrs"],
+                    budget=kb, prefilter=rel.prefilter_kind)
+                overflow = surv > kb
+            else:
+                pos = lstart[:, None] + jnp.arange(cap, dtype=_I32)[None, :]
+                valid = pos < jnp.minimum(lend, lstart + cap)[:, None]
+                posc = jnp.minimum(pos, local_n - 1)
+                rmbr = table["mbrs"][posc]
+                rec_ok = rel.mbr_prefilter(rmbr, windows[:, None, :], xp=jnp)
+                mask = valid & rec_ok
+                m32 = mask.astype(_I32)
+                excl = jnp.cumsum(m32, axis=1) - m32
+                col = jnp.where(mask & (excl < kb), excl, kb)
+                slots = jnp.full((qn, kb), -1, _I32).at[
+                    jnp.arange(qn, dtype=_I32)[:, None], col
+                ].set(posc, mode="drop")
+                surv = m32.sum(axis=1)
+                runlen = lend - lstart
+                run_over = runlen > cap
+                overflow = run_over | (surv > kb)
+                surv = jnp.where(run_over, runlen, surv)
+        else:
+            # dense single-stage selection: every in-run slot passing the
+            # (radius-padded) record-MBR prefilter becomes a candidate
+            pos = lstart[:, None] + jnp.arange(cap, dtype=_I32)[None, :]
+            valid = pos < jnp.minimum(lend, lstart + cap)[:, None]
+            posc = jnp.minimum(pos, local_n - 1)
+            rmbr = table["mbrs"][posc]
+            rec_ok = rel.mbr_prefilter(rmbr, windows[:, None, :], xp=jnp)
+            slots = jnp.where(valid & rec_ok, posc, -1)
+            runlen = lend - lstart
+            overflow = runlen > cap
+            surv = runlen
+
+        # shard-local ranking: exact squared distances over the surviving
+        # slots, rings gathered from the LOCAL pool slice at the width of
+        # the widest surviving bucket only (the knn analogue of the window
+        # step's exact_switch — sqdist instead of the predicate)
+        taken = slots >= 0
+        slotc = jnp.maximum(slots, 0)
+        rec = jnp.where(taken, table["recs"][slotc], -1)
+        off = table["voff"][slotc]
+        nvs = table["nverts"][slotc]
+        kds = table["kinds"][slotc]
+        b = jnp.max(jnp.where(taken, table["vbucket"][slotc], 0))
+
+        def branch(width):
+            def run(off, nvs, kds):
+                lane = jnp.minimum(
+                    jnp.arange(width, dtype=_I32), nvs[..., None] - 1)
+                idx = jnp.clip(off[..., None] + lane, 0,
+                               table["vpool"].shape[0] - 1)
+                return jax.vmap(
+                    lambda w, vv, nn, kk: geom.rect_geom_sqdist(
+                        w, vv, nn, kk, xp=jnp)
+                )(windows, table["vpool"][idx], nvs, kds)
+            return run
+
+        d2 = jax.lax.switch(
+            b, [branch(1 << i) for i in range(nbuckets)], off, nvs, kds)
+        ok = taken & (rec >= 0)
+        inf = jnp.float32(jnp.inf)
+        d2 = jnp.where(ok, d2, inf)
+        idv = jnp.where(ok, rec, id_pad)
+        within = (d2 <= r2).sum(axis=1).astype(_I32)
+        counts = jnp.where(overflow, -surv.astype(_I32) - 1, within)
+        if d2.shape[1] < k:               # k > budget: pad the sort columns
+            padw = k - d2.shape[1]
+            d2 = jnp.concatenate([d2, jnp.full((qn, padw), inf)], axis=1)
+            idv = jnp.concatenate(
+                [idv, jnp.full((qn, padw), id_pad, _I32)], axis=1)
+        d2s, idss = jax.lax.sort([d2, idv], num_keys=2)
+        return (d2s[:, None, :k], idss[:, None, :k], counts[:, None])
+
+    local = compat_shard_map(local_step, mesh, in_specs, out_specs)
+    nshards = 1
+    for a in daxes:
+        nshards *= mesh.shape[a]
+
+    def step(snapshot, windows, table):
+        d2b, idb, counts = local(snapshot, windows, table)
+        q = windows.shape[0]
+        # cross-shard k-merge: flattening the shard axis all-gathers the
+        # (shards, k) blocks over the data axes (ONE collective) and the
+        # replicated two-key sort takes the global k
+        d2s, idss = jax.lax.sort(
+            [d2b.reshape(q, nshards * k), idb.reshape(q, nshards * k)],
+            num_keys=2)
+        d2k, idk = d2s[:, :k], idss[:, :k]
+        dists = jnp.sqrt(jnp.maximum(d2k, 0.0))
+        return jnp.where(jnp.isinf(d2k), -1, idk), dists, counts
+
+    in_shardings = (
+        NamedSharding(mesh, GLIN_MODEL_SPEC),
+        NamedSharding(mesh, P("model")),
+        {kk: NamedSharding(mesh, s) for kk, s in table_spec.items()},
+    )
+    out_shardings = (NamedSharding(mesh, P("model")),
+                     NamedSharding(mesh, P("model")),
+                     NamedSharding(mesh, P("model", daxes)))
     return step, in_shardings, out_shardings
 
 

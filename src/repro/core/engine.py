@@ -110,9 +110,25 @@ class EngineConfig:
     delta_device_min: int = 64        # added-set size at which device+delta
                                       # patching moves from the host loop to
                                       # the device-resident DeltaTable
-    knn_device_min_batch: int = 16    # knn point batches this big run as
-                                      # batched dwithin probes at doubling
-                                      # radii; smaller ones loop on the host
+    knn_device_min_batch: int = 16    # knn point batches this big run
+                                      # device-complete (seeded dwithin
+                                      # probes + on-device top-k ranking);
+                                      # smaller ones loop on the host
+    knn_seed: Optional[str] = None    # initial knn radius selection: "cdf"
+                                      # (per-point density seed read off the
+                                      # published learned model — leaf count
+                                      # over leaf-MBR area) or "global" (one
+                                      # whole-store density estimate); None =
+                                      # cdf. Either way the doubling ladder
+                                      # is the correctness backstop: a bad
+                                      # seed costs extra rungs, never hits
+    knn_topk: Optional[str] = None    # device top-k impl: "sort" (two-key
+                                      # lax.sort reference) or "pallas" (the
+                                      # k-round partial-selection kernel —
+                                      # wins when k << candidate columns);
+                                      # None = auto: pallas on TPU, sort
+                                      # elsewhere. Both obey the (distance,
+                                      # id) tie-break contract
     pad_quantum: int = 4096           # bucket-pad record/slot array lengths so
                                       # insert-driven growth does not change
                                       # jitted shapes (0 disables padding)
@@ -177,11 +193,12 @@ class QueryBatch:
                    backend=backend, collect_stats=collect_stats)
 
     @classmethod
-    def knn(cls, points, k: int) -> "QueryBatch":
+    def knn(cls, points, k: int,
+            backend: Optional[str] = None) -> "QueryBatch":
         p = np.atleast_2d(np.asarray(points, np.float64))
         if p.ndim != 2 or p.shape[1] != 2:
             raise ValueError(f"points must be (Q, 2); got {p.shape}")
-        return cls(kind="knn", points=p, k=int(k))
+        return cls(kind="knn", points=p, k=int(k), backend=backend)
 
     def __len__(self) -> int:
         arr = self.windows if self.kind == "window" else self.points
@@ -364,7 +381,8 @@ class SpatialIndex:
                     "impl": ss.impl, "calls": 0, "skipped": 0,
                     "wall_ms": 0.0, "queries": 0, "survivors": 0,
                     "escalations": 0, "dispatches": 0, "delta_added": 0,
-                    "delta_tombstoned": 0})
+                    "delta_tombstoned": 0, "rungs": 0, "seed_hits": 0,
+                    "merge_bytes": 0, "rung_hist": []})
                 ent["calls"] += 1
                 ent["wall_ms"] += ss.wall_ms
                 # the executing impl may differ per call (staged vs fused
@@ -379,6 +397,19 @@ class SpatialIndex:
                 ent["dispatches"] += ss.dispatches
                 ent["delta_added"] += ss.delta_added
                 ent["delta_tombstoned"] += ss.delta_tombstoned
+                # knn-rank seeding/merge telemetry (zero for window stages):
+                # rung_hist sums element-wise — entry i is the points that
+                # settled after i+1 probes, so hist[0]/queries is the seed
+                # hit-rate across every call
+                ent["rungs"] += ss.rungs
+                ent["seed_hits"] += ss.seed_hits
+                ent["merge_bytes"] += ss.merge_bytes
+                hist = ent["rung_hist"]
+                for i, v in enumerate(ss.rung_hist):
+                    if i < len(hist):
+                        hist[i] += v
+                    else:
+                        hist.append(v)
 
     # ------------------------------------------------------------ maintenance
     def insert(self, verts: np.ndarray, nverts: int, kind: int = 0) -> int:
@@ -946,6 +977,23 @@ class SpatialIndex:
             self._shard_steps[key] = fn
         return fn
 
+    def _sharded_knn_step(self, relation: str, k: int, cap: int, budget: int,
+                          compaction: str, max_width: int):
+        """Jit cache for the sharded knn probe+rank+k-merge step, keyed like
+        ``_sharded_step`` plus k; pow2-snapped radii keep the relation-string
+        key space (and thus compilations) bounded."""
+        key = ("knn", relation, k, cap, budget, compaction, max_width)
+        fn = self._shard_steps.get(key)
+        if fn is None:
+            from .distributed import build_glin_knn_step
+
+            step, in_sh, out_sh = build_glin_knn_step(
+                self.config.mesh, relation, k, cap=cap, exact_budget=budget,
+                compaction=compaction, max_width=max_width)
+            fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            self._shard_steps[key] = fn
+        return fn
+
     def _check_augmentable(self, relation: str, base) -> None:
         """Fail loudly when a relation needs the piecewise augmentation and
         the index was built without it — the device ``_augment()`` would
@@ -962,14 +1010,56 @@ class SpatialIndex:
         cfg = self.config
         if batch.kind == "knn":
             q = len(batch)
-            if q >= cfg.knn_device_min_batch and self.glin.pw is not None:
-                return QueryPlan(
-                    "device", "knn", None, None, False,
-                    f"knn as batched dwithin probes at doubling radii "
-                    f"({q} points >= knn_device_min_batch="
-                    f"{cfg.knn_device_min_batch})")
-            return QueryPlan("host", "knn", None, None, False,
-                             "knn executes on the host index")
+            seed = cfg.knn_seed or "cdf"
+            delta = self.delta_size()
+            stale = self.snapshot_is_stale()
+
+            def knn_plan(backend, reason, rebuild=False):
+                return QueryPlan(backend, "knn", None, None, rebuild,
+                                 reason, delta)
+
+            if batch.backend == "host":
+                return knn_plan("host", "forced by caller")
+            if batch.backend == "sharded":
+                if not self._sharded_available():
+                    raise ValueError("backend='sharded' requires "
+                                     "EngineConfig.mesh")
+                return knn_plan("sharded", "forced by caller", rebuild=stale)
+            if batch.backend in ("device", "device+delta"):
+                return knn_plan(batch.backend, "forced by caller")
+            if batch.backend is not None:
+                raise ValueError(f"unknown backend {batch.backend!r}")
+            if q < cfg.knn_device_min_batch or self.glin.pw is None:
+                why = (f"batch of {q} < knn_device_min_batch="
+                       f"{cfg.knn_device_min_batch}"
+                       if q < cfg.knn_device_min_batch
+                       else "no piecewise function published")
+                return knn_plan("host",
+                                f"knn executes on the host index ({why})")
+            shard_ok = (self._sharded_available()
+                        and self.glin.num_records >= cfg.shard_min_records)
+            if shard_ok:
+                nsh = self._shard_count()
+                return knn_plan(
+                    "sharded",
+                    f"device-complete knn over {nsh} shards: {seed}-seeded "
+                    f"radii, shard-local top-{batch.k}, one-collective "
+                    f"k-merge ({q} points)", rebuild=stale)
+            patchable = (self._snapshot is not None
+                         and delta <= cfg.delta_patch_max
+                         and delta < cfg.refresh_threshold)
+            if stale and patchable:
+                return knn_plan(
+                    "device+delta",
+                    f"device-complete knn with {seed}-seeded radii; "
+                    f"snapshot stale, delta of {delta} ranked in-line "
+                    f"(tombstones masked, added set distance-merged before "
+                    f"the device top-{batch.k})")
+            return knn_plan(
+                "device",
+                f"device-complete knn: {seed}-seeded dwithin ladder + "
+                f"device top-{batch.k} ({q} points >= knn_device_min_batch="
+                f"{cfg.knn_device_min_batch})")
         rel = get_relation(batch.relation)
         base = get_relation(rel.base_name())
         self._check_augmentable(batch.relation, base)
@@ -1084,8 +1174,9 @@ class SpatialIndex:
         ``device``/``device+delta`` backends is exact at the epoch frozen in
         its prologue (``result.epoch``) and runs its device compute without
         blocking writers; host/sharded batches serialize with writers and
-        are exact at the epoch they hold the lock. knn under concurrent
-        writes serves each radius rung at the epoch it froze.
+        are exact at the epoch they hold the lock. A device knn batch
+        freezes its snapshot + delta ONCE up front — every radius rung of
+        every point serves that same frozen epoch.
         """
         if not isinstance(batch, QueryBatch):
             batch = QueryBatch.window(batch, relation or "intersects", **kw)

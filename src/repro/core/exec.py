@@ -64,11 +64,12 @@ import dataclasses
 import time
 from typing import Any, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import geometry as geom
-from .device import batch_check_added
+from .device import (batch_check_added, batch_knn_rank,
+                     delta_table_from_host, knn_seed_radii)
 from .index import QueryStats, initial_knn_radius
 from .index import knn as _host_knn
 from .relations import get_relation
@@ -118,10 +119,17 @@ class StageStats:
     delta_tombstoned: int = 0
     skipped: bool = False            # compiled in, but a no-op this run
     note: str = ""
+    # knn-rank telemetry (zero/empty on every other stage)
+    rungs: int = 0                   # deepest per-point radius-ladder depth
+    rung_hist: Tuple[int, ...] = ()  # points settled per rung; [0] = seeded
+    seed_hits: int = 0               # points settled at their seeded radius
+    seed_radius: float = 0.0         # median pow2-snapped seed radius
+    merge_bytes: int = 0             # cross-shard k-merge collective bytes
 
     def asdict(self) -> dict:
         d = dataclasses.asdict(self)
         d["covers"] = list(self.covers)
+        d["rung_hist"] = list(self.rung_hist)
         return d
 
 
@@ -165,10 +173,20 @@ class OverflowLadder:
     max-merged back into the facade by the refine stage so the ladder is
     walked once per workload, not once per call."""
 
-    def __init__(self, config, cap: int):
+    def __init__(self, config, cap: int, max_budget: Optional[int] = None):
+        from repro.kernels.refine import MAX_COMPACT_BUDGET
+
         self.config = config
         self.cap = int(cap)
         self.budget = int(config.exact_budget)
+        # budget-growth ceiling before the ladder falls back to the dense
+        # single-stage path. Window refines keep the Pallas VMEM bound (a
+        # dense retry only re-checks cheap predicates); knn raises it to
+        # max_cap because the rank's exact-distance work scales with the
+        # hit-matrix WIDTH — scan compaction at a large budget is far
+        # cheaper than ranking a dense (Q, cap) matrix every rung.
+        self.max_budget = (MAX_COMPACT_BUDGET if max_budget is None
+                           else int(max_budget))
         self.escalations = 0
 
     @property
@@ -193,12 +211,12 @@ class OverflowLadder:
         survivor count, so the budget grows geometrically straight past it
         (re-running compaction) and only falls back to the single-stage
         dense path (budget 0) once the needed budget exceeds
-        ``MAX_COMPACT_BUDGET`` or the cap."""
-        from repro.kernels.refine import MAX_COMPACT_BUDGET
-
+        ``max_budget`` (``MAX_COMPACT_BUDGET`` unless the caller raised it;
+        ``engine._compaction`` already routes budgets past the Pallas VMEM
+        bound to the jnp scan reference) or the cap."""
         target = max(use_budget * 2,
                      1 << max(survivors - 1, 0).bit_length())
-        self.budget = (0 if target > MAX_COMPACT_BUDGET or target >= self.cap
+        self.budget = (0 if target > self.max_budget or target >= self.cap
                        else target)
 
     def on_device_overflow(self, counts: np.ndarray, use_budget: int,
@@ -607,89 +625,429 @@ class KnnHostStage(Stage):
         st.survivors = _total(ids)
 
 
+def _pow2_radii(r: np.ndarray) -> np.ndarray:
+    """Per-point power-of-two radius snap: each (bucket, radius) pair
+    compiles once, not once per distinct estimate."""
+    return np.power(2.0, np.ceil(np.log2(np.maximum(r, 1e-9))))
+
+
+def _seed_radii(snap, wins, q, k, seed_mode, r_global, st,
+                pow2: bool = True) -> np.ndarray:
+    """Initial radii for ``q`` degenerate windows. CDF seeds route through
+    the published model (``device.knn_seed_radii``); a seed that comes back
+    non-finite or non-positive (a point routed to an empty leaf, whose
+    aggregate-MBR sentinel has no area) falls back to the global density
+    radius — the seed is a performance prior, never allowed to poison the
+    probe relation. ``pow2`` snaps UP to powers of two — required where the
+    radius is a traced relation constant (the sharded ``dwithin:<r>``
+    classes); the device stage passes ``pow2=False`` because its radii ride
+    in the window coords and an up-snap only doubles the probe area."""
+    if seed_mode == "cdf":
+        wq = wins.astype(np.float32)
+        qb = 1 << max(q - 1, 0).bit_length()
+        if qb > q:
+            wq = np.concatenate([wq, np.repeat(wq[-1:], qb - q, 0)])
+        seeds = np.asarray(knn_seed_radii(
+            snap, jnp.asarray(wq), jnp.float32(k)))[:q].astype(np.float64)
+        st.dispatches += 1
+        bad = ~np.isfinite(seeds) | (seeds <= 0.0)
+        if bad.any():
+            seeds[bad] = r_global
+    else:
+        seeds = np.full(q, r_global)
+    return _pow2_radii(seeds) if pow2 else seeds
+
+
+def _knn_backstop(idx, cfg) -> tuple:
+    """Resolve the knn config knobs under the caller's lock: (seed mode,
+    top-k impl). ``knn_seed=None`` -> the CDF density seed (the planner only
+    routes knn to a device backend when the learned model is published);
+    ``knn_topk=None`` -> the Pallas partial-selection kernel on TPU, the
+    two-key ``lax.sort`` reference elsewhere."""
+    seed = cfg.knn_seed or "cdf"
+    if seed not in ("cdf", "global"):
+        raise ValueError(f"unknown knn_seed {cfg.knn_seed!r} "
+                         "(use 'cdf' or 'global')")
+    impl = cfg.knn_topk or (
+        "pallas" if jax.default_backend() == "tpu" else "sort")
+    if impl not in ("sort", "pallas"):
+        raise ValueError(f"unknown knn_topk {cfg.knn_topk!r} "
+                         "(use 'sort' or 'pallas')")
+    return seed, impl
+
+
 class KnnDeviceStage(Stage):
-    """knn through ``dwithin`` (cf. LISA): every point becomes a degenerate
-    window probed with ``dwithin:<r>`` at doubling radii — ONE batched
-    facade query per radius rung, so the planner takes the device path
-    instead of Q sequential host walks. A point is done once it has >= k
-    candidates whose k-th exact distance fits inside r (the dwithin
-    candidate set is exactly {distance <= r}, so no closer geometry can be
-    missing). Radii are snapped to powers of two: each rung compiles once
-    and is shared by every knn call. ``escalations`` counts the extra rungs
-    past the first."""
+    """Device-complete knn (cf. LISA): each point probes at its OWN seeded
+    radius and the survivors are ranked ON DEVICE by exact squared distance
+    (:func:`~repro.core.device.batch_knn_rank`) — only the final ``(Q, k)``
+    ids + distances and the within-radius counts that drive the ladder ever
+    cross back to the host. Candidate sets never do.
+
+    Each rung probes EVERY still-undone point in ONE dispatch: the probe
+    window is the per-point L-inf inflation of the query point by its own
+    radius (``relations._pad_window``'s dwithin geometry, applied per row),
+    run through the plain ``intersects`` pipeline — a square superset of
+    the dwithin disc whose corner candidates the exact distance test in the
+    rank discards, so settlement stays exact while rung cost never
+    fragments across radius classes (and every rung reuses the one
+    ``intersects`` compile instead of one ``dwithin:<r>`` compile per
+    class). A point is DONE once its within-radius candidate count reaches
+    k (the within set is exactly {distance <= r} — no closer geometry can
+    be missing) or covers every live record (k > live).
+
+    Radius selection: the published learned index doubles as a density
+    estimate (``knn_seed_radii``), seeding each point near its expected
+    k-th-neighbour distance (pow2-snapped). Between rungs an undone point
+    grows by the 2D density scaling ``d_within * sqrt(k / within)`` of the
+    exact distances it already holds, clamped to [2r, 4r] — at least the
+    doubling backstop (a bad estimate costs rungs, never hits), at most one
+    quadrupling, which is also what a still-empty point racing across empty
+    space takes. Since the radius rides in the window COORDS (not a traced
+    relation constant), per-point growth costs no extra compiles. The
+    overflow ladder runs with ``max_budget=max_cap``: survivor compaction
+    keeps paying for itself in rank width long past the Pallas VMEM bound
+    (the scan reference has none), so a dense-width rank is the last
+    resort, not the second rung. On ``device+delta`` the frozen tombstones
+    are masked out of the ranking and the unpublished added set is
+    distance-merged before the top-k — inserted-but-unpublished records are
+    rankable with no republish. ``rung_hist`` / ``seed_hits`` /
+    ``seed_radius`` report how well the seeding worked; ``escalations``
+    counts overflow-ladder retries (NOT rungs — those are ``rungs``)."""
 
     name = "knn-rank"
     covers = ("probe", "compact", "refine", "knn-rank")
     impl = "device"
+    dispatches = 4
+
+    def run(self, ctx: ExecContext, st: StageStats) -> None:
+        eng = _engine()
+        idx, batch = ctx.index, ctx.batch
+        cfg = idx.config
+        pts = np.asarray(batch.points, np.float64)
+        q, k = len(batch), int(batch.k)
+        wins = np.concatenate([pts, pts], axis=1)    # degenerate windows
+        patch = ctx.plan.backend == "device+delta"
+        with idx._lock:
+            # same freeze contract as DeviceRefineStage: snapshot + payload
+            # + delta copies captured under the lock, device compute outside
+            # it — every rung serves the SAME frozen epoch
+            snap = idx._published_snapshot() if patch else idx.snapshot()
+            payload = idx._device_payload(idx._snapshot_recs)
+            snap, payload = idx._replica_view(ctx.replica, snap, payload)
+            ctx.frozen_delta = idx._freeze_delta() if patch else None
+            ctx.epoch = idx._epoch
+            ladder = OverflowLadder(cfg, idx._cap, max_budget=cfg.max_cap)
+            n_live = idx.glin.num_records
+            r_global = initial_knn_radius(idx.glin, k)
+            seed_mode, impl = _knn_backstop(idx, cfg)
+            # the rank needs the added set as a device DeltaTable regardless
+            # of the host/device patching threshold (engine caches it per
+            # mutation epoch)
+            dtab = (idx._delta_table() if patch and idx._added else None)
+        ctx.snap = snap
+        pods, mb = payload
+        ctx.ids = [np.empty(0, np.int64) for _ in range(q)]
+        ctx.distances = [np.empty(0, np.float64) for _ in range(q)]
+        if k <= 0 or n_live == 0 or q == 0:
+            st.survivors = 0
+            return
+        tomb = None
+        if ctx.frozen_delta is not None:
+            tombs, added = ctx.frozen_delta[0], ctx.frozen_delta[1]
+            st.delta_added = int(added.shape[0])
+            st.delta_tombstoned = 0 if tombs is None else int(tombs.shape[0])
+            if tombs is not None:
+                tomb = jnp.asarray(tombs.astype(np.int32))
+        radius = _seed_radii(snap, wins, q, k, seed_mode, r_global, st,
+                             pow2=False)
+        st.seed_radius = float(np.median(radius))
+        st.note = f"seed={seed_mode} topk={impl}"
+        # tier-1 budget: the CONFIGURED exact budget, pinned — the rank
+        # stays narrow for the common case and only fat rows escalate
+        # through `ladder` below. The tier-1 CAP tracks the ladder
+        # (z-interval runs are a property of the data, every row pays them)
+        b0 = int(cfg.exact_budget)
+        done = np.zeros(q, bool)
+        probes = np.zeros(q, np.int32)
+        out_ids: List[Optional[np.ndarray]] = list(ctx.ids)
+        out_d: List[Optional[np.ndarray]] = list(ctx.distances)
+        for _ in range(64):
+            todo = np.nonzero(~done)[0]
+            if todo.size == 0:
+                break
+            ctr = wins[todo].astype(np.float32)
+            rr = radius[todo].astype(np.float32)
+            # per-point inflated square probe (the dwithin probe_pad
+            # geometry, applied per row): ONE intersects dispatch covers
+            # every undone point at its own radius — the exact d2 <= r^2
+            # test in the rank discards the square's corner candidates
+            sq = np.stack([ctr[:, 0] - rr, ctr[:, 1] - rr,
+                           ctr[:, 2] + rr, ctr[:, 3] + rr], axis=1)
+            # pow2 query bucket (repeating the last row): each bucket
+            # compiles once and shares the intersects pipeline's cache
+            bucket = 1 << max(len(todo) - 1, 0).bit_length()
+            if bucket > len(todo):
+                padq = bucket - len(todo)
+                sq = np.concatenate([sq, np.repeat(sq[-1:], padq, 0)])
+                ctr = np.concatenate([ctr, np.repeat(ctr[-1:], padq, 0)])
+                rr = np.concatenate([rr, np.repeat(rr[-1:], padq, 0)])
+            probes[todo] += 1
+            # tier 1: ONE fixed-budget dispatch for every undone point.
+            # Typical rows fit — a fat row (a square that swallowed a dense
+            # core) signals a negative count and is re-dispatched below in
+            # its own small batch, so one straggler never drags the whole
+            # batch onto a wide budget.
+            c1 = ladder.cap
+            ub = b0 if 0 < b0 < c1 else 0
+            hits, ch = eng.batch_query(
+                snap, jnp.asarray(sq), pods, mb, relation="intersects",
+                cap=c1, exact_budget=ub,
+                compaction=idx._compaction("intersects", ub or None))
+            st.dispatches += 3 if ub else 2
+            ch = np.asarray(ch)[: len(todo)]
+            good = ch >= 0
+            idk, dk, within = batch_knn_rank(
+                jnp.asarray(ctr), pods, hits, jnp.asarray(rr), k, impl,
+                tombstones=tomb, delta=dtab)
+            st.dispatches += 1
+            idk = np.array(idk[: len(todo)])     # writable: fat rows splice
+            dk = np.array(dk[: len(todo)])
+            within = np.array(within[: len(todo)])
+            fat = np.nonzero(~good)[0]
+            if fat.size:
+                # tier 2: only the overflowed rows walk the escalating
+                # ladder (cap/budget grow to fit THEM, nobody else pays).
+                # The negative-count encoding already carries each fat
+                # row's TRUE survivor count, so the budget is right-sized
+                # for THIS rung's fat set up front — never the high-water
+                # mark of an earlier, fatter rung
+                need = int((-ch[fat] - 1).max())
+                t = 1 << max(need - 1, b0 - 1, 1).bit_length()
+                ladder.budget = (0 if t > ladder.max_budget
+                                 or t >= ladder.cap else t)
+                fb = 1 << max(fat.size - 1, 0).bit_length()
+                fi = (np.concatenate([fat, np.repeat(fat[-1:],
+                                                     fb - fat.size)])
+                      if fb > fat.size else fat)
+                try:
+                    fhits = _knn_refine(idx, eng, snap, pods, mb,
+                                        jnp.asarray(sq[fi]), "intersects",
+                                        ladder, st)
+                except OverflowError:
+                    # a straggler's radius outgrew max_cap: the host loop
+                    # has no cap — finish the stragglers there instead of
+                    # failing the whole batch
+                    st.note = ("straggler radius outgrew max_cap: "
+                               "host fallback")
+                    with idx._lock:
+                        for i in todo[fat]:
+                            hi, hd = _host_knn(idx.glin, pts[int(i)], k)
+                            out_ids[int(i)] = np.asarray(hi, np.int64)
+                            out_d[int(i)] = np.asarray(hd)
+                    done[todo[fat]] = True
+                else:
+                    fidk, fdk, fwit = batch_knn_rank(
+                        jnp.asarray(ctr[fi]), pods, fhits,
+                        jnp.asarray(rr[fi]), k, impl,
+                        tombstones=tomb, delta=dtab)
+                    st.dispatches += 1
+                    idk[fat] = np.asarray(fidk)[: fat.size]
+                    dk[fat] = np.asarray(fdk)[: fat.size]
+                    within[fat] = np.asarray(fwit)[: fat.size]
+                    good[fat] = True
+            settle = good & ((within >= k) | (within >= n_live))
+            for j in np.nonzero(settle)[0]:
+                i = int(todo[j])
+                keep = idk[j] >= 0
+                out_ids[i] = idk[j][keep].astype(np.int64)
+                out_d[i] = dk[j][keep].astype(np.float64)
+            done[todo[settle]] = True
+            und = np.nonzero(~settle)[0]
+            if und.size:
+                # count-informed radius growth: an undone row already has
+                # the exact distances of its `within` (< k) nearest, so the
+                # 2D density scaling d_within * sqrt(k / within) estimates
+                # the k-th-neighbour radius directly. Clamped to [2r, 4r]:
+                # at least the doubling backstop, at most one quadrupling
+                # (which is also what an empty row — a point still racing
+                # across empty space toward the data — takes).
+                ru = radius[todo[und]]
+                cnt = within[und].astype(np.float64)
+                dlast = dk[und, np.maximum(within[und] - 1, 0)]
+                est = np.where(
+                    cnt > 0,
+                    dlast.astype(np.float64)
+                    * np.sqrt(k / np.maximum(cnt, 1.0)),
+                    np.inf)
+                radius[todo[und]] = np.maximum(
+                    2.0 * ru, np.minimum(est, 4.0 * ru))
+        else:
+            raise RuntimeError("knn did not converge")
+        ctx.ids, ctx.distances = out_ids, out_d
+        st.survivors = _total(out_ids)
+        st.escalations = ladder.escalations
+        st.cap, st.budget = ladder.cap, ladder.use_budget
+        maxp = int(probes.max()) if q else 0
+        st.rungs = maxp
+        st.rung_hist = tuple(int((probes == i).sum())
+                             for i in range(1, maxp + 1))
+        st.seed_hits = int((probes == 1).sum())
+
+
+def _knn_refine(idx, eng, snap, pods, mb, wj, rel, ladder, st):
+    """One knn rung through the staged device refine — per-point inflated
+    square windows over the plain ``intersects`` pipeline — under the
+    shared overflow ladder (DeviceRefineStage's retry contract).
+    The hit matrix STAYS ON DEVICE — the caller hands it straight to
+    ``batch_knn_rank``; only the overflow-signal counts cross to the host."""
+    while True:
+        ub = ladder.use_budget
+        hits, counts = eng.batch_query(
+            snap, wj, pods, mb, relation=rel,
+            cap=ladder.cap, exact_budget=ub,
+            compaction=idx._compaction(rel, ub or None))
+        st.dispatches += 3 if ub else 2
+        ch = np.asarray(counts)
+        if (ch >= 0).all():
+            with idx._lock:
+                idx._cap = max(idx._cap, ladder.cap)
+            return hits
+        st.dispatches += 1                    # disambiguating bounds probe
+        ladder.on_device_overflow(
+            ch, ub, lambda: eng.batch_query_bounds(snap, wj, relation=rel),
+            wj.shape[0])
+
+
+class KnnShardedStage(Stage):
+    """Device-complete knn over the mesh: every record shard ranks its own
+    dwithin survivors to a local ``(Q, k)`` block INSIDE the shard_map
+    (exact squared distances gathered from the shard-local vertex pool at
+    the widest surviving width bucket), then ONE collective all-gathers the
+    ``(shards, Q, k)`` blocks for a replicated two-key k-merge — the host
+    sees only the final ``(Q, k)`` ids + distances plus the per-shard
+    within-radius counts driving the ladder. ``merge_bytes`` accounts the
+    collective's payload (the ``roofline_terms`` collective term of
+    ``kernels.refine.sharded_knn_cost``).
+
+    Exactness contract: the sharded k-merge ranks SNAPSHOT records only, so
+    a stale snapshot is always republished before probing — the fresh
+    snapshot has no delta to merge, and results are exact at the published
+    epoch. Same per-point seeding / radius-class rung scheduling as
+    :class:`KnnDeviceStage`."""
+
+    name = "knn-rank"
+    covers = ("probe", "compact", "refine", "knn-rank")
+    impl = "sharded"
+    dispatches = 4
 
     def run(self, ctx: ExecContext, st: StageStats) -> None:
         idx, batch = ctx.index, ctx.batch
-        pts = batch.points
-        q, k = len(batch), batch.k
-        wins = np.concatenate([pts, pts], axis=1)    # degenerate windows
-        with idx._lock:    # the radius estimate reads the mutable tree
-            r = initial_knn_radius(idx.glin, k)
-        r = float(2.0 ** np.ceil(np.log2(max(r, 1e-9))))
-        done = np.zeros(q, bool)
-        out_ids: List[Optional[np.ndarray]] = [None] * q
-        out_d: List[Optional[np.ndarray]] = [None] * q
-        for rung in range(64):
-            # only the still-undone points ride the next rung: finished
-            # points must not re-probe at (exponentially) wider radii, which
-            # would also inflate the shared adaptive candidate cap. The
-            # shrinking batch is padded to a power-of-two bucket (repeating
-            # the last window) so each (bucket, radius) pair compiles once,
-            # not each distinct todo-count
-            todo = np.nonzero(~done)[0]
-            sub = wins[todo]
-            bucket = 1 << max(len(sub) - 1, 0).bit_length()
-            if bucket > len(sub):
-                sub = np.concatenate(
-                    [sub, np.repeat(sub[-1:], bucket - len(sub), axis=0)])
-            eng = _engine()
-            try:
-                res = idx.query(
-                    eng.QueryBatch.window(sub, f"dwithin:{r:.17g}"))
-            except OverflowError:
-                # a straggler's radius outgrew max_cap: the host loop has
-                # no cap — finish the stragglers there instead of failing
-                # the whole batch
-                st.note = "straggler radius outgrew max_cap: host fallback"
-                with idx._lock:
-                    for i in todo:
-                        hi, hd = _host_knn(idx.glin, pts[int(i)], k)
-                        out_ids[int(i)] = np.asarray(hi, np.int64)
-                        out_d[int(i)] = np.asarray(hd)
-                    ctx.epoch = idx._epoch
-                ctx.ids, ctx.distances = out_ids, out_d
-                st.escalations = rung
-                st.survivors = _total(out_ids)
+        cfg = idx.config
+        pts = np.asarray(batch.points, np.float64)
+        q, k = len(batch), int(batch.k)
+        wins = np.concatenate([pts, pts], axis=1)
+        with idx._lock:     # the mesh owns every device: run under the lock
+            if idx.snapshot_is_stale():
+                idx.snapshot()         # k-merge exactness: no delta on top
+            else:
+                idx._published_snapshot()
+            snap_repl, table, shards, maxw = idx._sharded_placement()
+            snap = idx._snapshot
+            ctx.snap = snap
+            ctx.epoch = idx._epoch
+            n_live = idx.glin.num_records
+            r_global = initial_knn_radius(idx.glin, k)
+            seed_mode, _ = _knn_backstop(idx, cfg)
+            ladder = OverflowLadder(cfg, idx._cap, max_budget=cfg.max_cap)
+            m = cfg.mesh.shape["model"]
+            ctx.ids = [np.empty(0, np.int64) for _ in range(q)]
+            ctx.distances = [np.empty(0, np.float64) for _ in range(q)]
+            if k <= 0 or n_live == 0 or q == 0:
+                st.survivors = 0
                 return
-            # the store is append-only (arrays are replaced, never
-            # mutated): a fresh reference covers every candidate id the
-            # rung returned
-            gs = idx.glin.gs
-            for ti, i in enumerate(todo):
-                cand = res[ti]
-                if cand.shape[0] < k:
-                    continue
-                d = np.sqrt(geom.rect_geom_sqdist(
-                    wins[i], gs.padded(cand), gs.nverts[cand],
-                    gs.kinds[cand]))
-                order = np.lexsort((cand, d))
-                if d[order[k - 1]] <= r:
-                    sel = order[:k]
-                    out_ids[int(i)] = cand[sel].astype(np.int64)
-                    out_d[int(i)] = d[sel]
-                    done[i] = True
-            if done.all():
-                ctx.ids, ctx.distances = out_ids, out_d
-                ctx.epoch = idx._epoch
-                st.escalations = rung
-                st.survivors = _total(out_ids)
-                return
-            r *= 2.0
-        raise RuntimeError("knn did not converge")
+            radius = _seed_radii(snap, wins, q, k, seed_mode, r_global, st)
+            st.seed_radius = float(np.median(radius))
+            st.note = f"seed={seed_mode}"
+            done = np.zeros(q, bool)
+            probes = np.zeros(q, np.int32)
+            out_ids: List[Optional[np.ndarray]] = list(ctx.ids)
+            out_d: List[Optional[np.ndarray]] = list(ctx.distances)
+            for _ in range(64):
+                todo = np.nonzero(~done)[0]
+                if todo.size == 0:
+                    break
+                for r in [float(v) for v in np.unique(radius[todo])]:
+                    sel = todo[radius[todo] == r]
+                    sub = wins[sel].astype(np.float32)
+                    # pow2 bucket rounded up to a model-axis multiple
+                    # (shard_map divides Q evenly)
+                    b = 1 << max(len(sel) - 1, 0).bit_length()
+                    b += (-b) % m
+                    if b > len(sel):
+                        sub = np.concatenate(
+                            [sub, np.repeat(sub[-1:], b - len(sel), 0)])
+                    wj = jnp.asarray(sub)
+                    relname = f"dwithin:{r:.17g}"
+                    probes[sel] += 1
+                    try:
+                        idk, dk, within = self._rank(idx, snap_repl, table,
+                                                     wj, relname, k, maxw,
+                                                     ladder, st, b, shards)
+                    except OverflowError:
+                        st.note = ("straggler radius outgrew max_cap: "
+                                   "host fallback")
+                        for i in sel:
+                            hi, hd = _host_knn(idx.glin, pts[int(i)], k)
+                            out_ids[int(i)] = np.asarray(hi, np.int64)
+                            out_d[int(i)] = np.asarray(hd)
+                        done[sel] = True
+                        continue
+                    idk = idk[: len(sel)]
+                    dk = dk[: len(sel)]
+                    within = within[: len(sel)]
+                    settle = (within >= k) | (within >= n_live)
+                    for j in np.nonzero(settle)[0]:
+                        i = int(sel[j])
+                        keep = idk[j] >= 0
+                        out_ids[i] = idk[j][keep].astype(np.int64)
+                        out_d[i] = dk[j][keep].astype(np.float64)
+                    done[sel[settle]] = True
+                radius[~done] *= 2.0
+            else:
+                raise RuntimeError("knn did not converge")
+        ctx.ids, ctx.distances = out_ids, out_d
+        st.survivors = _total(out_ids)
+        st.escalations = ladder.escalations
+        st.cap, st.budget = ladder.cap, ladder.use_budget
+        maxp = int(probes.max()) if q else 0
+        st.rungs = maxp
+        st.rung_hist = tuple(int((probes == i).sum())
+                             for i in range(1, maxp + 1))
+        st.seed_hits = int((probes == 1).sum())
+
+    @staticmethod
+    def _rank(idx, snap_repl, table, wj, relname, k, maxw, ladder, st,
+              qpad, shards):
+        """One sharded probe+rank+k-merge dispatch under the ladder. Caller
+        holds the facade lock (ShardedRefineStage's contract)."""
+        while True:
+            ub = ladder.use_budget
+            comp = idx._compaction(relname, ub or None)
+            if comp == "sort":   # legacy argsort baseline: 1-device only
+                comp = "scan"
+            step = idx._sharded_knn_step(relname, k, ladder.cap, ub, comp,
+                                         maxw)
+            idk, dk, counts = step(snap_repl, wj, table)
+            st.dispatches += 4 if ub else 3
+            # all-gathered (shards, Q, k) blocks — k f32 distances + k i32
+            # ids per shard — plus the (Q, shards) i32 counts
+            st.merge_bytes += qpad * shards * (k * 8 + 4)
+            counts = np.asarray(counts)
+            if (counts >= 0).all():
+                idx._cap = max(idx._cap, ladder.cap)
+                return (np.asarray(idk), np.asarray(dk),
+                        counts.sum(axis=1))
+            ladder.on_sharded_overflow(counts, ub, comp)
 
 
 # ------------------------------------------------------------- execution plan
@@ -724,8 +1082,12 @@ def compile_plan(plan) -> ExecutionPlan:
     no-op with ``skipped=True`` so the pipeline shape is static per
     backend."""
     if plan.kind == "knn":
-        stage = KnnDeviceStage() if plan.backend == "device" \
-            else KnnHostStage()
+        if plan.backend == "sharded":
+            stage: Stage = KnnShardedStage()
+        elif plan.backend in ("device", "device+delta"):
+            stage = KnnDeviceStage()
+        else:
+            stage = KnnHostStage()
         return ExecutionPlan(plan.backend, (stage,))
     if plan.backend == "host":
         return ExecutionPlan("host", (HostRefineStage(),

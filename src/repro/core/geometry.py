@@ -474,3 +474,25 @@ def rect_dwithin_geoms(rect, verts, nverts, kinds, dist, xp=np):
     between the closed window and the geometry is at most ``dist``."""
     d2 = rect_geom_sqdist(rect, verts, nverts, kinds, xp=xp)
     return d2 <= xp.asarray(float(dist) ** 2, d2.dtype)
+
+
+# ---------------------------------------------------------------------------
+# kNN ordering contract
+# ---------------------------------------------------------------------------
+def rank_knn(ids, dists, k: int):
+    """Canonical kNN ordering: ascending ``(distance, record id)``.
+
+    This is THE tie-break contract shared by every backend. The host ladder
+    ranks with ``np.lexsort((ids, d))``; the device rank sorts the operand
+    pair ``[d, ids]`` with ``jax.lax.sort(num_keys=2)``; the sharded k-merge
+    re-sorts the all-gathered per-shard blocks the same way. All three reduce
+    to this ordering, so co-located records (equal exact distance) resolve to
+    the same ids on every path and oracle parity never flakes on ties.
+
+    Returns ``(ids[:k], dists[:k])`` in that order — shorter than ``k`` when
+    fewer candidates exist (the k > live-records contract).
+    """
+    ids = np.asarray(ids)
+    dists = np.asarray(dists)
+    order = np.lexsort((ids, dists))[: max(int(k), 0)]
+    return ids[order], dists[order]

@@ -343,33 +343,45 @@ def knn(glin: GLIN, point, k: int):
     knn through ``dwithin`` (cf. LISA): the point becomes a degenerate window
     probed with ``dwithin:<r>`` at doubling radii. The candidate set at
     radius r is exactly {geometries with Euclidean distance <= r}, so once k
-    candidates exist and the k-th exact distance fits inside r, no closer
-    geometry can be missing. Candidates are ranked by exact point-to-geometry
-    distance (``geometry.rect_geom_sqdist``; 0 inside a polygon), ties broken
-    by record id. Indexes built without the piecewise function fall back to
-    an Intersects probe over the square window of half-side r — a superset of
-    the dwithin candidates, so the same termination rule holds.
+    candidates lie within r no closer geometry can be missing. Candidates are
+    ranked by exact point-to-geometry distance (``geometry.rect_geom_sqdist``;
+    0 inside a polygon) under the shared ``geometry.rank_knn`` (distance, id)
+    ordering contract. Settled candidates carry across rungs: dwithin radii
+    nest, so each rung's candidate set is a superset of the last and only
+    NEWLY probed records get an exact-distance evaluation (the PR-4 ladder
+    re-ranked the full candidate set every rung). Indexes built without the
+    piecewise function fall back to an Intersects probe over the square
+    window of half-side r — a superset of the dwithin candidates, so the
+    same count-within-r termination rule holds.
 
-    Returns (ids, distances) sorted by (distance, id).
+    Returns (ids, distances) sorted by (distance, id); fewer than k entries
+    when fewer than k records are live (the ladder stops once the candidate
+    set covers every record — it can never grow past that).
     """
     gs = glin.gs
     px, py = float(point[0]), float(point[1])
     rect = np.array([px, py, px, py])
+    k = int(k)
+    if k <= 0 or glin.num_records == 0:
+        return np.empty(0, np.int64), np.empty(0, np.float64)
     r = initial_knn_radius(glin, k)
 
+    ids = np.empty(0, np.int64)          # settled candidates (exact distance
+    dists = np.empty(0, np.float64)      # computed exactly once per record)
     for _ in range(64):
         if glin.pw is not None:
             cand = glin.query(rect, f"dwithin:{r:.17g}")
         else:
             cand = glin.query(np.array([px - r, py - r, px + r, py + r]),
                               "intersects")
-        if cand.shape[0] >= k:
-            d = np.sqrt(geom.rect_geom_sqdist(
-                rect, gs.padded(cand), gs.nverts[cand], gs.kinds[cand]))
-            order = np.lexsort((cand, d))
-            kth = d[order[k - 1]]
-            if kth <= r:
-                sel = order[:k]
-                return cand[sel], d[sel]
+        new = np.setdiff1d(cand, ids, assume_unique=True)
+        if new.shape[0]:
+            nd = np.sqrt(geom.rect_geom_sqdist(
+                rect, gs.padded(new), gs.nverts[new], gs.kinds[new]))
+            ids = np.concatenate([ids, new])
+            dists = np.concatenate([dists, nd])
+        if (int((dists <= r).sum()) >= k
+                or cand.shape[0] >= glin.num_records):
+            return geom.rank_knn(ids, dists, k)
         r *= 2.0
     raise RuntimeError("knn did not converge")

@@ -16,8 +16,9 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention_pallas
 from .morton import LANES, morton_encode_pallas
-from .refine import (refine_compact_pallas, refine_count_pallas,
-                     refine_fused_pallas, refine_mask_pallas)
+from .refine import (knn_topk_pallas, refine_compact_pallas,
+                     refine_count_pallas, refine_fused_pallas,
+                     refine_mask_pallas)
 from .ssd_scan import ssd_scan_pallas
 
 
@@ -93,6 +94,19 @@ def refine_fused(windows, probe_w, qkeys, keys, recs, leaf_i, leaf_f, node_i,
         prefilter=prefilter, predicate=predicate, augment=augment,
         search_steps=search_steps, depth=depth, num_buckets=num_buckets,
         interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("k", "use_pallas"))
+def knn_topk(d: jax.Array, ids: jax.Array, *, k: int,
+             use_pallas: bool = True):
+    """Deterministic top-k by ascending (distance, id): d (Q, B) f32
+    [+inf = dead lane], ids (Q, B) i32 -> ((Q, k) f32, (Q, k) i32).
+    The jnp reference is the two-key ``lax.sort`` truncated to k columns;
+    the kernel is a k-round partial selection sort (wins when k << B)."""
+    if not use_pallas:
+        ds, isrt = jax.lax.sort([d, ids], num_keys=2)
+        return ds[:, :k], isrt[:, :k]
+    return knn_topk_pallas(d, ids, k, interpret=not _on_tpu())
 
 
 # ------------------------------------------------------------- attention ----

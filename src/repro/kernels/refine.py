@@ -564,6 +564,68 @@ def refine_fused_pallas(windows: jax.Array, probe_w: jax.Array,
     return hits[:q, :budget], counts[:q]
 
 
+def _knn_topk_kernel(d_ref, id_ref, outd_ref, outi_ref, *, k):
+    """Deterministic k-round partial selection sort of one (BQ, B) tile.
+
+    Round j extracts the minimum (distance, id) pair — the minimum distance,
+    then the minimum id among its ties, matching the ``geometry.rank_knn``
+    ordering contract — stores it at output column j and masks the selected
+    lane to +inf. O(k·B) work per query row: cheaper than a full O(B log B)
+    sort whenever k << B (the large-budget regime this kernel targets)."""
+    d = d_ref[...]            # (BQ, B) f32 squared distances, +inf padded
+    ids = id_ref[...]         # (BQ, B) i32 record ids, INT32_MAX padded
+    outd_ref[...] = jnp.full_like(outd_ref[...], jnp.inf)
+    outi_ref[...] = jnp.full_like(outi_ref[...], jnp.int32(2**31 - 1))
+
+    def round_(j, dw):
+        m = jnp.min(dw, axis=1, keepdims=True)               # (BQ, 1)
+        tie = dw == m
+        mid = jnp.min(jnp.where(tie, ids, jnp.int32(2**31 - 1)),
+                      axis=1, keepdims=True)
+        pl.store(outd_ref, (slice(None), pl.dslice(j, 1)), m)
+        pl.store(outi_ref, (slice(None), pl.dslice(j, 1)), mid)
+        return jnp.where(tie & (ids == mid), jnp.float32(jnp.inf), dw)
+
+    jax.lax.fori_loop(0, k, round_, d)
+
+
+def knn_topk_pallas(d: jax.Array, ids: jax.Array, k: int,
+                    bq: int = DEFAULT_BQ, interpret: bool = False):
+    """Partial-sort top-k for the kNN ranking stage.
+
+    d (Q, B) f32 squared distances (+inf = dead lane), ids (Q, B) i32 ->
+    ((Q, k) f32 ascending distances, (Q, k) i32 ids), ordered by the shared
+    (distance, id) contract — identical to ``lax.sort([d, ids],
+    num_keys=2)`` truncated to k columns (``core.device.batch_knn_rank``'s
+    reference impl). Pads internally: any Q, B and k work."""
+    q, b = d.shape
+    qp = -(-q // bq) * bq
+    bp = max(128, -(-b // 128) * 128)
+    kp = max(128, -(-k // 128) * 128)   # lane-aligned output block
+    dp = jnp.full((qp, bp), jnp.inf, jnp.float32).at[:q, :b].set(
+        d.astype(jnp.float32))
+    ip = jnp.full((qp, bp), 2**31 - 1, jnp.int32).at[:q, :b].set(ids)
+    outd, outi = pl.pallas_call(
+        partial(_knn_topk_kernel, k=k),
+        grid=(qp // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, bp), lambda i: (i, 0)),
+            pl.BlockSpec((bq, bp), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bq, kp), lambda i: (i, 0)),
+            pl.BlockSpec((bq, kp), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((qp, kp), jnp.float32),
+            jax.ShapeDtypeStruct((qp, kp), jnp.int32),
+        ),
+        cost_estimate=_cost_estimate("knn", qp, bp, k),
+        interpret=interpret,
+    )(dp, ip)
+    return outd[:q, :k], outi[:q, :k]
+
+
 def fused_vmem_bytes(n_slots: int, n_leaves: int, n_nodes: int, n_codes: int,
                      n_pieces: int, n_records: int, pool_rows: int,
                      budget: int, max_width: int, bq: int = DEFAULT_BQ,
@@ -595,10 +657,14 @@ def refine_cost(kind: str, q: int, n: int, budget: int = 0,
                 bn: int = DEFAULT_BN) -> dict:
     """Bytes/flops model of one kernel invocation.
 
-    ``kind``: "mask" | "count" | "compact" | "exact" | "fused" — "exact"
-    models the downstream exact-shape refinement stage over the compacted
-    (Q, budget) survivors, so the roofline report covers the full
-    compact+refine pipeline, not just candidate counting; "fused" models
+    ``kind``: "mask" | "count" | "compact" | "exact" | "fused" | "knn" —
+    "exact" models the downstream exact-shape refinement stage over the
+    compacted (Q, budget) survivors, so the roofline report covers the full
+    compact+refine pipeline, not just candidate counting; "knn" models the
+    device top-k ranking stage (``knn_topk_pallas`` /
+    ``core.device.batch_knn_rank``): exact-distance evaluation over ``n``
+    candidate columns at gather width ``verts`` plus the k-round partial
+    selection, where ``budget`` is k; "fused" models
     the one-dispatch probe+compact+exact kernel: the compact and exact
     terms plus one key-limb stream per query tile for the in-kernel binary
     searches, MINUS the (Q, budget) survivor-slot and (Q, 2) bounds HBM
@@ -638,6 +704,17 @@ def refine_cost(kind: str, q: int, n: int, budget: int = 0,
         flops = q * budget * verts * 40
         return {"flops": float(flops), "bytes_accessed": float(bytes_accessed),
                 "transcendentals": 0}
+    if kind == "knn":
+        # exact-distance gather over n candidate columns (same per-pair cost
+        # as the "exact" predicate) + the k-round partial selection (budget
+        # here is k): each round scans the n-wide tile twice (min + tie mask)
+        k = max(budget, 1)
+        bytes_accessed = (q * n * (verts * 8 + 16)   # pod gather
+                          + q * n * 8                # (d2, ids) tile
+                          + q * k * 8)               # (Q, k) result
+        flops = q * n * verts * 40 + q * k * n * 3.0
+        return {"flops": float(flops), "bytes_accessed": float(bytes_accessed),
+                "transcendentals": float(q * k)}     # sqrt on the k winners
     # streaming kernels: each query row-tile streams the full MBR table(s)
     streams = 2 if kind == "compact" else 1
     bytes_accessed = tiles_q * n * 16 * streams + q * 24
@@ -677,6 +754,31 @@ def sharded_refine_cost(q: int, n: int, budget: int, shards: int,
         "transcendentals": 0,
         # every device receives the other shards' survivor blocks + counts
         "collective_bytes": float(q * shards * (budget + 1) * 4),
+    }
+
+
+def sharded_knn_cost(q: int, n: int, budget: int, k: int, shards: int,
+                     verts: int = 0, bq: int = DEFAULT_BQ,
+                     bn: int = DEFAULT_BN) -> dict:
+    """Per-device cost of the SHARDED device-complete kNN rung
+    (``core.distributed.build_glin_knn_step``): the local compact+refine
+    over the shard's N/shards slice, the local exact-distance top-k over its
+    ``(Q, budget)`` survivors, and the cross-shard k-merge.
+    ``collective_bytes`` models the all-gather of the per-shard ``(Q, k)``
+    (distance, id) blocks plus the (Q,) within-radius counts — the ONLY
+    cross-shard traffic; the host merge it replaces moved the full
+    ``(Q, shards, budget)`` candidate lists through the host."""
+    n_local = -(-n // max(shards, 1))
+    c = refine_cost("compact", q, n_local, budget, bq=bq, bn=bn)
+    r = refine_cost("knn", q, budget, k, verts=verts, bq=bq, bn=bn)
+    # merge: every device re-sorts the gathered (Q, shards*k) block
+    merge_flops = q * shards * k * math.log2(max(shards * k, 2)) * 4.0
+    return {
+        "flops": c["flops"] + r["flops"] + merge_flops,
+        "bytes_accessed": (c["bytes_accessed"] + r["bytes_accessed"]
+                           + q * shards * k * 8.0),
+        "transcendentals": r["transcendentals"],
+        "collective_bytes": float(q * shards * (k * 8 + 4)),
     }
 
 

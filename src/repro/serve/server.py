@@ -133,6 +133,13 @@ class SpatialQueryServer:
     the facade backends; ``cache_hits`` / ``cache_misses`` give the raw
     telemetry.
 
+    **kNN.** ``submit_knn(point, k)`` rides the same machinery: the point is
+    encoded as its degenerate window under the pseudo-relation ``knn:<k>``,
+    so one flush issues ONE device-complete knn batch per distinct k,
+    duplicate points coalesce, and kNN batches become cacheable single-plan
+    flushes — a repeated point is served its ``(ids, distances)`` pair
+    straight from the result cache under the same generation keying.
+
     **Request coalescing.** Within one relation group of a micro-batch,
     duplicate windows (byte-identical) are folded into a single engine row
     before the facade call — under hot-query skew the engine sees the
@@ -189,7 +196,8 @@ class SpatialQueryServer:
         self._tenant_stats: Dict[str, Dict[str, int]] = {}
         self._service_ewma: Optional[float] = None  # s per served batch
         self._query_ewma: Optional[float] = None    # s per served query
-        self._cache: Dict[Tuple[Tuple[int, int], bytes, str], np.ndarray] = {}
+        # window rows cache an ids array; knn rows an (ids, distances) pair
+        self._cache: Dict[Tuple[Tuple[int, int], bytes, str], Any] = {}
         self._cache_gen: Tuple[int, int] = (-1, -1)
         self.cache_hits = 0
         self.cache_misses = 0
@@ -212,7 +220,11 @@ class SpatialQueryServer:
             self._cache.clear()
             self._cache_gen = gen
         hit = self._cache.get((gen, w.tobytes(), relation))
-        return None if hit is None else hit.copy()
+        if hit is None:
+            return None
+        if isinstance(hit, tuple):          # knn: (ids, distances)
+            return tuple(a.copy() for a in hit)
+        return hit.copy()
 
     def _cache_store(self, gen: Tuple[int, int], w: np.ndarray, relation: str,
                      ids: np.ndarray) -> None:
@@ -222,8 +234,12 @@ class SpatialQueryServer:
             self._cache.pop(next(iter(self._cache)))   # FIFO eviction
         # cache a frozen copy, not the array handed to the caller: an
         # in-place mutation by one caller must not poison later hits
-        frozen = ids.copy()
-        frozen.setflags(write=False)
+        def freeze(a):
+            f = a.copy()
+            f.setflags(write=False)
+            return f
+        frozen = (tuple(freeze(a) for a in ids) if isinstance(ids, tuple)
+                  else freeze(ids))          # knn rows are (ids, distances)
         self._cache[(gen, w.tobytes(), relation)] = frozen
 
     # ------------------------------------------------------------- admission
@@ -269,6 +285,22 @@ class SpatialQueryServer:
         ``flush()`` or ``result()``), never a silent drop."""
         get_relation(relation)  # fail fast, not at flush time
         w = np.asarray(window, np.float64).reshape(4)
+        return self._enqueue(w, relation, tenant)
+
+    def submit_knn(self, point: np.ndarray, k: int,
+                   tenant: str = "default") -> int:
+        """Enqueue one kNN point; the ticket resolves to ``(ids,
+        distances)``. The point is encoded as its degenerate window and
+        grouped under the pseudo-relation ``knn:<k>`` — one flush issues ONE
+        device-complete knn batch per distinct k, duplicate points coalesce,
+        repeated points hit the result cache."""
+        if int(k) < 1:
+            raise ValueError(f"knn needs k >= 1, got {k}")
+        p = np.asarray(point, np.float64).reshape(2)
+        w = np.array([p[0], p[1], p[0], p[1]], np.float64)
+        return self._enqueue(w, f"knn:{int(k)}", tenant)
+
+    def _enqueue(self, w: np.ndarray, relation: str, tenant: str) -> int:
         with self._cond:
             ticket = self._next_ticket
             self._next_ticket += 1
@@ -368,12 +400,14 @@ class SpatialQueryServer:
             slot.append(mi)
         ncoal = len(items) - len(rows)
         windows = np.stack(rows)
+        knn_k = int(rel[4:]) if rel.startswith("knn:") else None
+        batch = (QueryBatch.knn(windows[:, :2], knn_k)
+                 if knn_k is not None else QueryBatch.window(windows, rel))
         with self._lock:
             rep = self._pick_replica_locked()
         t0 = time.perf_counter()
         try:
-            res = self.index.query(QueryBatch.window(windows, rel),
-                                   replica=rep)
+            res = self.index.query(batch, replica=rep)
         finally:
             dt = time.perf_counter() - t0
             dtq = dt / max(1, len(items))
@@ -385,9 +419,14 @@ class SpatialQueryServer:
                 self._query_ewma = (dtq if self._query_ewma is None
                                     else a * dtq + (1 - a) * self._query_ewma)
         claimed = [False] * len(rows)
-        per_item: List[np.ndarray] = []
+        per_item: List[Any] = []
         for mi in slot:
-            per_item.append(res[mi].copy() if claimed[mi] else res[mi])
+            if knn_k is not None:           # knn rows: (ids, distances)
+                v = (res.ids[mi], res.distances[mi])
+                per_item.append(tuple(a.copy() for a in v)
+                                if claimed[mi] else v)
+            else:
+                per_item.append(res[mi].copy() if claimed[mi] else res[mi])
             claimed[mi] = True
         return res, per_item, ncoal, rep, dt
 

@@ -135,8 +135,8 @@ def test_sharded_delta_matches_fp32_oracle(relation):
 
 
 def test_sharded_knn_matches_host():
-    """knn over the mesh: every dwithin radius rung is planned as a sharded
-    batch; results must equal the host knn loop exactly."""
+    """knn over the mesh: shard-local top-k + one-collective k-merge; the
+    returned ids must equal the host knn loop exactly (distances to fp32)."""
     from repro.core.engine import QueryBatch
     from repro.core.index import knn as host_knn
 
@@ -144,12 +144,16 @@ def test_sharded_knn_matches_host():
     rng = np.random.default_rng(5)
     pts = _fp32(rng.uniform(0.2, 0.8, (8, 2)))
     res = idx.query(QueryBatch.knn(pts, k=4))
-    assert res.plan.backend == "device" and res.plan.kind == "knn"
+    assert res.plan.backend == "sharded" and res.plan.kind == "knn"
     for i, p in enumerate(pts):
         hi, hd = host_knn(idx.glin, p, 4)
         np.testing.assert_array_equal(res.ids[i], np.asarray(hi, np.int64))
-        np.testing.assert_allclose(res.distances[i], hd, rtol=1e-6)
-    # the rung batches themselves took the sharded backend
+        np.testing.assert_allclose(res.distances[i], hd, rtol=1e-4, atol=1e-7)
+    # the merge collective was accounted and the stage ran sharded
+    rank = res.stages[-1]
+    assert rank.stage == "knn-rank" and rank.impl == "sharded"
+    assert rank.merge_bytes > 0
+    # plain dwithin probes over the same index also take the sharded backend
     probe = idx.plan(_windows(idx, 0.02, 4, seed=1), "dwithin:0.1")
     assert probe.backend == "sharded"
 
